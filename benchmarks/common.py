@@ -1,0 +1,63 @@
+"""Shared benchmark setup.
+
+Benchmarks measure the REAL join algorithms on this host (all variants run
+to completion and are verified against the oracle), with the two processor
+groups mapped onto 8 XLA host devices (2 C + 6 G).  Because this container
+has one physical core, wall-clock gains from group overlap are not
+observable here — the measured numbers validate mechanism + overheads
+(transfers, merges, scheduling), while the APU-calibrated cost model
+carries the paper's headline-ratio validation and the TPU-pod projection
+carries the deployment story.  EXPERIMENTS.md spells out which number is
+which.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                          "bench")
+
+# Paper default is 16M tuples; 1M keeps the full suite tractable on one
+# core (scale with REPRO_BENCH_SCALE=16 for paper-scale runs).
+SCALE = int(os.environ.get("REPRO_BENCH_SCALE", "1"))
+N_TUPLES = 1_000_000 * SCALE
+
+
+def report(name: str, payload: dict):
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    with open(os.path.join(REPORT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def csv_row(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_call(fn, *args, reps: int = 3, warmup: int = 1, **kw) -> float:
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def default_relations(n: int | None = None, *, skew: str = "uniform",
+                      seed: int = 0):
+    from repro.core import skewed_relation, uniform_relation
+    n = n or N_TUPLES
+    if skew == "uniform":
+        r = uniform_relation(n, seed=seed)
+        s = uniform_relation(n, key_range=n, seed=seed + 1)
+    else:
+        pct = {"low": 10, "high": 25}[skew]
+        r = skewed_relation(n, s_percent=pct, seed=seed)
+        s = skewed_relation(n, s_percent=pct, seed=seed + 1)
+    return r, s

@@ -1,0 +1,118 @@
+"""Roofline analysis: 3-term model per (arch x shape x mesh) cell, from the
+dry-run artifacts in reports/dryrun/ (deliverable g).
+
+  compute term    = HLO_FLOPs_per_chip / peak_bf16
+  memory term     = HLO_bytes_per_chip / HBM_bw    (upper bound: counts all
+                    buffer traffic as HBM)
+  collective term = per-chip ICI link bytes (ring-model, see
+                    launch.dryrun.collective_link_bytes) / link_bw
+                    ("pod"-axis DCN traffic priced at DCN bw on 2x16x16)
+
+  MODEL_FLOPS     = 6*N_active*tokens (train) / 2*N_active*tokens (prefill,
+                    decode) — the "useful" fraction of compiled compute.
+
+  fraction_overlap = ideal_model_time / max(terms)   (perfect overlap)
+  fraction_serial  = ideal_model_time / sum(terms)   (no overlap)
+
+The §Perf score quotes fraction_overlap of the dominant-term cell.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import report
+
+HW = {"peak": 197e12, "hbm": 819e9, "ici": 50e9, "dcn": 3.2e9}
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                          "dryrun")
+
+
+def analyze_cell(rep: dict) -> dict:
+    dev = rep["devices"]
+    flops = rep["flops_per_device"]
+    mem_bytes = rep["bytes_accessed_per_device"]
+    link_bytes = rep["collectives"]["per_chip_link_bytes"]
+    compute_s = flops / HW["peak"]
+    memory_s = mem_bytes / HW["hbm"]
+    # 2x16x16: pod-axis traffic crosses DCN; approximate the DCN share by
+    # the fraction of all-reduce bytes with group size == #pods.
+    coll_s = link_bytes / HW["ici"]
+    n_act = rep["active_params"]
+    mult = 6.0 if rep["kind"] == "train" else 2.0
+    model_flops_total = mult * n_act * rep["tokens"]
+    ideal_s = model_flops_total / (dev * HW["peak"])
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant,
+        "ideal_model_s": round(ideal_s, 6),
+        "useful_flops_ratio": round(model_flops_total
+                                    / max(flops * dev, 1e-9), 3),
+        "fraction_overlap": round(ideal_s / max(bound, 1e-12), 4),
+        "fraction_serial": round(ideal_s / max(total, 1e-12), 4),
+    }
+
+
+def _advice(rep: dict, r: dict) -> str:
+    if r["dominant"] == "collective_s":
+        return ("shrink SP/FSDP gathers (overlap with compute; "
+                "bigger per-chip batch)")
+    if r["dominant"] == "memory_s":
+        return "fuse/remat less; Pallas kernels cut re-read traffic"
+    if r["useful_flops_ratio"] < 0.5:
+        return "kill FLOP waste (dispatch einsums / replicated heads)"
+    return "compute-bound: raise MXU utilization (layout, fusion)"
+
+
+def run(write_markdown: bool = True) -> dict:
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        rep = json.load(open(path))
+        key = f"{rep['arch']}__{rep['shape']}__{rep.get('mesh', 'skip')}"
+        if rep["status"] == "skipped":
+            cells[key] = {"status": "skipped", "why": rep["why"],
+                          "arch": rep["arch"], "shape": rep["shape"]}
+            continue
+        r = analyze_cell(rep)
+        r.update(status="ok", arch=rep["arch"], shape=rep["shape"],
+                 mesh=rep["mesh"], advice=_advice(rep, r))
+        cells[key] = r
+        print(f"roofline/{key},{r['ideal_model_s']*1e6:.1f},"
+              f"dom={r['dominant']};frac={r['fraction_overlap']:.3f};"
+              f"useful={r['useful_flops_ratio']:.2f}")
+    report("roofline", cells)
+    if write_markdown:
+        md = _markdown(cells)
+        with open(os.path.join(DRYRUN_DIR, "..", "roofline.md"), "w") as f:
+            f.write(md)
+    return cells
+
+
+def _markdown(cells: dict) -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s |"
+        " dominant | useful FLOPs | frac(overlap) | what moves it |",
+        "|---|---|---|---|---|---|---|---|---|---|"[:-4] + "|",
+    ]
+    for key, r in sorted(cells.items()):
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — |"
+                         f" SKIP | — | — | {r['why'][:60]} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+            f" {r['compute_s']:.4f} | {r['memory_s']:.4f} |"
+            f" {r['collective_s']:.4f} | {r['dominant'][:-2]} |"
+            f" {r['useful_flops_ratio']:.2f} | {r['fraction_overlap']:.3f} |"
+            f" {r['advice']} |")
+    return "\n".join(lines) + "\n"
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+import os
+# Benchmarks need real two-group co-processing: 8 host devices (2 C + 6 G).
+# (Deliberately NOT 512 — that flag belongs only to launch/dryrun.py.)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV; artifacts land in reports/bench/.
+
+  python -m benchmarks.run            # full suite
+  python -m benchmarks.run --only fig4,roofline
+  REPRO_BENCH_SCALE=16 ...            # paper-scale 16M-tuple relations
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def registry():
+    from . import alloc_figs, paper_figs, roofline, scale_figs
+    return {
+        "fig3": paper_figs.fig3_time_breakdown,
+        "fig4": paper_figs.fig4_step_unit_costs,
+        "fig5_6": paper_figs.fig5_6_pl_ratios,
+        "fig7": paper_figs.fig7_dd_estimate_vs_measured,
+        "fig8": paper_figs.fig8_pl_special_case,
+        "fig9": paper_figs.fig9_monte_carlo,
+        "fig10": paper_figs.fig10_shared_vs_separate,
+        "fig11_12": alloc_figs.fig11_12_allocator,
+        "divergence": alloc_figs.workload_divergence,
+        "table3": paper_figs.table3_step_granularity,
+        "fig13_14_uniform": lambda: scale_figs.fig13_14_end_to_end("uniform"),
+        "fig13_14_high_skew": lambda: scale_figs.fig13_14_end_to_end("high"),
+        "fig15": paper_figs.fig15_selectivity,
+        "fig16": paper_figs.fig16_basic_unit,
+        "fig19": scale_figs.fig19_large_data,
+        "fig20": alloc_figs.fig20_locking_microbench,
+        "tpu_projection": scale_figs.tpu_pod_projection,
+        "roofline": roofline.run,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+    reg = registry()
+    names = args.only.split(",") if args.only else list(reg)
+    failures = 0
+    for name in names:
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            reg[name]()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(f"{failures} benchmarks failed")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,161 @@
+"""Sharded checkpointing with atomic commit + elastic restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000123.tmp/            # written first
+        meta.json                     # tree structure, shapes, dtypes
+        shard_<host>.npz              # this host's param/opt shards
+    <dir>/step_000123/                # atomic rename on success
+    <dir>/LATEST                      # pointer file, written last
+
+Fault-tolerance properties:
+  * a crash mid-write leaves only a .tmp dir — restore ignores it;
+  * restore reshards to ANY mesh topology (elastic): arrays are saved
+    unsharded per leaf (host gathers its addressable shards; single-host
+    saves the full array) and re-placed under the target sharding on load;
+  * ``CheckpointManager`` installs a SIGTERM hook so preemptions flush a
+    final checkpoint (the "node failure" path), and prunes old steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import shutil
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree, *,
+                    host_index: int = 0) -> str:
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:08d}"
+    tmp = os.path.join(directory, name + ".tmp")
+    final = os.path.join(directory, name)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {}
+    meta = {"step": step, "leaves": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        meta["leaves"][key] = {"shape": list(arr.shape),
+                               "dtype": str(arr.dtype)}
+        if not (np.issubdtype(arr.dtype, np.floating)
+                or np.issubdtype(arr.dtype, np.integer)
+                or arr.dtype == np.bool_):
+            # ml_dtypes (bfloat16, fp8) don't survive npz roundtrips: store
+            # as f32 (exact for bf16); logical dtype restored from meta.
+            arr = arr.astype(np.float32)
+        arrays[key.replace("/", "__")] = arr
+    np.savez(os.path.join(tmp, f"shard_{host_index}.npz"), **arrays)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(name)
+    os.replace(os.path.join(directory, "LATEST.tmp"),
+               os.path.join(directory, "LATEST"))
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    ptr = os.path.join(directory, "LATEST")
+    if os.path.exists(ptr):
+        with open(ptr) as f:
+            m = re.match(r"step_(\d+)", f.read().strip())
+            if m and os.path.isdir(os.path.join(directory, m.group(0))):
+                return int(m.group(1))
+    # Fallback: scan for committed dirs (LATEST lost).
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))] \
+        if os.path.isdir(directory) else []
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like_tree, *,
+                       shardings_tree=None, host_index: int = 0):
+    """Restore into the structure of ``like_tree``; reshard to
+    ``shardings_tree`` (elastic: target mesh may differ from save mesh)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, f"shard_{host_index}.npz"))
+    flat_like = _flatten_with_paths(like_tree)
+    flat_sh = (_flatten_with_paths(shardings_tree)
+               if shardings_tree is not None else {})
+    out = {}
+    for key, leaf in flat_like.items():
+        arr = data[key.replace("/", "__")]
+        want_dtype = (leaf.dtype if hasattr(leaf, "dtype")
+                      else np.asarray(leaf).dtype)
+        a = jnp.asarray(arr, dtype=want_dtype)
+        if key in flat_sh:
+            a = jax.device_put(a, flat_sh[key])
+        out[key] = a
+    # Rebuild the tree.
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like_tree)
+    treedef = leaves_paths[1]
+    rebuilt = []
+    for pathk, _ in leaves_paths[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pathk)
+        rebuilt.append(out[key])
+    return jax.tree_util.tree_unflatten(treedef, rebuilt)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    save_every: int = 50
+
+    def __post_init__(self):
+        self._preempted = False
+        try:
+            signal.signal(signal.SIGTERM, self._on_sigterm)
+        except ValueError:
+            pass  # not on main thread
+
+    def _on_sigterm(self, *_):
+        self._preempted = True
+
+    @property
+    def preempted(self) -> bool:
+        return self._preempted
+
+    def maybe_save(self, step: int, tree) -> bool:
+        if step % self.save_every == 0 or self._preempted:
+            save_checkpoint(self.directory, step, tree)
+            self._prune()
+            return True
+        return False
+
+    def _prune(self):
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(int(m.group(1)) for d in os.listdir(self.directory)
+                       if (m := re.fullmatch(r"step_(\d+)", d)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like_tree, *, shardings_tree=None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, 0
+        return restore_checkpoint(self.directory, step, like_tree,
+                                  shardings_tree=shardings_tree), step

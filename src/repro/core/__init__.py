@@ -1,0 +1,29 @@
+"""The paper's contribution: fine-grained hash-join co-processing.
+
+Public surface:
+  * relations + generators            — ``repro.core.relation``
+  * dense bucketed hash table         — ``repro.core.hash_table``
+  * fine-grained steps (SHJ/PHJ)      — ``repro.core.{steps,shj,phj}``
+  * radix partitioning / MoE dispatch — ``repro.core.partition``
+  * OL/DD/PL two-group executor       — ``repro.core.coprocess``
+  * unified cost model (Eqs. 1-5)     — ``repro.core.cost_model``
+  * calibration, skew grouping, scan allocator
+"""
+from .relation import (Relation, uniform_relation, unique_relation,
+                       skewed_relation, probe_with_selectivity,
+                       murmur3_fmix32, bucket_of, radix_of)
+from .hash_table import (HashTable, JoinResult, build_hash_table,
+                         probe_hash_table, merge_hash_tables, join_oracle,
+                         default_num_buckets)
+from .shj import shj_join, BUILD_SERIES, PROBE_SERIES
+from .phj import phj_join, phj_coarse_join, partition_series
+from .partition import radix_partition, Partitions
+from .cost_model import (SeriesCostModel, series_model_from_costs, LinkSpec,
+                         DeviceSpec, PCIE_LINK, ICI_LINK, DCN_LINK,
+                         ZEROCOPY_LINK)
+from .coprocess import CoProcessor, Timing, DeviceGroup
+from .allocator import scan_alloc, alloc_stats, basic_alloc_units
+from .divergence import (divergence_order, inverse_permutation,
+                         tile_divergence_waste)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

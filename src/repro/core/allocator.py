@@ -1,0 +1,70 @@
+"""Scan-based dynamic memory allocator (paper §3.3 "Memory allocator").
+
+OpenCL 1.2 has no in-kernel malloc, so the paper pre-allocates an array and
+serves requests by advancing a pointer with atomics; their optimized version
+allocates *blocks* per work group to cut atomic contention.
+
+TPU/Pallas has no global atomics at all, so the allocator is a deterministic
+two-level exclusive scan over the request sizes:
+
+  level 1 (per tile)  — requests within a tile (≙ work group) are packed by
+                         a local exclusive scan;
+  level 2 (global)    — each tile claims one *block-rounded* extent from the
+                         global buffer via a scan over per-tile totals.
+
+The block size plays exactly the paper's role: bigger blocks mean fewer
+global allocation units (their "atomics") at the price of internal
+fragmentation.  ``AllocStats.global_units`` is the contention proxy the
+Fig. 11 reproduction sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class AllocStats:
+    global_units: int        # number of block claims (≙ global atomics)
+    allocated_bytes: int     # buffer actually claimed incl. fragmentation
+    requested_bytes: int
+    fragmentation: float
+
+
+@partial(jax.jit, static_argnames=("tile", "block_items"))
+def scan_alloc(sizes: jax.Array, *, tile: int = 256, block_items: int = 256):
+    """Offsets for per-item allocation requests.
+
+    Returns (offsets, total_items_allocated).  Offsets honor the two-level
+    structure: items within a tile are contiguous; tiles start at
+    block-rounded boundaries.
+    """
+    n = sizes.shape[0]
+    pad = (-n) % tile
+    s = jnp.pad(sizes.astype(jnp.int32), (0, pad)).reshape(-1, tile)
+    local = jnp.cumsum(s, axis=1) - s                     # level-1 scan
+    tile_need = s.sum(axis=1)
+    tile_alloc = ((tile_need + block_items - 1) // block_items) * block_items
+    tile_base = jnp.cumsum(tile_alloc) - tile_alloc       # level-2 scan
+    offs = (tile_base[:, None] + local).reshape(-1)[:n]
+    return offs, tile_alloc.sum()
+
+
+def alloc_stats(sizes, *, tile: int = 256, block_items: int = 256,
+                item_bytes: int = 8) -> AllocStats:
+    sizes = jnp.asarray(sizes)
+    _, total = scan_alloc(sizes, tile=tile, block_items=block_items)
+    n_tiles = -(-sizes.shape[0] // tile)
+    req = int(sizes.sum()) * item_bytes
+    alloc = int(total) * item_bytes
+    return AllocStats(global_units=n_tiles, allocated_bytes=alloc,
+                      requested_bytes=req,
+                      fragmentation=0.0 if alloc == 0 else 1 - req / alloc)
+
+
+def basic_alloc_units(sizes) -> int:
+    """The paper's basic allocator: one global claim per request."""
+    return int((jnp.asarray(sizes) > 0).sum())

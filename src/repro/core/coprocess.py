@@ -1,0 +1,613 @@
+"""Two-group co-processing executor: OL / DD / PL on real devices (§3.2).
+
+The paper's coupled CPU+GPU is re-created as two *device groups* (DESIGN.md
+§2): a small C-group and a large G-group.  On this container the groups are
+host CPU devices (spawned with --xla_force_host_platform_device_count in the
+benchmark harness); on a pod they are chip groups of one mesh.  "Coupled"
+executions exchange intermediates directly (zero-copy / ICI); "discrete"
+executions add the paper's emulated bus delay (§5.1: latency + size/bw).
+
+Schemes:
+  * CPU_ONLY / GPU_ONLY — whole series on one group.
+  * OL  — per-step 0/1 assignment (paper: degenerates to GPU-only when the
+          GPU wins every step — our Fig. 4 analogue decides).
+  * DD  — one ratio for all steps of a phase; separate tables need a merge.
+  * PL  — per-step ratios with boundary exchanges (fine-grained scheme).
+  * BASIC_UNIT — appendix baseline: dynamic chunk scheduling.
+
+Build-table modes (§3.3):
+  * separate — each group builds a partial table on its tuple share; an
+    explicit merge combines them (the paper's Fig. 3 merge overhead).
+  * shared   — one logical table, bucket-range ownership split between the
+    groups; tuples are exchanged to their owning group (the distributed
+    analogue of writing one table in shared memory; no merge step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hash_table as ht
+from .cost_model import LinkSpec, ZEROCOPY_LINK
+from .relation import Relation, bucket_of
+from .shj import concat_results
+
+
+def _round_up(n: int, k: int) -> int:
+    return ((n + k - 1) // k) * k
+
+
+@dataclasses.dataclass
+class Timing:
+    wall_s: float = 0.0
+    phase_s: dict = dataclasses.field(default_factory=dict)
+    transfer_bytes: int = 0
+    transfer_s: float = 0.0
+    merge_s: float = 0.0
+    notes: dict = dataclasses.field(default_factory=dict)
+
+
+class DeviceGroup:
+    """A set of devices acting as one logical processor (C or G)."""
+
+    def __init__(self, name: str, devices):
+        self.name = name
+        self.devices = list(devices)
+        if len(self.devices) > 1:
+            self.mesh = jax.sharding.Mesh(np.array(self.devices), ("i",))
+            self.sharding = jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec("i"))
+        else:
+            self.mesh = None
+            self.sharding = jax.sharding.SingleDeviceSharding(self.devices[0])
+        self.replicated = (jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec())
+            if self.mesh else self.sharding)
+        self._jit_cache: dict = {}
+
+    @property
+    def size(self) -> int:
+        return len(self.devices)
+
+    def put_items(self, tree):
+        """Place per-item arrays on the group (leading axis sharded)."""
+        return jax.tree.map(lambda x: jax.device_put(x, self.sharding), tree)
+
+    def put_shared(self, tree):
+        return jax.tree.map(lambda x: jax.device_put(x, self.replicated), tree)
+
+    def pad_to(self, n: int) -> int:
+        return _round_up(max(n, self.size), self.size)
+
+    def jit(self, key, fn):
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(fn)
+        return self._jit_cache[key]
+
+
+class CoProcessor:
+    """Executes hash-join step series across a C-group and a G-group.
+
+    PHJ orchestration and the BasicUnit baseline are attached from
+    ``PhjCoProcessorMixin`` at the bottom of this module."""
+
+    def __init__(self, c_devices=None, g_devices=None, *,
+                 link: LinkSpec = ZEROCOPY_LINK, discrete: bool = False,
+                 ratio_quantum: int = 64):
+        devs = jax.devices()
+        if c_devices is None or g_devices is None:
+            if len(devs) >= 8:
+                c_devices, g_devices = devs[:2], devs[2:]
+            elif len(devs) >= 2:
+                c_devices, g_devices = devs[:1], devs[1:]
+            else:  # single device: both groups share it (functional mode)
+                c_devices = g_devices = devs[:1]
+        self.c = DeviceGroup("C", c_devices)
+        self.g = DeviceGroup("G", g_devices)
+        self.link = link
+        self.discrete = discrete
+        self.ratio_quantum = ratio_quantum
+        # Cuts and relation sizes are kept multiples of this, so both
+        # groups' slices shard evenly over their devices.
+        self.lcm = math.lcm(self.c.size, self.g.size)
+
+    BUILD_PAD_KEY = -2   # sentinel keys: pads never match real (>=0) keys
+    PROBE_PAD_KEY = -3
+
+    def pad_relation(self, rel: Relation, sentinel: int) -> Relation:
+        n = rel.size
+        m = _round_up(n, self.lcm)
+        if m == n:
+            return rel
+        pad = m - n
+        return Relation(
+            jnp.concatenate([rel.rid, jnp.full((pad,), ht.INVALID)]),
+            jnp.concatenate([rel.key,
+                             jnp.full((pad,), jnp.int32(sentinel))]))
+
+    # ------------------------------------------------------------------
+    # Emulated bus (paper §5.1: delay = latency + size/bandwidth).
+    # ------------------------------------------------------------------
+    def _bus_delay(self, nbytes: int, timing: Timing):
+        timing.transfer_bytes += int(nbytes)
+        if self.discrete and nbytes > 0:
+            d = float(self.link.xfer_time(nbytes))
+            timing.transfer_s += d
+            time.sleep(d)
+
+    def _cut(self, n: int, ratio: float) -> int:
+        """Quantized split point (bounds recompilation count and keeps both
+        slices divisible by the group sizes)."""
+        q = max(self.lcm, _round_up(n // self.ratio_quantum, self.lcm))
+        cut = int(round(ratio * n / q)) * q
+        return min(n, max(0, cut))
+
+    # ------------------------------------------------------------------
+    # Map-series execution with per-step ratios (PL backbone).
+    # ------------------------------------------------------------------
+    def run_map_series(self, series, shared, items, ratios,
+                       timing: Timing | None = None):
+        """Run splittable map steps with per-step ratios.
+
+        Boundary rule (paper Fig. 2): when r_i != r_{i-1}, the slice between
+        the two cut points moves across groups — a real device transfer plus
+        the emulated bus delay in discrete mode.
+        """
+        timing = timing or Timing()
+        n = next(iter(items.values())).shape[0]
+        shared_c = self.c.put_shared(shared)
+        shared_g = self.g.put_shared(shared)
+        cut = self._cut(n, ratios[0])
+        items_c = self.c.put_items({k: v[:cut] for k, v in items.items()})
+        items_g = self.g.put_items({k: v[cut:] for k, v in items.items()})
+        if self.discrete:
+            moved = sum(int(np.prod(v.shape[1:]) or 1) * v.dtype.itemsize
+                        * (n - cut) for v in items.values())
+            self._bus_delay(moved, timing)
+        extra_shared: dict = {}
+        for i, step in enumerate(series.steps):
+            new_cut = self._cut(n, ratios[i])
+            if new_cut != cut:
+                items_c, items_g, moved = self._move_boundary(
+                    items_c, items_g, cut, new_cut)
+                self._bus_delay(moved, timing)
+                cut = new_cut
+            fc = self.c.jit((series.name, step.name, "c",
+                             tuple(v.shape for v in items_c.values())),
+                            step.apply)
+            fg = self.g.jit((series.name, step.name, "g",
+                             tuple(v.shape for v in items_g.values())),
+                            step.apply)
+            out_c, sh_c = fc(shared_c, items_c)   # async dispatch: C ...
+            out_g, sh_g = fg(shared_g, items_g)   # ... overlaps with G
+            items_c, items_g = out_c, out_g
+            for k, how in step.combine.items():
+                a, b = sh_c.get(k), sh_g.get(k)
+                if how == "add":
+                    extra_shared[k] = jax.device_put(a, self.c.replicated) + \
+                        jax.device_put(jax.device_get(b), self.c.replicated)
+                elif how == "list":
+                    extra_shared.setdefault(k, []).extend(
+                        [x for x in (a if isinstance(a, list) else [a])] +
+                        [x for x in (b if isinstance(b, list) else [b])])
+        return items_c, items_g, extra_shared, timing
+
+    def _move_boundary(self, items_c, items_g, cut, new_cut):
+        """Move the [min(cut,new_cut), max) slice between the groups."""
+        moved_bytes = 0
+        if new_cut > cut:            # C takes more: head of G moves to C
+            take = new_cut - cut
+            head = {k: jax.device_get(v[:take]) for k, v in items_g.items()}
+            moved_bytes = sum(v.nbytes for v in head.values())
+            items_c = self.c.put_items(
+                {k: jnp.concatenate([jax.device_get(items_c[k]), head[k]])
+                 for k in items_c})
+            items_g = self.g.put_items(
+                {k: jax.device_get(v[take:]) for k, v in items_g.items()})
+        else:                        # G takes more: tail of C moves to G
+            take = cut - new_cut
+            tail = {k: jax.device_get(v[v.shape[0] - take:])
+                    for k, v in items_c.items()}
+            moved_bytes = sum(v.nbytes for v in tail.values())
+            items_g = self.g.put_items(
+                {k: jnp.concatenate([tail[k], jax.device_get(items_g[k])])
+                 for k in items_g})
+            items_c = self.c.put_items(
+                {k: jax.device_get(v[: v.shape[0] - take])
+                 for k, v in items_c.items()})
+        return items_c, items_g, moved_bytes
+
+    # ------------------------------------------------------------------
+    # SHJ under a scheme.
+    # ------------------------------------------------------------------
+    def shj(self, build_rel: Relation, probe_rel: Relation, *,
+            num_buckets: int, max_out: int,
+            build_ratios, probe_ratios, table_mode: str = "shared",
+            measure: bool = True) -> tuple[ht.JoinResult, Timing]:
+        """Run SHJ with per-step ratios (len-4 each; DD = equal entries,
+        OL = 0/1 entries, CPU-only = all 1, GPU-only = all 0)."""
+        timing = Timing()
+        build_rel = self.pad_relation(build_rel, self.BUILD_PAD_KEY)
+        probe_rel = self.pad_relation(probe_rel, self.PROBE_PAD_KEY)
+        t0 = time.perf_counter()
+        table = self._build(build_rel, num_buckets, build_ratios, table_mode,
+                            timing)
+        t1 = time.perf_counter()
+        result = self._probe(probe_rel, table, max_out, probe_ratios, timing)
+        jax.block_until_ready(result.probe_rid)
+        t2 = time.perf_counter()
+        timing.phase_s["build"] = t1 - t0
+        timing.phase_s["probe"] = t2 - t1
+        timing.wall_s = t2 - t0
+        return result, timing
+
+    def _build(self, rel: Relation, num_buckets: int, ratios, table_mode,
+               timing: Timing) -> ht.HashTable:
+        n = rel.size
+        r1 = ratios[0]
+        cut = self._cut(n, r1)
+        if table_mode == "separate" and 0 < cut < n:
+            # Each group builds a partial table on its share; merge after.
+            rel_c = self.c.put_items(rel.take(0, cut))
+            rel_g = self.g.put_items(rel.take(cut, n))
+            if self.discrete:
+                self._bus_delay((n - cut) * 8, timing)
+            fb_c = self.c.jit(("build", cut, num_buckets, "c"),
+                              partial(ht.build_hash_table,
+                                      num_buckets=num_buckets))
+            fb_g = self.g.jit(("build", n - cut, num_buckets, "g"),
+                              partial(ht.build_hash_table,
+                                      num_buckets=num_buckets))
+            part_c = fb_c(rel_c)
+            part_g = fb_g(rel_g)
+            jax.block_until_ready((part_c.rids, part_g.rids))
+            tm = time.perf_counter()
+            if self.discrete:  # ship the partial table back over the bus
+                self._bus_delay(sum(x.nbytes for x in
+                                    jax.tree.leaves(part_g)), timing)
+            part_g_host = jax.tree.map(jax.device_get, part_g)
+            fm = self.c.jit(("merge", n, num_buckets),
+                            partial(ht.merge_hash_tables,
+                                    num_buckets=num_buckets))
+            table = fm([part_c, self.c.put_shared(part_g_host)])
+            jax.block_until_ready(table.rids)
+            timing.merge_s = time.perf_counter() - tm
+            return table
+        # Shared table (or degenerate single-group): bucket-range ownership.
+        # C owns buckets [0, r1*B); each group receives its owned tuples and
+        # builds its range; ranges concatenate into ONE table (no merge).
+        own_c = self._cut(num_buckets, r1) if 0 < cut < n else \
+            (num_buckets if cut == n else 0)
+        if own_c in (0, num_buckets):
+            grp = self.c if own_c == num_buckets else self.g
+            if self.discrete and grp is self.g:
+                self._bus_delay(n * 8, timing)
+            fb = grp.jit(("build", n, num_buckets, grp.name),
+                         partial(ht.build_hash_table, num_buckets=num_buckets))
+            table = fb(grp.put_items(rel))
+            jax.block_until_ready(table.rids)
+            return table
+        bkt = bucket_of(rel.key, num_buckets)
+        to_c = bkt < own_c
+        order = jnp.argsort(~to_c, stable=True)  # owners contiguous
+        n_c = int(to_c.sum())
+        srel = Relation(rel.rid[order], rel.key[order])
+        # Exchange: tuples cross groups to reach their owner (bounded above
+        # by the full relation; discrete pays the bus for the crossing part).
+        crossing = min(n_c, n - cut) + min(n - n_c, cut)
+        self._bus_delay(crossing * 8, timing)
+        n_c_pad = _round_up(max(n_c, 1), self.lcm)
+        n_g_pad = _round_up(max(n - n_c, 1), self.lcm)
+        rel_c = self.c.put_items(_pad_slice(srel, 0, n_c, n_c_pad,
+                                            self.BUILD_PAD_KEY))
+        rel_g = self.g.put_items(_pad_slice(srel, n_c, n, n_g_pad,
+                                            self.BUILD_PAD_KEY))
+        fb_c = self.c.jit(("buildr", n_c_pad, num_buckets, "c"),
+                          partial(ht.build_hash_table, num_buckets=num_buckets))
+        fb_g = self.g.jit(("buildr", n_g_pad, num_buckets, "g"),
+                          partial(ht.build_hash_table, num_buckets=num_buckets))
+        part_c = fb_c(rel_c)
+        part_g = fb_g(rel_g)
+        table = _concat_bucket_ranges(part_c,
+                                      jax.tree.map(jax.device_get, part_g),
+                                      own_c)
+        jax.block_until_ready(table.rids)
+        return table
+
+    def _probe(self, rel: Relation, table: ht.HashTable, max_out: int,
+               ratios, timing: Timing) -> ht.JoinResult:
+        n = rel.size
+        cut = self._cut(n, ratios[0])
+        # Replicate the table to both groups (coupled: zero-copy; discrete:
+        # the GPU-side copy pays the bus once).
+        table_bytes = sum(x.nbytes for x in jax.tree.leaves(table))
+        if self.discrete and cut < n:
+            self._bus_delay(table_bytes + (n - cut) * 8, timing)
+        tbl_c = self.c.put_shared(table)
+        tbl_g = self.g.put_shared(table)
+        max_c = max(1, _round_up(int(max_out * (cut / max(n, 1))), 8))
+        max_g = max(1, max_out - max_c + 8)
+
+        def probe_fn(mo):
+            return lambda r, t: ht.probe_hash_table(r, t, mo)
+
+        res = []
+        if cut > 0:
+            fp = self.c.jit(("probe", cut, max_c, "c"), probe_fn(max_c))
+            res.append(fp(self.c.put_items(rel.take(0, cut)), tbl_c))
+        if cut < n:
+            fp = self.g.jit(("probe", n - cut, max_g, "g"), probe_fn(max_g))
+            res.append(fp(self.g.put_items(rel.take(cut, n)), tbl_g))
+        if len(res) == 1:
+            out = res[0]
+            if self.discrete:
+                self._bus_delay(int(out.count) * 8, timing)
+            return out
+        res_host = [jax.tree.map(jax.device_get, r) for r in res]
+        if self.discrete:
+            self._bus_delay(int(res_host[1].count) * 8, timing)
+        fcat = self.c.jit(("concat", tuple(r.probe_rid.shape[0]
+                                           for r in res_host), max_out),
+                          partial(concat_results, max_out=max_out))
+        return fcat([self.c.put_shared(r) for r in res_host])
+
+
+def _phj_owned_join(rel_r: Relation, rel_s: Relation, *, total_bits: int,
+                    shj_bits: int, max_out: int) -> ht.JoinResult:
+    """Fused per-partition SHJ over a subset of partitions (see phj.py)."""
+    from .relation import radix_of
+
+    num_buckets = 1 << (total_bits + shj_bits)
+
+    def bucket_fn(key):
+        part = radix_of(key, shift=0, bits=total_bits).astype(jnp.uint32)
+        sub = (jnp.uint32(0) if shj_bits == 0 else
+               radix_of(key, shift=total_bits, bits=shj_bits).astype(jnp.uint32))
+        return ((part << jnp.uint32(shj_bits)) | sub).astype(jnp.int32)
+
+    bkt = bucket_fn(rel_r.key)
+    order = ht.build_b2_order(bkt, rel_r.key)
+    sbkt, skey = bkt[order], rel_r.key[order]
+    (ukeys, krs, krc, bks, bkc, num_keys) = ht.build_b3_keylists(
+        sbkt, skey, num_buckets)
+    table = ht.HashTable(bks, bkc, ukeys, krs, krc, rel_r.rid[order], skey,
+                         num_keys.astype(jnp.int32))
+    pbkt = bucket_fn(rel_s.key)
+    kstart, kcount = ht.probe_p2(table, pbkt)
+    entry, nmatch = ht.probe_p3(table, rel_s.key, kstart, kcount)
+    return ht.probe_p4(table, rel_s.rid, entry, nmatch, max_out)
+
+
+class PhjCoProcessorMixin:
+    """PHJ orchestration + the appendix's BasicUnit scheduler."""
+
+    def phj(self, build_rel: Relation, probe_rel: Relation, *,
+            bits_per_pass: int, num_passes: int, shj_bits: int, max_out: int,
+            partition_ratio: float, join_ratio: float) -> tuple[ht.JoinResult, "Timing"]:
+        """PHJ co-processing: ratio-split partitioning, then partition-pair
+        ownership split for the join phase (paper PHJ-DD/PL skeleton).
+
+        ``partition_ratio`` — C-group share of the partition passes.
+        ``join_ratio``      — fraction of partition pairs owned by C.
+        """
+        from .partition import radix_partition
+        from .relation import radix_of
+
+        timing = Timing()
+        total_bits = bits_per_pass * num_passes
+        build_rel = self.pad_relation(build_rel, self.BUILD_PAD_KEY)
+        probe_rel = self.pad_relation(probe_rel, self.PROBE_PAD_KEY)
+        t0 = time.perf_counter()
+
+        def part_fn(rel):
+            return radix_partition(rel, bits_per_pass=bits_per_pass,
+                                   num_passes=num_passes).rel
+
+        parts = {}
+        for tag, rel in (("R", build_rel), ("S", probe_rel)):
+            n = rel.size
+            cut = self._cut(n, partition_ratio)
+            if self.discrete and 0 < cut < n:
+                self._bus_delay((n - cut) * 8, timing)
+            pieces = []
+            if cut > 0:
+                f = self.c.jit(("phj_part", tag, cut), part_fn)
+                pieces.append(f(self.c.put_items(rel.take(0, cut))))
+            if cut < n:
+                f = self.g.jit(("phj_part", tag, n - cut), part_fn)
+                pieces.append(f(self.g.put_items(rel.take(cut, n))))
+            pieces = [jax.tree.map(jax.device_get, x) for x in pieces]
+            parts[tag] = Relation(
+                jnp.concatenate([x.rid for x in pieces]),
+                jnp.concatenate([x.key for x in pieces]))
+        t1 = time.perf_counter()
+        timing.phase_s["partition"] = t1 - t0
+
+        # Ownership exchange: partitions [0, own) -> C, rest -> G.
+        num_parts = 1 << total_bits
+        own = self._cut(num_parts, join_ratio)
+        results = []
+        for grp, sel in ((self.c, lambda pid: pid < own),
+                         (self.g, lambda pid: pid >= own)):
+            if (own == 0 and grp is self.c) or (own == num_parts
+                                                and grp is self.g):
+                continue
+            sub = {}
+            for tag in ("R", "S"):
+                rel = parts[tag]
+                pid = radix_of(rel.key, shift=0, bits=total_bits)
+                mask = np.asarray(sel(pid))
+                idx = np.nonzero(mask)[0]
+                m = _round_up(max(len(idx), 1), self.lcm)
+                sent = (self.BUILD_PAD_KEY if tag == "R"
+                        else self.PROBE_PAD_KEY)
+                rid = np.full(m, -1, np.int32)
+                key = np.full(m, sent, np.int32)
+                rid[:len(idx)] = np.asarray(rel.rid)[idx]
+                key[:len(idx)] = np.asarray(rel.key)[idx]
+                if self.discrete:
+                    self._bus_delay(len(idx) * 8 // 2, timing)
+                sub[tag] = grp.put_items(Relation(jnp.asarray(rid),
+                                                  jnp.asarray(key)))
+            mo = max(64, _round_up(int(max_out * (join_ratio if grp is self.c
+                                                  else 1 - join_ratio)), 8) + 64)
+            f = grp.jit(("phj_join", sub["R"].size, sub["S"].size, mo),
+                        partial(_phj_owned_join, total_bits=total_bits,
+                                shj_bits=shj_bits, max_out=mo))
+            results.append(f(sub["R"], sub["S"]))
+        results = [jax.tree.map(jax.device_get, r) for r in results]
+        if len(results) == 1:
+            out = results[0]
+        else:
+            fcat = self.c.jit(
+                ("concat", tuple(r.probe_rid.shape[0] for r in results),
+                 max_out), partial(concat_results, max_out=max_out))
+            out = fcat([self.c.put_shared(r) for r in results])
+        jax.block_until_ready(out.probe_rid)
+        t2 = time.perf_counter()
+        timing.phase_s["join"] = t2 - t1
+        timing.wall_s = t2 - t0
+        return out, timing
+
+    # ------------------------------------------------------------------
+    # Appendix A: BasicUnit — coarse-grained dynamic chunk scheduling.
+    # ------------------------------------------------------------------
+    def basic_unit_shj(self, build_rel: Relation, probe_rel: Relation, *,
+                       num_buckets: int, max_out: int, chunk: int = 4096
+                       ) -> tuple[ht.JoinResult, "Timing", dict]:
+        """Chunks of tuples dynamically assigned to whichever group is free.
+
+        Greedy least-loaded assignment using one calibrated chunk time per
+        group (the appendix's dynamic queue), then real execution of the
+        assigned work.  Returns the realized per-phase CPU ratios (appendix
+        Figs. 17/18)."""
+        timing = Timing()
+        build_rel = self.pad_relation(build_rel, self.BUILD_PAD_KEY)
+        probe_rel = self.pad_relation(probe_rel, self.PROBE_PAD_KEY)
+        chunk = _round_up(chunk, self.lcm)
+        ratios = {}
+        t0 = time.perf_counter()
+
+        def assign(n_items, t_c, t_g):
+            n_chunks = -(-n_items // chunk)
+            load_c = load_g = 0.0
+            sched = []
+            for _ in range(n_chunks):  # the paper's dynamic queue, greedily
+                if load_c + t_c <= load_g + t_g:
+                    sched.append("C")
+                    load_c += t_c
+                else:
+                    sched.append("G")
+                    load_g += t_g
+            return sched
+
+        # calibrate one chunk per group (build)
+        cal = build_rel.take(0, chunk)
+        fb = {g.name: g.jit(("bu_build", chunk, num_buckets, g.name),
+                            partial(ht.build_hash_table,
+                                    num_buckets=num_buckets))
+              for g in (self.c, self.g)}
+        tc = _time_once(fb["C"], self.c.put_items(cal))
+        tg = _time_once(fb["G"], self.g.put_items(cal))
+        sched = assign(build_rel.size, tc, tg)
+        ratios["build"] = sched.count("C") / max(len(sched), 1)
+        partials = []
+        for i, who in enumerate(sched):
+            grp = self.c if who == "C" else self.g
+            lo = i * chunk
+            hi = min(build_rel.size, lo + chunk)
+            sl = _pad_slice(build_rel, lo, hi, chunk, self.BUILD_PAD_KEY)
+            partials.append(fb[who](grp.put_items(sl)))
+        partials = [jax.tree.map(jax.device_get, t) for t in partials]
+        fm = self.c.jit(("bu_merge", len(partials), chunk, num_buckets),
+                        partial(ht.merge_hash_tables, num_buckets=num_buckets))
+        table = fm([self.c.put_shared(t) for t in partials])
+        jax.block_until_ready(table.rids)
+        t1 = time.perf_counter()
+        timing.phase_s["build"] = t1 - t0
+        timing.merge_s = 0.0
+
+        # probe chunks
+        mo = max(64, _round_up(max_out // max(1, probe_rel.size // chunk), 8)
+                 + 64)
+        fp = {g.name: g.jit(("bu_probe", chunk, mo, g.name),
+                            lambda r, t: ht.probe_hash_table(r, t, mo))
+              for g in (self.c, self.g)}
+        tbl = {g.name: g.put_shared(table) for g in (self.c, self.g)}
+        calp = probe_rel.take(0, chunk)
+        tcp = _time_once(lambda r: fp["C"](r, tbl["C"]), self.c.put_items(calp))
+        tgp = _time_once(lambda r: fp["G"](r, tbl["G"]), self.g.put_items(calp))
+        schedp = assign(probe_rel.size, tcp, tgp)
+        ratios["probe"] = schedp.count("C") / max(len(schedp), 1)
+        outs = []
+        for i, who in enumerate(schedp):
+            grp = self.c if who == "C" else self.g
+            lo = i * chunk
+            hi = min(probe_rel.size, lo + chunk)
+            sl = _pad_slice(probe_rel, lo, hi, chunk, self.PROBE_PAD_KEY)
+            outs.append(fp[who](grp.put_items(sl), tbl[who]))
+        outs = [jax.tree.map(jax.device_get, r) for r in outs]
+        fcat = self.c.jit(("bu_concat", len(outs), mo, max_out),
+                          partial(concat_results, max_out=max_out))
+        out = fcat([self.c.put_shared(r) for r in outs])
+        jax.block_until_ready(out.probe_rid)
+        t2 = time.perf_counter()
+        timing.phase_s["probe"] = t2 - t1
+        timing.wall_s = t2 - t0
+        return out, timing, ratios
+
+
+def _time_once(fn, *args) -> float:
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return time.perf_counter() - t0
+
+
+def _pad_slice(rel: Relation, lo: int, hi: int, target: int,
+               sentinel: int) -> Relation:
+    """rel[lo:hi] padded with sentinel tuples up to ``target`` rows."""
+    rid, key = rel.rid[lo:hi], rel.key[lo:hi]
+    pad = target - (hi - lo)
+    if pad <= 0:
+        return Relation(rid, key)
+    return Relation(
+        jnp.concatenate([rid, jnp.full((pad,), ht.INVALID)]),
+        jnp.concatenate([key, jnp.full((pad,), jnp.int32(sentinel))]))
+
+
+def _concat_bucket_ranges(part_c: ht.HashTable, part_g: ht.HashTable,
+                          own_c: int) -> ht.HashTable:
+    """Stitch two bucket-range tables into one logical shared table.
+
+    C's table covers buckets [0, own_c) of the global space, G's covers
+    [own_c, B).  Entry/rid indices of the G range shift by C's counts.
+    """
+    nk_c = part_c.ukeys.shape[0]
+    nr_c = part_c.rids.shape[0]
+    bkc = jnp.concatenate([part_c.bucket_key_count[:own_c],
+                           part_g.bucket_key_count[own_c:]])
+    ukeys = jnp.concatenate([part_c.ukeys, part_g.ukeys])
+    krs = jnp.concatenate([part_c.key_rid_start,
+                           part_g.key_rid_start + nr_c])
+    krc = jnp.concatenate([part_c.key_rid_count, part_g.key_rid_count])
+    rids = jnp.concatenate([part_c.rids, part_g.rids])
+    skeys = jnp.concatenate([part_c.skeys, part_g.skeys])
+    num_keys = part_c.num_keys + part_g.num_keys
+    # Re-point G's bucket starts past C's padded tail: C's valid entries are
+    # [0, nk_valid_c); G's live at [nk_c, nk_c + ...).  Adjust offset.
+    bks = jnp.concatenate([
+        part_c.bucket_key_start[:own_c],
+        part_g.bucket_key_start[own_c:] + nk_c,
+    ])
+    return ht.HashTable(bks, bkc, ukeys, krs, krc, rids, skeys, num_keys)
+
+
+CoProcessor.phj = PhjCoProcessorMixin.phj
+CoProcessor.basic_unit_shj = PhjCoProcessorMixin.basic_unit_shj

@@ -1,0 +1,151 @@
+"""Partitioned (radix) hash join — paper Algorithm 2.
+
+PHJ = g passes of radix partitioning on R and S (steps n1..n3 per pass),
+then SHJ per partition pair.  Because both relations are clustered by the
+same radix bits, the per-partition SHJ is realized as one global CSR hash
+join whose bucket id is ``(radix_value << shj_bits) | shj_hash_bits`` —
+buckets never span partitions, so probes stay within their partition pair
+(identical join semantics, with the paper's locality benefit: after
+partitioning, each bucket's working set is contiguous).
+
+Two step granularities are provided (paper §3.3 "Step definitions"):
+  * fine-grained  — per-tuple steps (n1..n3, b1..b4, p1..p4) — PHJ-PL;
+  * coarse-grained — one step whose input item is a whole partition pair,
+    each joined with its own private table — PHJ-PL' (Table 3 baseline).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import hash_table as ht
+from .partition import Partitions, partition_n1, partition_n2, partition_n3, \
+    radix_partition
+from .relation import Relation, radix_of
+from .steps import Step, StepCost, StepSeries
+
+PARTITION_COSTS = {
+    "n1": StepCost(ops_per_item=60, seq_bytes_per_item=12,
+                   rand_accesses_per_item=0.0, out_bytes_per_item=12),
+    "n2": StepCost(ops_per_item=4, seq_bytes_per_item=4,
+                   rand_accesses_per_item=0.5, out_bytes_per_item=12),
+    "n3": StepCost(ops_per_item=40, seq_bytes_per_item=16,
+                   rand_accesses_per_item=1.0, out_bytes_per_item=8,
+                   workload_dependent=True),
+}
+
+
+def _n1(shared, items):
+    pid = partition_n1(items["key"], shift=shared["shift"],
+                       bits=shared["bits"])
+    return {**items, "pid": pid}, {}
+
+
+def _n2(shared, items):
+    starts, counts = partition_n2(items["pid"], 1 << shared["bits"])
+    return items, {"part_hist": counts}
+
+
+def _n3(shared, items):
+    rel = partition_n3(Relation(items["rid"], items["key"]), items["pid"])
+    return {"rid": rel.rid, "key": rel.key}, {}
+
+
+def partition_series(pass_idx: int) -> StepSeries:
+    return StepSeries(f"phj_partition_pass{pass_idx}", (
+        Step("n1", _n1, PARTITION_COSTS["n1"]),
+        Step("n2", _n2, PARTITION_COSTS["n2"], combine={"part_hist": "add"}),
+        Step("n3", _n3, PARTITION_COSTS["n3"]),
+    ))
+
+
+def phj_bucket_count(n: int, total_radix_bits: int, *, avg_bucket: int = 4):
+    """Buckets per partition (power of two)."""
+    from .relation import next_pow2
+    per_part = max(1, n >> total_radix_bits)
+    return max(1, next_pow2(max(1, per_part // avg_bucket)))
+
+
+@partial(jax.jit, static_argnames=("bits_per_pass", "num_passes", "max_out",
+                                   "buckets_per_part"))
+def phj_join(build_rel: Relation, probe_rel: Relation, *, bits_per_pass: int,
+             num_passes: int, buckets_per_part: int,
+             max_out: int) -> ht.JoinResult:
+    """Full PHJ: partition R and S, then SHJ per partition pair (fused)."""
+    total_bits = bits_per_pass * num_passes
+    pr = radix_partition(build_rel, bits_per_pass=bits_per_pass,
+                         num_passes=num_passes)
+    ps = radix_partition(probe_rel, bits_per_pass=bits_per_pass,
+                         num_passes=num_passes)
+    # Partition-aligned bucket ids: buckets never cross partitions.
+    shj_bits = max(0, buckets_per_part.bit_length() - 1)
+    num_buckets = 1 << (total_bits + shj_bits)
+
+    def bucket_fn(key):
+        part = radix_of(key, shift=0, bits=total_bits).astype(jnp.uint32)
+        sub = (jnp.uint32(0) if shj_bits == 0 else
+               (radix_of(key, shift=total_bits, bits=shj_bits).astype(jnp.uint32)))
+        return ((part << jnp.uint32(shj_bits)) | sub).astype(jnp.int32)
+
+    # Build on partitioned R: tuples are already clustered, so the (bucket,
+    # key) sort inside build is near-sorted (the paper's locality win).
+    bkt = bucket_fn(pr.rel.key)
+    order = ht.build_b2_order(bkt, pr.rel.key)
+    sbkt, skey = bkt[order], pr.rel.key[order]
+    (ukeys, krs, krc, bks, bkc, num_keys) = ht.build_b3_keylists(
+        sbkt, skey, num_buckets)
+    table = ht.HashTable(bks, bkc, ukeys, krs, krc, pr.rel.rid[order], skey,
+                         num_keys.astype(jnp.int32))
+
+    pbkt = bucket_fn(ps.rel.key)
+    kstart, kcount = ht.probe_p2(table, pbkt)
+    entry, nmatch = ht.probe_p3(table, ps.rel.key, kstart, kcount)
+    return ht.probe_p4(table, ps.rel.rid, entry, nmatch, max_out)
+
+
+# --------------------------------------------------------------------------
+# Coarse-grained step definition (paper §3.3, PHJ-PL' in Table 3).
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("num_parts", "part_cap", "buckets_per_part",
+                                   "max_out_per_part"))
+def phj_coarse_join(pr: Partitions, ps: Partitions, *, num_parts: int,
+                    part_cap: int, buckets_per_part: int,
+                    max_out_per_part: int) -> ht.JoinResult:
+    """Join each partition pair as ONE item with its own private table.
+
+    Partitions are padded to ``part_cap`` and vmapped: one work item per
+    partition pair, separate hash tables (the paper notes this "potentially
+    loses the opportunities of cache reuse" — Table 3 quantifies it, our
+    benchmark reproduces the comparison).
+    """
+
+    def gather_part(parts: Partitions, i):
+        idx = parts.part_start[i] + jnp.arange(part_cap, dtype=jnp.int32)
+        valid = jnp.arange(part_cap, dtype=jnp.int32) < parts.part_count[i]
+        idx = jnp.clip(idx, 0, parts.rel.size - 1)
+        key = jnp.where(valid, parts.rel.key[idx], -1)
+        rid = jnp.where(valid, parts.rel.rid[idx], ht.INVALID)
+        return Relation(rid, key), valid
+
+    def join_one(i):
+        r_i, r_valid = gather_part(pr, i)
+        s_i, s_valid = gather_part(ps, i)
+        # Mask padding: send invalid build keys to a sentinel that matches
+        # nothing, and zero out invalid probe rows afterwards.
+        rkey = jnp.where(r_valid, r_i.key, -2)
+        skey = jnp.where(s_valid, s_i.key, -3)
+        table = ht.build_hash_table(Relation(r_i.rid, rkey), buckets_per_part)
+        res = ht.probe_hash_table(Relation(s_i.rid, skey), table,
+                                  max_out_per_part)
+        return res
+
+    results = jax.vmap(join_one)(jnp.arange(num_parts, dtype=jnp.int32))
+    probe = results.probe_rid.reshape(-1)
+    build = results.build_rid.reshape(-1)
+    count = results.count.sum()
+    valid = probe != ht.INVALID
+    order = jnp.argsort(~valid, stable=True)
+    return ht.JoinResult(probe[order], build[order], count)

@@ -1,0 +1,144 @@
+"""Columnar relations and synthetic data generators.
+
+The paper (§5.1) uses two-column relations ``(rid, key)`` of 4-byte integers:
+16M tuples by default, uniform keys, plus two skewed sets (``low-skew``:
+s=10% duplicated keys, ``high-skew``: s=25%) and a selectivity knob for the
+probe side.  We reproduce those generators exactly so the benchmark harness
+can regenerate every figure's dataset.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TUPLE_BYTES = 8  # (rid, key) 4-byte ints, as in the paper.
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Relation:
+    """A columnar relation of ``(rid, key)`` pairs.
+
+    ``rid`` and ``key`` are int32 arrays of identical shape ``(n,)``.
+    A relation is a pytree so it can flow through jit/shard_map unchanged.
+    """
+
+    rid: jax.Array
+    key: jax.Array
+
+    @property
+    def size(self) -> int:
+        return int(self.rid.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * TUPLE_BYTES
+
+    def take(self, lo: int, hi: int) -> "Relation":
+        return Relation(self.rid[lo:hi], self.key[lo:hi])
+
+    def tree_flatten(self):
+        return (self.rid, self.key), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def uniform_relation(n: int, *, key_range: int | None = None,
+                     seed: int = 0) -> Relation:
+    """Uniform-distributed key values (paper default dataset)."""
+    rng = np.random.default_rng(seed)
+    key_range = key_range or n
+    keys = rng.integers(0, key_range, size=n, dtype=np.int32)
+    return Relation(jnp.arange(n, dtype=jnp.int32), jnp.asarray(keys))
+
+
+def unique_relation(n: int, *, seed: int = 0) -> Relation:
+    """A build relation with unique keys (primary-key side)."""
+    rng = np.random.default_rng(seed)
+    keys = rng.permutation(n).astype(np.int32)
+    return Relation(jnp.arange(n, dtype=jnp.int32), jnp.asarray(keys))
+
+
+def skewed_relation(n: int, *, s_percent: int, seed: int = 0) -> Relation:
+    """Paper §5.1: ``s%`` of tuples share one duplicate key value.
+
+    ``low-skew``: s=10, ``high-skew``: s=25.
+    """
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, n, size=n, dtype=np.int32)
+    n_dup = (n * s_percent) // 100
+    dup_positions = rng.choice(n, size=n_dup, replace=False)
+    hot_key = np.int32(rng.integers(0, n))
+    keys[dup_positions] = hot_key
+    return Relation(jnp.arange(n, dtype=jnp.int32), jnp.asarray(keys))
+
+
+def probe_with_selectivity(build: Relation, n: int, *, selectivity: float,
+                           seed: int = 0) -> Relation:
+    """Probe relation where a ``selectivity`` fraction of tuples match build keys.
+
+    Paper §5.5 varies join selectivity in {12.5%, 50%, 100%}.  Non-matching
+    tuples draw keys from a disjoint range.
+    """
+    rng = np.random.default_rng(seed)
+    build_keys = np.asarray(build.key)
+    n_match = int(round(n * selectivity))
+    match_keys = rng.choice(build_keys, size=n_match, replace=True)
+    # Non-matching keys live above every build key.
+    miss_lo = int(build_keys.max()) + 1 if build_keys.size else 1
+    miss_keys = rng.integers(miss_lo, miss_lo + max(n, 2),
+                             size=n - n_match, dtype=np.int64)
+    keys = np.concatenate([match_keys.astype(np.int64), miss_keys])
+    rng.shuffle(keys)
+    return Relation(jnp.arange(n, dtype=jnp.int32),
+                    jnp.asarray(keys, dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Hash functions.
+# ---------------------------------------------------------------------------
+
+MURMUR_C1 = np.uint32(0x85EBCA6B)
+MURMUR_C2 = np.uint32(0xC2B2AE35)
+
+
+@partial(jax.jit, inline=True)
+def murmur3_fmix32(x: jax.Array) -> jax.Array:
+    """MurmurHash3 32-bit finalizer (avalanche mix).
+
+    The paper uses MurmurHash 2.0 ([4]); we use the Murmur3 finalizer which
+    has the same collision quality, vectorizes to pure VPU ALU ops, and is
+    the common choice in later hash-join literature.  Computed in uint32.
+    """
+    h = x.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * MURMUR_C1
+    h = h ^ (h >> 13)
+    h = h * MURMUR_C2
+    h = h ^ (h >> 16)
+    return h
+
+
+def bucket_of(key: jax.Array, num_buckets: int) -> jax.Array:
+    """Step b1/p1/n1: compute hash bucket number (num_buckets must be 2**k)."""
+    return (murmur3_fmix32(key) & jnp.uint32(num_buckets - 1)).astype(jnp.int32)
+
+
+def radix_of(key: jax.Array, *, shift: int, bits: int) -> jax.Array:
+    """Partition number for one radix pass: low bits of the integer hash.
+
+    Paper §3.1: "radix partitioning is performed by multiple passes based on
+    a number of lower bits of the integer hash values."
+    """
+    h = murmur3_fmix32(key)
+    return ((h >> jnp.uint32(shift)) & jnp.uint32((1 << bits) - 1)).astype(jnp.int32)
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(0, (int(n) - 1).bit_length())

@@ -1,0 +1,148 @@
+"""Simple hash join (SHJ) as two fine-grained step series (paper Alg. 1).
+
+Build series  b1..b4 and probe series p1..p4, with a barrier in between.
+Each step's ``apply`` runs on an arbitrary contiguous slice of items, which
+is what lets OL/DD/PL ratio-split them across processor groups.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import hash_table as ht
+from .relation import Relation
+from .steps import Step, StepCost, StepSeries
+
+# Default per-item cost coefficients (paper Table 2's profiled #I and the
+# calibrated memory unit costs; these are analytic seeds — calibrate.py
+# replaces them with measured values on the benchmark host).
+COSTS = {
+    "b1": StepCost(ops_per_item=60, seq_bytes_per_item=12,
+                   rand_accesses_per_item=0.0, out_bytes_per_item=12),
+    "b2": StepCost(ops_per_item=48, seq_bytes_per_item=24,
+                   rand_accesses_per_item=0.0, out_bytes_per_item=12,
+                   workload_dependent=True),
+    "b3": StepCost(ops_per_item=12, seq_bytes_per_item=20,
+                   rand_accesses_per_item=0.5, out_bytes_per_item=16,
+                   workload_dependent=True),
+    "b4": StepCost(ops_per_item=4, seq_bytes_per_item=8,
+                   rand_accesses_per_item=1.0, out_bytes_per_item=8),
+    "p1": StepCost(ops_per_item=60, seq_bytes_per_item=12,
+                   rand_accesses_per_item=0.0, out_bytes_per_item=12),
+    "p2": StepCost(ops_per_item=4, seq_bytes_per_item=8,
+                   rand_accesses_per_item=1.0, out_bytes_per_item=20),
+    "p3": StepCost(ops_per_item=24, seq_bytes_per_item=4,
+                   rand_accesses_per_item=3.0, out_bytes_per_item=12,
+                   workload_dependent=True),
+    "p4": StepCost(ops_per_item=8, seq_bytes_per_item=16,
+                   rand_accesses_per_item=2.0, out_bytes_per_item=8),
+}
+
+
+# --------------------------------------------------------------------------
+# Build steps.
+# --------------------------------------------------------------------------
+
+def _b1(shared, items):
+    bkt = ht.build_b1(items["key"], shared["num_buckets"])
+    return {**items, "bkt": bkt}, {}
+
+
+def _b2(shared, items):
+    """Claim hash-table slots: stable (bucket, key) order over the slice,
+    plus the bucket histogram partial (combined by "add" across groups)."""
+    order = ht.build_b2_order(items["bkt"], items["key"])
+    out = {k: v[order] for k, v in items.items()}
+    hist = jax.ops.segment_sum(jnp.ones_like(items["bkt"]), items["bkt"],
+                               num_segments=shared["num_buckets"])
+    return out, {"hist": hist}
+
+
+def _b3(shared, items):
+    first = jnp.concatenate([
+        jnp.ones((1,), jnp.bool_),
+        (items["bkt"][1:] != items["bkt"][:-1])
+        | (items["key"][1:] != items["key"][:-1]),
+    ]) if items["key"].shape[0] > 0 else jnp.zeros((0,), jnp.bool_)
+    return {**items, "first": first}, {}
+
+
+def _b4(shared, items):
+    """Finalize the slice's partial CSR table (b4: insert rids)."""
+    n = items["key"].shape[0]
+    nb = shared["num_buckets"]
+    if n == 0:
+        empty = ht.build_hash_table(
+            Relation(jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32)), nb)
+        return {}, {"partial_tables": [empty]}
+    (ukeys, krs, krc, bks, bkc, num_keys) = ht.build_b3_keylists(
+        items["bkt"], items["key"], nb)
+    table = ht.HashTable(bks, bkc, ukeys, krs, krc, items["rid"],
+                         items["key"], num_keys.astype(jnp.int32))
+    return {}, {"partial_tables": [table]}
+
+
+# --------------------------------------------------------------------------
+# Probe steps.
+# --------------------------------------------------------------------------
+
+def _p1(shared, items):
+    bkt = ht.probe_p1(items["key"], shared["table"].num_buckets)
+    return {**items, "bkt": bkt}, {}
+
+
+def _p2(shared, items):
+    kstart, kcount = ht.probe_p2(shared["table"], items["bkt"])
+    return {**items, "kstart": kstart, "kcount": kcount}, {}
+
+
+def _p3(shared, items):
+    entry, nmatch = ht.probe_p3(shared["table"], items["key"],
+                                items["kstart"], items["kcount"])
+    return {**items, "entry": entry, "nmatch": nmatch}, {}
+
+
+def _p4(shared, items):
+    res = ht.probe_p4(shared["table"], items["rid"], items["entry"],
+                      items["nmatch"], shared["max_out"])
+    return {}, {"results": [res]}
+
+
+BUILD_SERIES = StepSeries("shj_build", (
+    Step("b1", _b1, COSTS["b1"]),
+    Step("b2", _b2, COSTS["b2"], combine={"hist": "add"}),
+    Step("b3", _b3, COSTS["b3"]),
+    Step("b4", _b4, COSTS["b4"], combine={"partial_tables": "list"}),
+))
+
+PROBE_SERIES = StepSeries("shj_probe", (
+    Step("p1", _p1, COSTS["p1"]),
+    Step("p2", _p2, COSTS["p2"]),
+    Step("p3", _p3, COSTS["p3"]),
+    Step("p4", _p4, COSTS["p4"], combine={"results": "list"}),
+))
+
+
+# --------------------------------------------------------------------------
+# Single-device reference SHJ (the oracle path used by tests/benches).
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("num_buckets", "max_out"))
+def shj_join(build_rel: Relation, probe_rel: Relation, *, num_buckets: int,
+             max_out: int) -> ht.JoinResult:
+    table = ht.build_hash_table(build_rel, num_buckets)
+    return ht.probe_hash_table(probe_rel, table, max_out)
+
+
+def concat_results(parts: list[ht.JoinResult], max_out: int) -> ht.JoinResult:
+    """Combine per-group probe outputs (order: C-group first)."""
+    probe = jnp.concatenate([p.probe_rid[: p.probe_rid.shape[0]] for p in parts])
+    build = jnp.concatenate([p.build_rid for p in parts])
+    count = sum(p.count for p in parts)
+    # Compact valid pairs to the front.
+    valid = probe != ht.INVALID
+    order = jnp.argsort(~valid, stable=True)
+    probe, build = probe[order][:max_out], build[order][:max_out]
+    return ht.JoinResult(probe, build, jnp.minimum(count, max_out))

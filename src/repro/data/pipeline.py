@@ -1,0 +1,56 @@
+"""Deterministic synthetic LM data pipeline.
+
+Batches are a pure function of (seed, step): any host can regenerate any
+shard, which is the straggler/elasticity story — a replacement host joining
+mid-run rebuilds its input stream from the step counter alone (DESIGN.md
+§5 fault tolerance).  The "dataset" is a mixture of Zipf-distributed tokens
+and a repeated-ngram structure so the loss actually decreases.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def batch(self, step: int, *, host_index: int = 0,
+              host_count: int = 1) -> dict:
+        """Host-sharded batch for ``step`` (numpy, ready to device_put)."""
+        per_host = self.global_batch // host_count
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * 97 + host_index)
+        zipf = rng.zipf(1.3, size=(per_host, self.seq_len))
+        tokens = np.minimum(zipf, self.vocab_size - 1).astype(np.int32)
+        # inject learnable structure: periodic ngrams
+        period = 16
+        base = rng.integers(0, self.vocab_size, size=(per_host, period))
+        idx = np.arange(self.seq_len) % period
+        structured = base[:, idx]
+        mix = rng.random((per_host, self.seq_len)) < 0.7
+        tokens = np.where(mix, structured, tokens).astype(np.int32)
+        labels = np.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+        return {"tokens": tokens, "labels": labels}
+
+
+def make_batch(cfg, shape, step: int = 0, *, enc: bool = False) -> dict:
+    """Concrete batch for smoke tests / examples (small sizes only)."""
+    ds = SyntheticLM(cfg.vocab_size, shape.seq_len, shape.global_batch)
+    b = ds.batch(step)
+    out = {"tokens": jnp.asarray(b["tokens"]),
+           "labels": jnp.asarray(b["labels"])}
+    if cfg.encoder:
+        rng = np.random.default_rng(step)
+        out["enc_frames"] = jnp.asarray(
+            rng.standard_normal((shape.global_batch,
+                                 cfg.encoder.num_frames,
+                                 cfg.d_model)) * 0.02, dtype=jnp.bfloat16)
+    return out

@@ -1,0 +1,3 @@
+from .sharding import (ShardingRules, TRAIN_RULES, SERVE_RULES, axes_to_spec,
+                       shard_ctx, shard, current_mesh, current_rules,
+                       make_sharding, spec_for_tree)

@@ -1,0 +1,200 @@
+"""Logical-axis sharding rules (MaxText-style), with divisibility fallback.
+
+Tensors are annotated with *logical* axis names; a rule table maps each
+logical axis to an ordered list of candidate mesh axes.  The engine assigns,
+in *priority* order (not tensor-dim order), the first candidate mesh axis
+that (a) divides the dimension and (b) is not already used by the tensor.
+This is what makes one config system serve all 10 architectures:
+
+  * 40-head archs (qwen2.5, llama4, whisper): "heads" fails 16-way TP, so
+    the engine falls through to sequence ("q_seq") or "head_dim" sharding —
+    the cost-model-guided knob discussed in DESIGN.md §3.2.
+  * 8-KV-head GQA decode: "kv_heads" fails, so KV caches shard on
+    "cache_seq" (flash-decode style combine is inserted by SPMD).
+  * granite's 40 experts fail expert-parallel 16-way, so expert weights fall
+    back to TP over the expert FFN dim ("expert_mlp").
+
+Parameters use "fsdp" on their d_model dim -> the "data" axis (ZeRO-3:
+weights stream per layer inside the scan), and "model" on their TP dim.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Ordered (priority, logical_axis -> mesh-axis candidates) table."""
+
+    rules: tuple[tuple[str, tuple[str, ...]], ...]
+
+    def candidates(self, name: str) -> tuple[str, ...]:
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return ()
+
+    def priority(self, name: str) -> int:
+        for i, (k, _) in enumerate(self.rules):
+            if k == name:
+                return i
+        return len(self.rules)
+
+
+# Priority order matters: e.g. "heads" grabs the model axis before "q_seq".
+TRAIN_RULES = ShardingRules((
+    ("batch", ("pod", "data")),
+    ("experts", ("model",)),
+    ("heads", ("model",)),
+    ("kv_heads", ("model",)),
+    ("mlp", ("model",)),
+    ("expert_mlp", ("model",)),
+    ("vocab", ("model",)),
+    ("ssm_heads", ("model",)),
+    # NOTE: no head_dim/q_seq fallback for non-16-divisible head
+    # counts (qwen2.5/llama4: 40H, whisper: 20H, granite: 24H): head_dim
+    # sharding makes GSPMD psum full score tensors, and q_seq sharding
+    # defeats q-chunking.  Baseline replicates their attention over the
+    # model axis (bounded by q-chunking); fixing this is a designated
+    # §Perf hillclimb (EXPERIMENTS.md).
+    ("q_seq", ()),
+    ("head_dim", ()),
+    ("expert_cap", ("model",)),  # expert capacity dim when experts don't
+    ("fsdp", ("data",)),        # ZeRO-3 dim of parameters
+    ("ssm_state", ()),
+    ("conv", ()),
+    ("seq", ("model",)),        # SP: residual stream sequence-sharded
+    ("layers", ()),
+    ("moe_group", ("pod", "data")),
+))
+
+# §Perf alternative (beyond the baseline TP+SP layout): pure HSDP — the
+# batch shards over BOTH mesh axes (1 sequence/chip at global batch 256),
+# weights are ZeRO-3 sharded on their fsdp/TP dims and re-gathered per
+# layer.  Hypothesis (EXPERIMENTS.md §Perf): per-chip collective volume
+# becomes ~3x params_bytes (weight AG fwd+bwd + grad RS) instead of the
+# TP+SP activation round-trips, and replicated-head attention waste
+# disappears because every chip attends only over its own sequences.
+DP_RULES = ShardingRules((
+    ("batch", ("pod", "data", "model")),
+    ("experts", ("model",)),
+    ("heads", ()),              # no TP: attention is batch-local
+    ("kv_heads", ()),
+    ("mlp", ("model",)),        # weight-shard dim (gathered per layer)
+    ("expert_mlp", ("model",)),
+    ("vocab", ("model",)),
+    ("ssm_heads", ()),
+    ("q_seq", ()),
+    ("head_dim", ()),
+    ("expert_cap", ()),
+    ("fsdp", ("data",)),
+    ("ssm_state", ()),
+    ("conv", ()),
+    ("seq", ()),
+    ("layers", ()),
+    ("moe_group", ("pod", "data", "model")),
+))
+
+SERVE_RULES = ShardingRules((
+    ("batch", ("pod", "data")),
+    ("experts", ("model",)),
+    ("heads", ("model",)),
+    ("kv_heads", ("model",)),
+    ("cache_seq", ("model",)),  # KV cache sequence sharding (flash-decode)
+    ("mlp", ("model",)),
+    ("expert_mlp", ("model",)),
+    ("vocab", ("model",)),
+    ("ssm_heads", ("model",)),
+    ("q_seq", ()),
+    ("head_dim", ()),
+    ("expert_cap", ("model",)),
+    ("fsdp", ()),               # weights stay TP-only at serving time
+    ("ssm_state", ()),
+    ("conv", ()),
+    ("seq", ("model",)),
+    ("layers", ()),
+    ("moe_group", ("pod", "data")),
+))
+
+
+def axes_to_spec(axes: tuple[str | None, ...], dims: tuple[int, ...],
+                 rules: ShardingRules, mesh: Mesh) -> P:
+    """Assign mesh axes to tensor dims by rule priority with divisibility."""
+    assert len(axes) == len(dims), (axes, dims)
+    assignment: dict[int, tuple[str, ...]] = {}
+    used: set[str] = set()
+    order = sorted((i for i, a in enumerate(axes) if a),
+                   key=lambda i: rules.priority(axes[i]))
+    for i in order:
+        got: list[str] = []
+        size = dims[i]
+        for cand in rules.candidates(axes[i]):
+            if cand in used or cand not in mesh.shape:
+                continue
+            if size % mesh.shape[cand] == 0 and size > 0:
+                got.append(cand)
+                used.add(cand)
+                size //= mesh.shape[cand]
+        if got:
+            assignment[i] = tuple(got)
+    return P(*[assignment.get(i, None) if i not in assignment
+               else (assignment[i][0] if len(assignment[i]) == 1
+                     else assignment[i])
+               for i in range(len(axes))])
+
+
+# --------------------------------------------------------------------------
+# Context: current mesh + rules, so layers can annotate activations.
+# --------------------------------------------------------------------------
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def shard_ctx(mesh: Mesh | None, rules: ShardingRules | None):
+    prev = getattr(_ctx, "val", None)
+    _ctx.val = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.val = prev
+
+
+def current_mesh() -> Mesh | None:
+    v = getattr(_ctx, "val", None)
+    return v[0] if v else None
+
+
+def current_rules() -> ShardingRules | None:
+    v = getattr(_ctx, "val", None)
+    return v[1] if v else None
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without a context)."""
+    mesh, rules = (getattr(_ctx, "val", None) or (None, None))
+    if mesh is None or rules is None:
+        return x
+    spec = axes_to_spec(tuple(axes), tuple(x.shape), rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def make_sharding(mesh: Mesh, rules: ShardingRules,
+                  axes: tuple[str | None, ...],
+                  dims: tuple[int, ...]) -> NamedSharding:
+    return NamedSharding(mesh, axes_to_spec(axes, dims, rules, mesh))
+
+
+def spec_for_tree(axes_tree, shape_tree, rules: ShardingRules, mesh: Mesh):
+    """Map a tree of logical-axis tuples + shapes to NamedShardings."""
+    return jax.tree.map(
+        lambda axes, shp: NamedSharding(
+            mesh, axes_to_spec(tuple(axes), tuple(shp.shape), rules, mesh)),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

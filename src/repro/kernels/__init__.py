@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret
+mode on CPU against pure-jnp oracles; selected on TPU via ops.py wrappers).
+
+  hash/            murmur3 bucket hash            (paper steps n1/b1/p1)
+  partition_hist/  radix-partition histogram      (paper step n2)
+  probe/           partitioned bucketed probe     (paper steps p2/p3)
+  flash_attn/      flash attention forward        (LM substrate)
+  ssd/             Mamba2 SSD intra-chunk         (LM substrate)
+"""

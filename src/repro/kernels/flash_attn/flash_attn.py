@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: flash attention forward (causal, GQA).
+
+Grid (batch, q_heads, q_blocks): each step owns one (q_block, head_dim)
+query tile in VMEM and streams the K/V of its KV head (GQA mapping done in
+the BlockSpec index_map: kv_head = q_head // group) through MXU-aligned
+(128-multiple) tiles with online-softmax accumulation in f32.
+
+This is the TPU-native adaptation of the paper's "fine-grained steps +
+shared fast memory" idea applied to the LM substrate hotspot: the softmax
+statistics (m, l) play the bucket-header role — small VMEM-resident state
+reused across the streamed tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_block: int, causal: bool,
+                  q_block: int, seq_k: int, scale: float):
+    q = q_ref[...][0, 0].astype(jnp.float32) * scale    # (qb, d)
+    iq = pl.program_id(2)
+    d = q.shape[-1]
+    nkv = seq_k // kv_block
+    m = jnp.full((q_block,), NEG_INF, jnp.float32)
+    l = jnp.zeros((q_block,), jnp.float32)
+    acc = jnp.zeros((q_block, d), jnp.float32)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[...][0, 0], j * kv_block,
+                                         kv_block, 0).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[...][0, 0], j * kv_block,
+                                         kv_block, 0).astype(jnp.float32)
+        s = q @ k.T                                      # (qb, kvb) on MXU
+        if causal:
+            rows = iq * q_block + jnp.arange(q_block)
+            cols = j * kv_block + jnp.arange(kv_block)
+            s = jnp.where(rows[:, None] >= cols[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v           # (qb, d) on MXU
+        return m_new, l_new, acc_new
+
+    if causal:
+        # Skip fully-masked KV tiles: only j with j*kvb <= (iq+1)*qb - 1.
+        upper = jnp.minimum(nkv, (iq + 1) * q_block // kv_block + 1)
+    else:
+        upper = nkv
+    m, l, acc = jax.lax.fori_loop(0, upper, body, (m, l, acc))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(
+        o_ref.dtype)[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("num_kv_heads", "q_block",
+                                             "kv_block", "causal",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, num_kv_heads: int, q_block: int = 128,
+                           kv_block: int = 128, causal: bool = True,
+                           interpret: bool = False):
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D) -> (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    g = h // num_kv_heads
+    assert sq % q_block == 0 and sk % kv_block == 0
+    qt = q.transpose(0, 2, 1, 3)         # (B, H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)         # (B, KV, Sk, D)
+    vt = v.transpose(0, 2, 1, 3)
+    grid = (b, h, sq // q_block)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, kv_block=kv_block, causal=causal,
+                          q_block=q_block, seq_k=sk,
+                          scale=1.0 / (d ** 0.5)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_block, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, sk, d), lambda bi, hi, qi: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1, sk, d), lambda bi, hi, qi: (bi, hi // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, d),
+                               lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        interpret=interpret,
+    )(qt.reshape(b, h, sq, d), kt, vt)
+    return out.transpose(0, 2, 1, 3)

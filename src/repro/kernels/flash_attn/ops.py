@@ -1,0 +1,16 @@
+import jax
+
+from .flash_attn import flash_attention_pallas
+from .ref import flash_attention_ref
+
+
+def flash_attention(q, k, v, *, num_kv_heads: int, causal: bool = True,
+                    use_pallas: bool | None = None, interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if (use_pallas or interpret) and q.shape[1] % 128 == 0 \
+            and k.shape[1] % 128 == 0:
+        return flash_attention_pallas(q, k, v, num_kv_heads=num_kv_heads,
+                                      causal=causal, interpret=interpret)
+    return flash_attention_ref(q, k, v, num_kv_heads=num_kv_heads,
+                               causal=causal)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: exact GQA softmax attention."""
+import jax.numpy as jnp
+
+from repro.layers.attention import _sdpa
+
+
+def flash_attention_ref(q, k, v, *, num_kv_heads: int, causal: bool = True):
+    mask = None
+    if causal:
+        i = jnp.arange(q.shape[1])
+        j = jnp.arange(k.shape[1])
+        mask = (i[:, None] >= j[None, :])[None, None, None]
+    return _sdpa(q, k, v, mask, num_kv_heads)

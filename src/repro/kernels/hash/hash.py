@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: murmur3 finalizer hash + bucket number (steps
+n1/b1/p1 — the paper's ">15x GPU-accelerated" hash computation, Fig. 4).
+
+Pure VPU integer ALU work: inputs are tiled (rows, 128) so every lane of
+the 8x128 VPU is busy; one block = (block_rows, 128) in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+C1 = 0x85EBCA6B
+C2 = 0xC2B2AE35
+
+
+def _hash_kernel(keys_ref, out_ref, *, mask: int):
+    h = keys_ref[...].astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(C1)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(C2)
+    h = h ^ (h >> 16)
+    out_ref[...] = (h & jnp.uint32(mask)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_buckets", "block_rows", "interpret"))
+def hash_bucket_pallas(keys: jax.Array, *, num_buckets: int,
+                       block_rows: int = 8, interpret: bool = False):
+    """keys: (n,) int32, n % (block_rows*128) == 0.  Returns bucket ids."""
+    n = keys.shape[0]
+    lanes = 128
+    rows = n // lanes
+    assert rows % block_rows == 0, (n, block_rows)
+    grid = (rows // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_hash_kernel, mask=num_buckets - 1),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+        interpret=interpret,
+    )(keys.reshape(rows, lanes))
+    return out.reshape(n)

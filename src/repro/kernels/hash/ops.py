@@ -1,0 +1,14 @@
+"""Jit'd wrapper: Pallas on TPU, interpret-mode Pallas or jnp elsewhere."""
+import jax
+
+from .hash import hash_bucket_pallas
+from .ref import hash_bucket_ref
+
+
+def hash_bucket(keys, *, num_buckets: int, use_pallas: bool | None = None):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    n = keys.shape[0]
+    if use_pallas and n % 1024 == 0:
+        return hash_bucket_pallas(keys, num_buckets=num_buckets)
+    return hash_bucket_ref(keys, num_buckets=num_buckets)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the hash kernel."""
+import jax.numpy as jnp
+
+from repro.core.relation import bucket_of
+
+
+def hash_bucket_ref(keys, *, num_buckets: int):
+    return bucket_of(keys, num_buckets).astype(jnp.int32)

@@ -1,0 +1,12 @@
+import jax
+
+from .partition_hist import radix_hist_pallas
+from .ref import radix_hist_ref
+
+
+def radix_hist(pid, *, num_parts: int, use_pallas: bool | None = None):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas and pid.shape[0] % 1024 == 0:
+        return radix_hist_pallas(pid, num_parts=num_parts)
+    return radix_hist_ref(pid, num_parts=num_parts)

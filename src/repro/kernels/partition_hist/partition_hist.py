@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: radix-partition histogram (step n2).
+
+Grid tiles stream the partition-id vector through VMEM; each tile adds its
+one-hot counts into the shared (num_parts,) output block (same output
+block for every grid step -> sequential accumulation, the TPU-idiomatic
+replacement for the paper's atomic counters — DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(pid_ref, out_ref, *, num_parts: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pid = pid_ref[...].reshape(-1)                       # (tile,)
+    onehot = (pid[:, None] == jnp.arange(num_parts,
+                                         dtype=jnp.int32)[None, :])
+    out_ref[...] += onehot.astype(jnp.int32).sum(axis=0)[None, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_parts", "block_rows", "interpret"))
+def radix_hist_pallas(pid: jax.Array, *, num_parts: int,
+                      block_rows: int = 8, interpret: bool = False):
+    """pid: (n,) int32 in [0, num_parts).  Returns (num_parts,) counts."""
+    n = pid.shape[0]
+    lanes = 128
+    rows = n // lanes
+    assert rows % block_rows == 0 and n == rows * lanes
+    grid = (rows // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, num_parts=num_parts),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, num_parts), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, num_parts), jnp.int32),
+        interpret=interpret,
+    )(pid.reshape(rows, lanes))
+    return out[0]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the radix histogram kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def radix_hist_ref(pid, *, num_parts: int):
+    return jax.ops.segment_sum(jnp.ones_like(pid), pid,
+                               num_segments=num_parts).astype(jnp.int32)

@@ -1,0 +1,52 @@
+"""Wrapper + host-side packing of a partitioned probe problem."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.relation import Relation, radix_of
+from .probe import probe_pallas, PAD_KEY
+from .ref import probe_ref
+
+
+def probe(table_keys, table_rids, probe_keys, *,
+          use_pallas: bool | None = None, interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        return probe_pallas(table_keys, table_rids, probe_keys,
+                            interpret=interpret)
+    return probe_ref(table_keys, table_rids, probe_keys)
+
+
+def build_partitioned_table(build: Relation, probe_rel: Relation,
+                            *, total_bits: int):
+    """Host-side packing: (P, K) sorted build keys + (P, M) probe keys.
+
+    (numpy; test/bench helper — the distributed path keeps data on device.)
+    """
+    p = 1 << total_bits
+    bk, br = np.asarray(build.key), np.asarray(build.rid)
+    pk, pr = np.asarray(probe_rel.key), np.asarray(probe_rel.rid)
+    bpid = np.asarray(radix_of(build.key, shift=0, bits=total_bits))
+    ppid = np.asarray(radix_of(probe_rel.key, shift=0, bits=total_bits))
+    k_cap = max(8, int(np.bincount(bpid, minlength=p).max()))
+    m_cap = max(8, int(np.bincount(ppid, minlength=p).max()))
+    k_cap = ((k_cap + 127) // 128) * 128
+    m_cap = ((m_cap + 127) // 128) * 128
+    tk = np.full((p, k_cap), int(PAD_KEY), np.int32)
+    tr = np.full((p, k_cap), -1, np.int32)
+    qk = np.full((p, m_cap), -1, np.int32)
+    qr = np.full((p, m_cap), -1, np.int32)
+    for part in range(p):
+        sel = bpid == part
+        keys, rids = bk[sel], br[sel]
+        order = np.argsort(keys.astype(np.uint32), kind="stable")
+        tk[part, :sel.sum()] = keys[order]
+        tr[part, :sel.sum()] = rids[order]
+        sel = ppid == part
+        qk[part, :sel.sum()] = pk[sel]
+        qr[part, :sel.sum()] = pr[sel]
+    return (jnp.asarray(tk), jnp.asarray(tr), jnp.asarray(qk),
+            jnp.asarray(qr))

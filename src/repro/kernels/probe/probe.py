@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: partitioned hash probe (steps p2/p3 fused).
+
+After radix partitioning, each partition's key table fits VMEM — the
+kernel processes one partition per grid step: the partition's sorted key
+array is the VMEM-resident "shared hash table" (the paper's shared-L2
+reuse, DESIGN.md §2), and each probe lane binary-searches it
+(log2(K) VMEM gathers instead of the paper's pointer walk).
+
+Layout (built by ops.build_partitioned_table):
+  table_keys (P, K) int32 — per-partition keys, sorted, padded with INT_MAX
+  table_rids (P, K) int32 — matching build rids
+  probe_keys (P, M) int32 — per-partition probe keys, padded with -1
+Output:
+  match_rid  (P, M) int32 — first matching build rid, or -1
+
+Multi-match fanout (p4) is expanded outside with the scan allocator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PAD_KEY = jnp.int32(2**31 - 1)
+
+
+def _probe_kernel(tkeys_ref, trids_ref, pkeys_ref, out_ref, *, k_cap: int):
+    tkeys = tkeys_ref[...][0]          # (K,)
+    trids = trids_ref[...][0]          # (K,)
+    pk = pkeys_ref[...][0]             # (M,)
+    iters = max(1, k_cap.bit_length() + 1)
+    lo = jnp.zeros_like(pk)
+    hi = jnp.full_like(pk, k_cap)
+    target = pk.astype(jnp.uint32)
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = (lo + hi) >> 1
+        midc = jnp.clip(mid, 0, k_cap - 1)
+        mk = tkeys[midc].astype(jnp.uint32)   # VMEM vector gather
+        go = (mk < target) & (lo < hi)
+        return (jnp.where(go, mid + 1, lo),
+                jnp.where(go | (lo >= hi), hi, mid))
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    pos = jnp.clip(lo, 0, k_cap - 1)
+    found = (tkeys[pos] == pk) & (pk >= 0)
+    out_ref[...] = jnp.where(found, trids[pos], -1)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def probe_pallas(table_keys, table_rids, probe_keys, *,
+                 interpret: bool = False):
+    p, k_cap = table_keys.shape
+    m = probe_keys.shape[1]
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, k_cap=k_cap),
+        grid=(p,),
+        in_specs=[pl.BlockSpec((1, k_cap), lambda i: (i, 0)),
+                  pl.BlockSpec((1, k_cap), lambda i: (i, 0)),
+                  pl.BlockSpec((1, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, m), jnp.int32),
+        interpret=interpret,
+    )(table_keys, table_rids, probe_keys)

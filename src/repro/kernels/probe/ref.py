@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the partitioned probe kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def probe_ref(table_keys, table_rids, probe_keys):
+    """Vectorized per-partition sorted lookup (first match or -1)."""
+    def one(tk, tr, pk):
+        pos = jnp.searchsorted(tk.astype(jnp.uint32),
+                               pk.astype(jnp.uint32)).astype(jnp.int32)
+        pos = jnp.clip(pos, 0, tk.shape[0] - 1)
+        found = (tk[pos] == pk) & (pk >= 0)
+        return jnp.where(found, tr[pos], -1)
+    return jax.vmap(one)(table_keys, table_rids, probe_keys)

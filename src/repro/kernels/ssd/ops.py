@@ -1,0 +1,13 @@
+import jax
+
+from .ssd import ssd_intra_chunk_pallas
+from .ref import ssd_intra_chunk_ref
+
+
+def ssd_intra_chunk(x, dt, b, c, a, *, use_pallas: bool | None = None,
+                    interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        return ssd_intra_chunk_pallas(x, dt, b, c, a, interpret=interpret)
+    return ssd_intra_chunk_ref(x, dt, b, c, a)

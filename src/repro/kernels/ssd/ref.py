@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: intra-chunk SSD term (from repro.layers.ssd math)."""
+import jax.numpy as jnp
+
+from repro.layers.ssd import _segsum
+
+
+def ssd_intra_chunk_ref(x, dt, b, c, a):
+    """x: (B, NC, Q, H, P); dt: (B, NC, Q, H); b/c: (B, NC, Q, N); a: (H,)."""
+    dtf = dt.astype(jnp.float32)
+    da = dtf * a.astype(jnp.float32)
+    l_mat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))      # (B,NC,H,Q,Q)
+    l_mat = jnp.where(jnp.isfinite(l_mat), l_mat, 0.0)
+    scores = jnp.einsum("bcqn,bckn->bcqk", c.astype(jnp.float32),
+                        b.astype(jnp.float32))
+    m = scores[:, :, None] * l_mat
+    y = jnp.einsum("bchqk,bckh,bckhp->bcqhp", m, dtf,
+                   x.astype(jnp.float32))
+    return y.astype(x.dtype)

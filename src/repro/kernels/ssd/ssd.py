@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk pass.
+
+One grid step = one (batch, chunk, head): computes
+
+    Y = (L ∘ (C B^T)) diag(dt) X,   L[i,j] = exp(sum_{j<k<=i} dt_k A)
+
+entirely in VMEM with two MXU matmuls ((q,n)@(n,q) and (q,q)@(q,p)).
+The inter-chunk recurrence (tiny (h,p,n) state) stays in jnp — it is
+sequential by nature and negligible FLOPs (DESIGN.md §4: the two SSD
+"steps" with a barrier, chunk length = the cost-model tiling knob).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, o_ref, *, chunk: int):
+    x = x_ref[...][0, 0].astype(jnp.float32)        # (q, p)
+    dt = dt_ref[...][0, 0].astype(jnp.float32)      # (q,)
+    bmat = b_ref[...][0, 0].astype(jnp.float32)     # (q, n)
+    cmat = c_ref[...][0, 0].astype(jnp.float32)     # (q, n)
+    a = a_ref[0, 0]                                  # scalar A (per head)
+    da = dt * a                                      # (q,)
+    cs = jnp.cumsum(da)
+    seg = cs[:, None] - cs[None, :]                  # (q, q)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    l_mat = jnp.where(rows >= cols, jnp.exp(seg), 0.0)
+    scores = cmat @ bmat.T                           # (q, q) MXU
+    m = scores * l_mat * dt[None, :]
+    y = m @ x                                        # (q, p) MXU
+    o_ref[...] = y.astype(o_ref.dtype)[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk_pallas(x, dt, b, c, a, *, interpret: bool = False):
+    """x: (B, NC, Q, H, P); dt: (B, NC, Q, H); b/c: (B, NC, Q, N);
+    a: (H,).  Returns Y_intra: (B, NC, Q, H, P)."""
+    bs, nc, q, h, p = x.shape
+    n = b.shape[-1]
+    xt = x.transpose(0, 1, 3, 2, 4).reshape(bs * nc, h, q, p)
+    dtt = dt.transpose(0, 1, 3, 2).reshape(bs * nc, h, q)
+    bt = jnp.broadcast_to(b.reshape(bs * nc, 1, q, n), (bs * nc, 1, q, n))
+    ct = jnp.broadcast_to(c.reshape(bs * nc, 1, q, n), (bs * nc, 1, q, n))
+    a2 = jnp.broadcast_to(a.astype(jnp.float32)[None, :], (1, h))
+    grid = (bs * nc, h)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bs * nc, h, q, p), x.dtype),
+        interpret=interpret,
+    )(xt.reshape(bs * nc, h, q, p), dtt, bt, ct, a2)
+    return out.reshape(bs, nc, h, q, p).transpose(0, 1, 3, 2, 4)

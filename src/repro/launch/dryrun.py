@@ -1,0 +1,328 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the sharding config is coherent at production
+scale (no sharding mismatches, no unsupported collectives, memory fits) and
+extracts the roofline inputs:
+
+  * compiled.memory_analysis()  -> per-device bytes (argument/output/temp)
+  * compiled.cost_analysis()    -> HLO FLOPs + bytes accessed
+  * compiled.as_text()          -> per-collective moved bytes (parsed)
+
+Artifacts land in reports/dryrun/<arch>__<shape>__<mesh>.json; the roofline
+table (EXPERIMENTS.md §Roofline) is generated from them by
+``python -m benchmarks.roofline``.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--and-multi-pod]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, all_configs, get_config, runnable
+from repro.distributed.sharding import (SERVE_RULES, TRAIN_RULES,
+                                        ShardingRules)
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models import transformer as tfm
+from repro.models.params import ParamSpec, abstract, shardings
+from repro.optim.adamw import AdamWConfig
+from repro.serve.engine import abstract_cache, make_decode_step, \
+    make_prefill_step
+from repro.train.step import abstract_batch, make_train_step
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports", "dryrun")
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s64": 8, "u64": 8,
+                "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def parse_collectives(hlo: str) -> list[dict]:
+    """Per-collective: dtype, per-device result elements, group size."""
+    out = []
+    for m in _COLL_RE.finditer(hlo):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n_el = 1
+        for d in dims.split(","):
+            if d:
+                n_el *= int(d)
+        line = m.group(0)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            gsize = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            gsize = int(gi.group(2)) if gi else 2
+        out.append({"kind": kind, "dtype": dt,
+                    "bytes": n_el * _DTYPE_BYTES[dt], "group": gsize})
+    return out
+
+
+def collective_link_bytes(colls: list[dict]) -> float:
+    """Per-chip bytes crossing ICI links (ring cost model, DESIGN.md §8).
+
+    ``bytes`` is the op's per-device RESULT size parsed from the HLO, so
+    ring factors differ per kind: an all-gather result is the big gathered
+    buffer (receive (n-1)/n of it), a reduce-scatter result is the small
+    shard (send (n-1) shards), an all-reduce moves 2(n-1)/n of its buffer.
+    """
+    total = 0.0
+    for c in colls:
+        n = max(c["group"], 2)
+        factor = {"all-gather": (n - 1) / n,
+                  "reduce-scatter": (n - 1),
+                  "all-to-all": (n - 1) / n,
+                  "collective-permute": 1.0,
+                  "all-reduce": 2 * (n - 1) / n}[c["kind"]]
+        total += c["bytes"] * factor
+    return total
+
+
+def _opt_abstract(cfg, params_spec, mesh, rules, opt: AdamWConfig):
+    sdt = jnp.dtype(opt.state_dtype)
+    mu_spec = jax.tree.map(
+        lambda s: ParamSpec(s.shape, s.axes, dtype=opt.state_dtype),
+        params_spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+    sh = shardings(mu_spec, mesh, rules)
+    mu = abstract(mu_spec, sdt, shardings_tree=sh)
+    return {"mu": mu, "nu": mu,
+            "step": jax.ShapeDtypeStruct(
+                (), jnp.int32, sharding=jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec()))}
+
+
+def serve_rules_for(cfg, mesh) -> ShardingRules:
+    """Replicate-vs-FSDP weights at serving time: keep FSDP ("data") on the
+    weights only when TP alone cannot fit them in HBM (cost-model-style
+    decision; llama4-400B needs it, 8B models do not)."""
+    model_ways = mesh.shape.get("model", 1)
+    per_dev = cfg.param_count() * 2 / model_ways
+    if per_dev > 0.5 * HW["hbm_bytes"]:
+        return TRAIN_RULES  # includes fsdp->data
+    return SERVE_RULES
+
+
+def _variant(cfg, k: int):
+    """Same architecture with k pattern units (for scan-cost extrapolation:
+    XLA's cost_analysis counts a while-loop body once, so the full model's
+    FLOPs/bytes/collectives are F(1) + (U-1)*(F(2)-F(1)))."""
+    import dataclasses as dc
+    kw = {"num_layers": k * len(cfg.pattern_unit) + len(cfg.tail),
+          "scan_layers": False}
+    if cfg.encoder:
+        from repro.configs.base import EncoderCfg
+        kw["encoder"] = EncoderCfg(num_layers=k,
+                                   num_frames=cfg.encoder.num_frames)
+    return dc.replace(cfg, **kw)
+
+
+def _build_lowered(cfg, shape, mesh, rules, opt_dtype):
+    """Lower one step function for (cfg, shape) on mesh."""
+    params_spec = tfm.param_specs(cfg)
+    if shape.kind == "train":
+        rules = rules or TRAIN_RULES
+        # bf16 moments when fp32 states cannot fit (the 400B config).
+        if opt_dtype is None:
+            opt_dtype = ("bfloat16" if cfg.param_count() * 16
+                         / mesh.devices.size > 0.6 * HW["hbm_bytes"]
+                         else "float32")
+        opt = AdamWConfig(state_dtype=opt_dtype)
+        psh = shardings(params_spec, mesh, rules)
+        params = abstract(params_spec, jnp.dtype(cfg.dtype),
+                          shardings_tree=psh)
+        opt_state = _opt_abstract(cfg, params_spec, mesh, rules, opt)
+        batch = abstract_batch(cfg, shape, mesh, rules)
+        # Unrolled cost-extrapolation variants run accum=1 so measured
+        # FLOPs are the true whole-batch cost; the real artifact uses the
+        # config's microbatching (what makes the 400B fit per-device HBM).
+        accum = cfg.train_accum if cfg.scan_layers else 1
+        step_fn = make_train_step(cfg, mesh, rules, opt, accum_steps=accum)
+        with mesh:
+            return jax.jit(step_fn, donate_argnums=(0, 1)).lower(
+                params, opt_state, batch)
+    rules = rules or serve_rules_for(cfg, mesh)
+    psh = shardings(params_spec, mesh, rules)
+    params = abstract(params_spec, jnp.dtype(cfg.dtype), shardings_tree=psh)
+    if shape.kind == "prefill":
+        batch = abstract_batch(cfg, shape, mesh, rules)
+        batch.pop("labels")
+        step_fn = make_prefill_step(cfg, mesh, rules)
+        with mesh:
+            return jax.jit(step_fn).lower(params, batch)
+    # decode
+    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len,
+                           mesh, rules)
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    from repro.distributed.sharding import axes_to_spec
+    tok_sh = jax.sharding.NamedSharding(
+        mesh, axes_to_spec(("batch", None), (shape.global_batch, 1),
+                           rules, mesh))
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32,
+                                  sharding=tok_sh)
+    cache_len = jax.ShapeDtypeStruct((), jnp.int32, sharding=repl)
+    step_fn = make_decode_step(cfg, mesh, rules)
+    with mesh:
+        return jax.jit(step_fn, donate_argnums=(1,)).lower(
+            params, cache, tokens, cache_len)
+
+
+def _cost_of(compiled):
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text())
+    return {"flops": cost.get("flops", 0.0),
+            "bytes": cost.get("bytes accessed", 0.0),
+            "link_bytes": collective_link_bytes(colls),
+            "colls": colls}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               opt_dtype: str | None = None, rules=None,
+               extrapolate: bool = True, cfg=None, tag: str | None = None):
+    """Lower + compile one cell; returns the report dict."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = runnable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "why": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+
+    t0 = time.time()
+    lowered = _build_lowered(cfg, shape, mesh, rules, opt_dtype)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    full = _cost_of(compiled)
+
+    # Scan-body extrapolation: compile 1-unit and 2-unit variants; the
+    # full model's FLOPs/bytes/link-bytes = F1 + (U-1)*(F2-F1).
+    u = cfg.num_units
+    extra = {}
+    if extrapolate and u > 2:
+        f1 = _cost_of(_build_lowered(_variant(cfg, 1), shape, mesh, rules,
+                                     opt_dtype).compile())
+        f2 = _cost_of(_build_lowered(_variant(cfg, 2), shape, mesh, rules,
+                                     opt_dtype).compile())
+        for key in ("flops", "bytes", "link_bytes"):
+            per_unit = max(0.0, f2[key] - f1[key])
+            extra[key] = f1[key] + (u - 1) * per_unit
+        extra["per_unit_flops"] = max(0.0, f2["flops"] - f1["flops"])
+    else:
+        extra = {k: full[k] for k in ("flops", "bytes", "link_bytes")}
+        extra["per_unit_flops"] = 0.0
+
+    report = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "kind": shape.kind,
+        "devices": int(mesh.devices.size),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": extra["flops"],
+        "bytes_accessed_per_device": extra["bytes"],
+        "flops_per_device_raw": full["flops"],
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "collectives": {
+            "count": len(full["colls"]),
+            "per_chip_link_bytes": extra["link_bytes"],
+            "per_chip_link_bytes_raw": full["link_bytes"],
+            "by_kind": _by_kind(full["colls"]),
+        },
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "tokens": (shape.global_batch * shape.seq_len
+                   if shape.kind != "decode" else shape.global_batch),
+    }
+    if tag:
+        report["tag"] = tag
+    return report
+
+
+def _by_kind(colls):
+    out: dict = {}
+    for c in colls:
+        k = out.setdefault(c["kind"], {"count": 0, "bytes": 0})
+        k["count"] += 1
+        k["bytes"] += c["bytes"]
+    return out
+
+
+def save_report(rep: dict):
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    name = f"{rep['arch']}__{rep['shape']}__{rep.get('mesh', 'skip')}.json"
+    with open(os.path.join(REPORT_DIR, name), "w") as f:
+        json.dump(rep, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--and-multi-pod", action="store_true",
+                    help="run each cell on both meshes")
+    args = ap.parse_args()
+
+    cells = []
+    archs = [args.arch] if args.arch else list(all_configs())
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+    meshes = [args.multi_pod] if not args.and_multi_pod else [False, True]
+    failures = 0
+    for a, s in cells:
+        for mp in meshes:
+            tag = f"{a} x {s} [{'2x16x16' if mp else '16x16'}]"
+            try:
+                rep = lower_cell(a, s, multi_pod=mp)
+                save_report(rep)
+                if rep["status"] == "skipped":
+                    print(f"SKIP {tag}: {rep['why']}")
+                    break  # same skip on both meshes
+                m = rep["memory"]
+                per_dev_gb = (m["argument_bytes"] + m["temp_bytes"]
+                              + m["output_bytes"] - m["alias_bytes"]) / 2**30
+                print(f"OK   {tag}: compile={rep['compile_s']}s "
+                      f"flops/dev={rep['flops_per_device']:.3e} "
+                      f"mem/dev={per_dev_gb:.2f}GiB "
+                      f"coll={rep['collectives']['count']}")
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures += 1
+                print(f"FAIL {tag}: {type(e).__name__}: {e}")
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

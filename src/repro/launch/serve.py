@@ -1,0 +1,54 @@
+"""Serving driver: batched greedy generation on a smoke-scale model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2_2_7b --smoke \
+      --prompt-len 32 --new-tokens 32 --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, reduced
+    from repro.models import transformer as tfm
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config(args.arch.replace("-", "_"))
+    if args.smoke:
+        cfg = reduced(cfg)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(
+        0, cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32))
+    enc = None
+    if cfg.encoder:
+        enc = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.encoder.num_frames, cfg.d_model)) * 0.02,
+            dtype=jnp.dtype(cfg.dtype))
+    engine = ServeEngine(cfg, params,
+                         max_seq=args.prompt_len + args.new_tokens + 8)
+    t0 = time.time()
+    out = engine.generate(prompts, args.new_tokens, enc_frames=enc)
+    jax.block_until_ready(out)
+    dt = time.time() - t0
+    n_new = args.batch * args.new_tokens
+    print(f"arch={cfg.name} generated {out.shape} in {dt:.2f}s "
+          f"({n_new / dt:.1f} tok/s incl. compile)")
+    print("sample:", np.asarray(out[0, :16]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""GQA attention: qk-norm / qkv-bias variants, causal, cross, and decode.
+
+The jnp path here is the distribution/dry-run path; the Pallas flash
+kernel (``repro.kernels.flash_attn``) is the TPU compute path, selected by
+``cfg.use_pallas`` and validated against this math in tests.
+
+Sharding: q/k/v activations carry logical axes ("batch","seq","heads"/
+"kv_heads","head_dim"); on archs whose head counts don't divide the model
+axis, the rule engine falls through to sequence or head_dim sharding
+(see repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.params import ParamSpec
+from .core import apply_rope, rmsnorm, rmsnorm_spec
+
+NEG_INF = jnp.float32(-1e9)
+
+
+def attn_specs(cfg, *, cross: bool = False) -> dict:
+    d, h, kv, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.resolved_head_dim)
+    out = {
+        "wq": ParamSpec((d, h, hd), ("fsdp", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), ("fsdp", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), ("fsdp", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "fsdp")),
+    }
+    if cfg.qkv_bias and not cross:
+        out["bq"] = ParamSpec((h, hd), ("heads", "head_dim"), init="zeros")
+        out["bk"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"),
+                              init="zeros")
+        out["bv"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"),
+                              init="zeros")
+    if cfg.qk_norm and not cross:
+        out["q_norm"] = rmsnorm_spec(hd)
+        out["k_norm"] = rmsnorm_spec(hd)
+    return out
+
+
+def _project_qkv(params, cfg, x, positions, *, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if "q_norm" in params:
+        q = rmsnorm(q, params["q_norm"], cfg.rms_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.rms_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", "head_dim")
+    k = shard(k, "batch", None, "kv_heads", "head_dim")
+    v = shard(v, "batch", None, "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, num_kv: int):
+    """Grouped scaled-dot-product attention (single shot).
+
+    q: (B, Sq, H, D); k/v: (B, Sk, KV, D); mask: broadcastable to
+    (B, 1, 1, Sq, Sk) or None.
+    """
+    b, sq, h, d = q.shape
+    g = h // num_kv
+    qg = q.reshape(b, sq, num_kv, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, sq, h, d)
+
+
+def _sdpa_chunked(q, k, v, num_kv: int, *, causal: bool, q_block: int):
+    """Q-chunked attention: scores exist only (B, H, q_block, Sk) at a time
+    (the jnp analogue of the flash kernel's tiling — required for the 32k
+    prefill cells; see DESIGN.md §6)."""
+    b, sq, h, d = q.shape
+    if sq % q_block != 0 or sq <= q_block:
+        mask = None
+        if causal:
+            i = jnp.arange(sq)
+            mask = (i[:, None] >= i[None, :])[None, None, None]
+        return _sdpa(q, k, v, mask, num_kv)
+    nb = sq // q_block
+    qb = q.reshape(b, nb, q_block, h, d).transpose(1, 0, 2, 3, 4)
+    sk = k.shape[1]
+
+    def one_block(i, qblk):
+        mask = None
+        if causal:
+            rows = i * q_block + jnp.arange(q_block)
+            mask = (rows[:, None] >= jnp.arange(sk)[None, :])[None, None,
+                                                              None]
+        return _sdpa(qblk, k, v, mask, num_kv)
+
+    # Per-block remat: the backward recomputes each block's scores instead
+    # of saving (B,H,q_block,Sk) softmax residuals for every block (the
+    # flash-attention recompute strategy, in jnp form).
+    one_block = jax.checkpoint(
+        one_block, policy=jax.checkpoint_policies.nothing_saveable)
+    out = jax.lax.map(lambda iq: one_block(iq[0], iq[1]),
+                      (jnp.arange(nb), qb))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+
+
+ATTN_Q_BLOCK = 128
+
+
+def attention(params: dict, cfg, x: jax.Array, positions: jax.Array,
+              *, causal: bool = True) -> jax.Array:
+    """Full-sequence attention (train / prefill)."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = _sdpa_chunked(q, k, v, cfg.num_kv_heads, causal=causal,
+                        q_block=ATTN_Q_BLOCK)
+    out = shard(out, "batch", None, "heads", "head_dim")
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), (k, v)
+
+
+def cross_attention(params: dict, cfg, x: jax.Array,
+                    kv_cache: tuple[jax.Array, jax.Array]) -> jax.Array:
+    """Decoder-side cross attention over precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q = shard(q, "batch", None, "heads", "head_dim")
+    k, v = kv_cache
+    out = _sdpa(q, k, v, None, cfg.num_kv_heads)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def cross_kv(params: dict, enc_out: jax.Array):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"])
+    return (shard(k, "batch", "seq", "kv_heads", "head_dim"),
+            shard(v, "batch", "seq", "kv_heads", "head_dim"))
+
+
+def decode_attention(params: dict, cfg, x: jax.Array, k_cache: jax.Array,
+                     v_cache: jax.Array, cache_len: jax.Array):
+    """One-token attention against a KV cache.
+
+    x: (B, 1, d).  k_cache/v_cache: (B, S_max, KV, D) — sequence-sharded
+    when KV heads don't divide the model axis (flash-decode combine is
+    inserted by SPMD).  Returns (out, new_k_cache, new_v_cache).
+    """
+    b, smax = k_cache.shape[0], k_cache.shape[1]
+    positions = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), cache_len, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), cache_len, axis=1)
+    k_cache = shard(k_cache, "batch", "cache_seq", "kv_heads", "head_dim")
+    v_cache = shard(v_cache, "batch", "cache_seq", "kv_heads", "head_dim")
+    mask = (jnp.arange(smax) <= cache_len)[None, None, None, None, :]
+    out = _sdpa(q, k_cache, v_cache, mask, cfg.num_kv_heads)
+    return (jnp.einsum("bshk,hkd->bsd", out, params["wo"]),
+            k_cache, v_cache)

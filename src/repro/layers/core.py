@@ -1,0 +1,91 @@
+"""Shared primitive layers: RMSNorm, RoPE, SwiGLU MLP, embeddings.
+
+Pure functions over explicit parameter dicts (specs in sibling ``specs``
+functions).  All norm math in float32, outputs cast back to model dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.params import ParamSpec
+
+
+# -- RMSNorm ----------------------------------------------------------------
+
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), (None,), init="ones", dtype="float32")
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * weight
+    return y.astype(x.dtype)
+
+
+# -- RoPE ---------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- SwiGLU MLP ----------------------------------------------------------------
+
+def mlp_specs(d: int, f: int) -> dict:
+    return {
+        "wi_gate": ParamSpec((d, f), ("fsdp", "mlp")),
+        "wi_up": ParamSpec((d, f), ("fsdp", "mlp")),
+        "wo": ParamSpec((f, d), ("mlp", "fsdp")),
+    }
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    gate = jnp.einsum("bsd,df->bsf", x, params["wi_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, params["wi_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"])
+
+
+# -- Embedding / logits ---------------------------------------------------------
+
+def embed_specs(cfg) -> dict:
+    pv, d = cfg.padded_vocab, cfg.d_model
+    out = {"embedding": ParamSpec((pv, d), ("vocab", "fsdp"), scale=1.0)}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ParamSpec((d, pv), ("fsdp", "vocab"))
+    return out
+
+
+def embed(params: dict, tokens: jax.Array, dtype) -> jax.Array:
+    h = params["embedding"].astype(dtype)[tokens]
+    return shard(h, "batch", "seq", None)
+
+
+def logits_fn(params: dict, h: jax.Array, vocab_size: int) -> jax.Array:
+    if "lm_head" in params:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embedding"])
+    logits = shard(logits, "batch", "seq", "vocab")
+    pv = logits.shape[-1]
+    if pv > vocab_size:  # mask vocab padding out of the softmax
+        mask = jnp.arange(pv) >= vocab_size
+        logits = jnp.where(mask, jnp.float32(-1e9).astype(logits.dtype),
+                           logits)
+    return logits

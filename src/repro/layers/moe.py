@@ -1,0 +1,169 @@
+"""Mixture-of-Experts FFN with two dispatch engines.
+
+1. ``dense``  — GSPMD-friendly one-hot dispatch (grouped tokens, capacity
+   factor), the pjit baseline used by the dry-run.  Dispatch/combine are
+   einsums, so expert parallelism is plain sharding: experts over the
+   "model" axis when divisible (llama4: 128/16), else TP over the expert
+   FFN dim (granite: 40 experts -> "expert_mlp").
+
+2. ``sorted`` — the paper's radix-partition dispatch (DESIGN.md §3.1):
+   routing tokens to experts IS partitioning step n1..n3 — expert id =
+   partition number (n1), expert load histogram + scan-allocated offsets
+   (n2), scatter into expert buffers (n3), with capacity overflow dropped
+   exactly like the allocator's spill.  Used by examples/tests and as the
+   §Perf alternative for dispatch-dominated cells.
+
+Both produce identical outputs for the same routing (asserted in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.params import ParamSpec
+
+
+def moe_specs(cfg) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    out = {
+        "router": ParamSpec((d, m.num_experts), ("fsdp", None)),
+        "wi_gate": ParamSpec((m.num_experts, d, m.d_ff),
+                             ("experts", "fsdp", "expert_mlp")),
+        "wi_up": ParamSpec((m.num_experts, d, m.d_ff),
+                           ("experts", "fsdp", "expert_mlp")),
+        "wo": ParamSpec((m.num_experts, m.d_ff, d),
+                        ("experts", "expert_mlp", "fsdp")),
+    }
+    if m.shared_d_ff:
+        from .core import mlp_specs
+        out["shared"] = mlp_specs(d, m.shared_d_ff)
+    return out
+
+
+def _capacity(tokens_per_group: int, m) -> int:
+    c = -(-int(tokens_per_group * m.top_k * m.capacity_factor)
+          // m.num_experts)
+    if c >= 48:
+        # Large capacities round to 64 so the capacity dim stays shardable
+        # over the 16-way model axis (used when experts don't divide it).
+        return ((c + 63) // 64) * 64
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def _route(params, m, xg):
+    """Router: top-k experts + normalized weights per token.
+
+    xg: (G, T, d) grouped tokens.  Returns (expert_idx (G,T,k),
+    weights (G,T,k), router_probs (G,T,E))."""
+    logits = jnp.einsum("gtd,de->gte", xg,
+                        params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    wk, idx = jax.lax.top_k(probs, m.top_k)
+    wk = wk / jnp.maximum(wk.sum(-1, keepdims=True), 1e-9)
+    return idx, wk.astype(xg.dtype), probs
+
+
+def _experts_ffn(params, expert_in):
+    """expert_in: (G, E, C, d) -> (G, E, C, d)."""
+    gate = jnp.einsum("gecd,edf->gecf", expert_in, params["wi_gate"])
+    up = jnp.einsum("gecd,edf->gecf", expert_in, params["wi_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(expert_in.dtype) * up
+    h = shard(h, "moe_group", "experts", "expert_cap", "expert_mlp")
+    return jnp.einsum("gecf,efd->gecd", h, params["wo"])
+
+
+def _aux_loss(probs, expert_idx, num_experts):
+    """Switch-style load-balance loss: E * sum_e f_e * P_e."""
+    f = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], num_experts,
+                                dtype=jnp.float32), axis=(0, 1))
+    p = jnp.mean(probs, axis=(0, 1))
+    return num_experts * jnp.sum(f * p)
+
+
+def _group_len(n: int, pref: int) -> int:
+    """Largest divisor of n that is <= pref (dispatch group length)."""
+    for t in range(min(pref, n), 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+def moe_dense(params: dict, cfg, x: jax.Array):
+    """GSPMD one-hot dispatch.  x: (B, S, d) -> (B, S, d), aux loss."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = _group_len(b * s, m.group_size)
+    g = (b * s) // t
+    xg = x.reshape(g, t, d)
+    xg = shard(xg, "moe_group", None, None)
+    idx, wk, probs = _route(params, m, xg)
+    cap = _capacity(t, m)
+    e = m.num_experts
+    # Position of each (token, slot) within its expert's capacity buffer.
+    oh = jax.nn.one_hot(idx, e, dtype=jnp.int32)        # (G,T,K,E)
+    oh_flat = oh.transpose(0, 2, 1, 3).reshape(g, m.top_k * t, e)
+    pos_flat = jnp.cumsum(oh_flat, axis=1) - oh_flat    # rank within expert
+    pos = pos_flat.reshape(g, m.top_k, t, e).transpose(0, 2, 1, 3)
+    pos = (pos * oh).sum(-1)                             # (G,T,K)
+    keep = pos < cap
+    # Dispatch/combine tensors (G,T,E,C).
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=x.dtype) * keep[..., None]
+    disp = jnp.einsum("gtke,gtkc->gtec", oh.astype(x.dtype), pos_oh)
+    comb = jnp.einsum("gtke,gtkc->gtec", oh.astype(x.dtype),
+                      pos_oh * wk[..., None])
+    disp = shard(disp, "moe_group", None, "experts", "expert_cap")
+    expert_in = jnp.einsum("gtec,gtd->gecd", disp, xg)
+    expert_in = shard(expert_in, "moe_group", "experts", "expert_cap", None)
+    expert_out = _experts_ffn(params, expert_in)
+    out = jnp.einsum("gtec,gecd->gtd", comb, expert_out)
+    if "shared" in params:
+        from .core import mlp
+        out = out + mlp(params["shared"], xg)
+    return out.reshape(b, s, d), _aux_loss(probs, idx, e)
+
+
+def moe_sorted(params: dict, cfg, x: jax.Array):
+    """Radix-partition dispatch (the paper's n1..n3 on expert ids)."""
+    from repro.core.partition import partition_n2
+    m = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    xf = x.reshape(n, d)
+    idx, wk, probs = _route(params, m, xf[None])          # treat as 1 group
+    idx, wk = idx[0], wk[0]                               # (N,K)
+    e = m.num_experts
+    cap = _capacity(n, m)
+    # n1: partition number = expert id, one entry per (token, slot) —
+    # slot-major order so capacity drops match moe_dense's priority.
+    pid = idx.T.reshape(-1)                               # (K*N,)
+    tok = jnp.tile(jnp.arange(n, dtype=jnp.int32), m.top_k)
+    w = wk.T.reshape(-1)
+    # n2: expert headers — histogram + scan allocation.
+    starts, counts = partition_n2(pid, e)
+    # n3: scatter <token, weight> into the expert's capacity buffer.
+    order = jnp.argsort(pid, stable=True)
+    rank = jnp.arange(n * m.top_k, dtype=jnp.int32) - starts[pid[order]]
+    keep = rank < cap
+    slot = jnp.where(keep, pid[order] * cap + rank, e * cap)  # spill -> drop
+    buf_tok = jnp.full((e * cap + 1,), 0, jnp.int32).at[slot].set(tok[order])
+    buf_valid = jnp.zeros((e * cap + 1,), jnp.bool_).at[slot].set(keep)
+    expert_in = jnp.where(buf_valid[:e * cap, None], xf[buf_tok[:e * cap]],
+                          0).reshape(1, e, cap, d)
+    expert_out = _experts_ffn(params, expert_in).reshape(e * cap, d)
+    # combine: gather each kept (token, slot)'s output back, weighted.
+    contrib = jnp.where(keep[:, None],
+                        expert_out[jnp.clip(slot, 0, e * cap - 1)], 0)
+    out = jnp.zeros((n, d), x.dtype).at[tok[order]].add(
+        contrib * w[order][:, None])
+    if "shared" in params:
+        from .core import mlp
+        out = out + mlp(params["shared"], xf[None]).reshape(n, d)
+    return out.reshape(b, s, d), _aux_loss(probs, idx[None], e)
+
+
+def moe(params: dict, cfg, x: jax.Array):
+    if cfg.moe_impl == "sorted":
+        return moe_sorted(params, cfg, x)
+    return moe_dense(params, cfg, x)

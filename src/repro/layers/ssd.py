@@ -1,0 +1,189 @@
+"""Mamba2 block via SSD (state-space duality), chunked for the MXU.
+
+The chunked SSD algorithm (Dao & Gu, arXiv:2405.21060) splits the sequence
+into chunks of length Q:
+
+  intra-chunk (quadratic, MXU-friendly):  Y_intra = (L ∘ (C B^T)) X
+  inter-chunk (linear recurrence):        h_{c+1} = decay_c h_c + S_c
+                                          Y_inter = C h
+
+which is the paper-series structure of DESIGN.md §4: two "steps" with a
+barrier, with the chunk length Q as the tiling knob the cost model sizes
+(the Pallas kernel in repro.kernels.ssd tiles exactly these einsums).
+
+Decode is the O(1) recurrent form: h = a h + dt x B^T; y = C h + D x.
+
+Layout: x (B, L, H, P) heads sharded over "model" (ssm_heads); state
+(B, H, P, N) likewise — long_500k decode state is sequence-length free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.params import ParamSpec
+from .core import rmsnorm, rmsnorm_spec
+
+
+def ssd_specs(cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    return {
+        "in_x": ParamSpec((d, d_in), ("fsdp", "mlp")),
+        "in_z": ParamSpec((d, d_in), ("fsdp", "mlp")),
+        "in_b": ParamSpec((d, s.d_state), ("fsdp", "ssm_state")),
+        "in_c": ParamSpec((d, s.d_state), ("fsdp", "ssm_state")),
+        "in_dt": ParamSpec((d, nh), ("fsdp", "ssm_heads")),
+        "conv_x": ParamSpec((s.conv_kernel, d_in), ("conv", "mlp"),
+                            scale=0.5),
+        "conv_b": ParamSpec((s.conv_kernel, s.d_state), ("conv", None),
+                            scale=0.5),
+        "conv_c": ParamSpec((s.conv_kernel, s.d_state), ("conv", None),
+                            scale=0.5),
+        "A_log": ParamSpec((nh,), ("ssm_heads",), init="zeros",
+                           dtype="float32"),
+        "D": ParamSpec((nh,), ("ssm_heads",), init="ones", dtype="float32"),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="zeros",
+                             dtype="float32"),
+        "norm": rmsnorm_spec(d_in),
+        "out": ParamSpec((d_in, d), ("mlp", "fsdp")),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x: (B, L, D); w: (K, D).
+
+    With ``state`` (B, K-1, D) performs streaming conv (decode), returning
+    the updated state."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, xp.shape[1] - (k - 1):]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _segsum(a):
+    """Stable segment-sum: S[i, j] = sum_{j < k <= i} a[k] (lower tri)."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x: (b, l, h, p); dt: (b, l, h) (post-softplus); A: (h,) negative;
+    B, C: (b, l, n).  Returns y: (b, l, h, p) and final state (b, h, p, n).
+    """
+    b, l0, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, l0)
+    pad = (-l0) % q
+    if pad:
+        # Zero-pad the tail: dt=0 makes padded steps identity transitions
+        # (decay exp(0)=1, contribution dt*B*x=0), so the state is exact.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    l = l0 + pad
+    nc = l // q
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, q, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, q, n).astype(jnp.float32)
+    da = dtc * A  # (b, nc, q, h)  log-decay per step
+
+    # -- intra-chunk (quadratic in q, runs on the MXU) --------------------
+    L = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))        # (b,nc,h,q,q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)        # (b,nc,q,q)
+    M = scores[:, :, None] * L                            # (b,nc,h,q,q)
+    y_intra = jnp.einsum("bchqk,bckh,bckhp->bcqhp", M, dtc,
+                         xc.astype(jnp.float32))
+
+    # -- chunk states + inter-chunk recurrence (lax.scan over chunks) ----
+    suffix_incl = jnp.cumsum(da[..., ::-1, :], axis=2)[..., ::-1, :]
+    decay_to_end = jnp.exp(suffix_incl - da)   # exclusive suffix decay
+    S = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, dtc * decay_to_end,
+                   xc.astype(jnp.float32))                # per-chunk state
+    chunk_decay = jnp.exp(da.sum(axis=2))                 # (b,nc,h)
+
+    def scan_fn(h0, inp):
+        s_c, dec = inp                                    # (b,h,p,n),(b,h)
+        h1 = h0 * dec[..., None, None] + s_c
+        return h1, h0
+
+    h_final, h_prev = jax.lax.scan(
+        scan_fn, jnp.zeros((b, h, p, n), jnp.float32),
+        (S.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)              # (b,nc,h,p,n)
+
+    decay_from_start = jnp.exp(jnp.cumsum(da, axis=2))    # (b,nc,q,h)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, decay_from_start,
+                         h_prev)
+    y = (y_intra + y_inter).reshape(b, l, h, p)[:, :l0]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(x, dt, A, B, C, h):
+    """One-token recurrence.  x: (b, h, p); B, C: (b, n); h: (b,h,p,n)."""
+    da = jnp.exp(dt.astype(jnp.float32) * A)              # (b, h)
+    h = h * da[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt.astype(jnp.float32), x.astype(jnp.float32), B.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h, C.astype(jnp.float32))
+    return y.astype(x.dtype), h
+
+
+def mamba_block(params: dict, cfg, x: jax.Array, state: dict | None = None):
+    """Full Mamba2 block.  x: (B, L, d).
+
+    ``state`` (decode): {"ssm": (B,H,P,N), "conv_x": (B,K-1,Din),
+    "conv_b": (B,K-1,N), "conv_c": (B,K-1,N)}.  Returns (y, new_state).
+    """
+    s = cfg.ssm
+    bsz, l, d = x.shape
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    decode = state is not None
+
+    z = jnp.einsum("bld,de->ble", x, params["in_z"])
+    xs = jnp.einsum("bld,de->ble", x, params["in_x"])
+    Braw = jnp.einsum("bld,dn->bln", x, params["in_b"])
+    Craw = jnp.einsum("bld,dn->bln", x, params["in_c"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x, params["in_dt"]).astype(jnp.float32)
+        + params["dt_bias"])
+
+    xs, cx = _causal_conv(xs, params["conv_x"],
+                          state["conv_x"] if decode else None)
+    Bv, cb = _causal_conv(Braw, params["conv_b"],
+                          state["conv_b"] if decode else None)
+    Cv, cc = _causal_conv(Craw, params["conv_c"],
+                          state["conv_c"] if decode else None)
+    xs = shard(xs, "batch", "seq", "mlp")
+    A = -jnp.exp(params["A_log"])                          # (h,) negative
+    xh = xs.reshape(bsz, l, nh, s.head_dim)
+    xh = shard(xh, "batch", "seq", "ssm_heads", None)
+
+    if decode:
+        y1, h1 = ssd_decode_step(xh[:, 0], dt[:, 0], A, Bv[:, 0], Cv[:, 0],
+                                 state["ssm"])
+        y = y1[:, None]
+        new_state = {"ssm": h1, "conv_x": cx, "conv_b": cb, "conv_c": cc}
+    else:
+        y, h1 = ssd_chunked(xh, dt, A, Bv, Cv, cfg.ssm.chunk)
+        new_state = {"ssm": h1, "conv_x": cx, "conv_b": cb, "conv_c": cc}
+    y = y + xh * params["D"][:, None].astype(x.dtype)
+    y = y.reshape(bsz, l, d_in)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                params["norm"], cfg.rms_eps)
+    return jnp.einsum("ble,ed->bld", y, params["out"]), new_state

@@ -1,0 +1,83 @@
+"""Parameter specs: single source of truth for shapes, init and sharding.
+
+A model is described once as a tree of ``ParamSpec``; from it we derive
+  * materialized parameters (``materialize`` — jax.random, for real runs),
+  * abstract parameters (``abstract`` — ShapeDtypeStruct, for the dry-run:
+    no allocation ever happens for the full-size configs),
+  * shardings (``shardings`` — NamedSharding via the logical-axis engine).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingRules, axes_to_spec
+from jax.sharding import Mesh, NamedSharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]     # logical axes, len == len(shape)
+    init: str = "normal"             # normal | zeros | ones | scaled
+    scale: float | None = None       # stddev override
+    dtype: str | None = None         # override model dtype (e.g. f32 norms)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # weights are (in_dims..., out_dims...); use the leading dim product
+    # heuristic: all dims except the last group. For 2D (in, out) -> in.
+    return int(np.prod(shape[:-1])) if len(shape) > 1 else int(shape[0])
+
+
+def materialize(spec_tree, key: jax.Array, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dt = jnp.dtype(spec.dtype) if spec.dtype else dtype
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dt))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dt))
+        else:
+            scale = spec.scale if spec.scale is not None \
+                else 1.0 / max(1.0, _fan_in(spec.shape)) ** 0.5
+            out.append((jax.random.normal(k, spec.shape, jnp.float32)
+                        * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(spec_tree, dtype=jnp.bfloat16, *, shardings_tree=None):
+    """ShapeDtypeStruct tree (optionally carrying shardings for .lower)."""
+    if shardings_tree is None:
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.dtype(s.dtype) if s.dtype else dtype),
+            spec_tree, is_leaf=_is_spec)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(
+            s.shape, jnp.dtype(s.dtype) if s.dtype else dtype, sharding=sh),
+        spec_tree, shardings_tree, is_leaf=_is_spec)
+
+
+def shardings(spec_tree, mesh: Mesh, rules: ShardingRules):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh,
+                                axes_to_spec(s.axes, s.shape, rules, mesh)),
+        spec_tree, is_leaf=_is_spec)
+
+
+def spec_bytes(spec_tree, bytes_per_el: int = 2) -> int:
+    return sum(int(np.prod(s.shape)) * bytes_per_el
+               for s in jax.tree.leaves(spec_tree, is_leaf=_is_spec))

@@ -1,0 +1,343 @@
+"""Decoder-LM assembly for all 10 architectures (+ enc-dec wrapper).
+
+The model is one ``lax.scan`` over stacked *pattern units* (configs/base.py)
+with optional unrolled tail blocks — compile time stays O(unit), not
+O(layers), which is what makes the 40-cell dry-run tractable.
+
+Three entry modes:
+  * ``forward_train`` — full-sequence causal, returns (logits, aux_loss)
+  * ``prefill``       — same math, also returns the serving cache
+  * ``decode_step``   — one token against the cache (KV / SSM state)
+
+Everything (params, caches) is specified as ParamSpec trees first, so the
+dry-run can lower any architecture at full scale without allocating.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.layers import attention as attn
+from repro.layers import moe as moe_lib
+from repro.layers import ssd
+from repro.layers.core import (embed, embed_specs, logits_fn, mlp, mlp_specs,
+                               rmsnorm, rmsnorm_spec)
+from .params import ParamSpec, abstract, materialize
+
+
+# --------------------------------------------------------------------------
+# Parameter specs.
+# --------------------------------------------------------------------------
+
+def block_specs(cfg: ModelConfig, char: str, *, cross: bool = False) -> dict:
+    if char == "M":
+        return {"ln": rmsnorm_spec(cfg.d_model),
+                "mamba": ssd.ssd_specs(cfg)}
+    out = {
+        "ln1": rmsnorm_spec(cfg.d_model),
+        "attn": attn.attn_specs(cfg),
+        "ln2": rmsnorm_spec(cfg.d_model),
+    }
+    if char == "E":
+        out["moe"] = moe_lib.moe_specs(cfg)
+    else:
+        out["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff)
+    if cross:
+        out["ln_cross"] = rmsnorm_spec(cfg.d_model)
+        out["cross"] = attn.attn_specs(cfg, cross=True)
+    return out
+
+
+def _stack(spec_tree, n: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes,
+                            init=s.init, scale=s.scale, dtype=s.dtype),
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    cross = cfg.is_enc_dec
+    specs: dict = {"embed": embed_specs(cfg),
+                   "final_norm": rmsnorm_spec(cfg.d_model)}
+    unit = {f"{j}{c}": block_specs(cfg, c, cross=cross)
+            for j, c in enumerate(cfg.pattern_unit)}
+    specs["unit"] = _stack(unit, cfg.num_units)
+    if cfg.tail:
+        specs["tail"] = {f"{j}{c}": block_specs(cfg, c, cross=cross)
+                         for j, c in enumerate(cfg.tail)}
+    if cfg.encoder:
+        enc_unit = {"0D": block_specs(cfg, "D")}
+        specs["encoder"] = {"unit": _stack(enc_unit, cfg.encoder.num_layers),
+                            "final_norm": rmsnorm_spec(cfg.d_model)}
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return materialize(param_specs(cfg), key, jnp.dtype(cfg.dtype))
+
+
+def abstract_params(cfg: ModelConfig, shardings_tree=None):
+    return abstract(param_specs(cfg), jnp.dtype(cfg.dtype),
+                    shardings_tree=shardings_tree)
+
+
+# --------------------------------------------------------------------------
+# Cache specs (serving).
+# --------------------------------------------------------------------------
+
+def _block_cache_specs(cfg: ModelConfig, char: str, batch: int, s_max: int,
+                       *, cross: bool = False) -> dict:
+    if char == "M":
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        nh = d_in // s.head_dim
+        k = s.conv_kernel
+        return {
+            "ssm": ParamSpec((batch, nh, s.head_dim, s.d_state),
+                             ("batch", "ssm_heads", None, None),
+                             init="zeros", dtype="float32"),
+            "conv_x": ParamSpec((batch, k - 1, d_in),
+                                ("batch", None, "mlp"), init="zeros"),
+            "conv_b": ParamSpec((batch, k - 1, s.d_state),
+                                ("batch", None, None), init="zeros"),
+            "conv_c": ParamSpec((batch, k - 1, s.d_state),
+                                ("batch", None, None), init="zeros"),
+        }
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    out = {"k": ParamSpec((batch, s_max, kv, hd),
+                          ("batch", "cache_seq", "kv_heads", "head_dim"),
+                          init="zeros"),
+           "v": ParamSpec((batch, s_max, kv, hd),
+                          ("batch", "cache_seq", "kv_heads", "head_dim"),
+                          init="zeros")}
+    if cross:
+        f = cfg.encoder.num_frames
+        out["ck"] = ParamSpec((batch, f, kv, hd),
+                              ("batch", None, "kv_heads", "head_dim"),
+                              init="zeros")
+        out["cv"] = ParamSpec((batch, f, kv, hd),
+                              ("batch", None, "kv_heads", "head_dim"),
+                              init="zeros")
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    cross = cfg.is_enc_dec
+    unit = {f"{j}{c}": _block_cache_specs(cfg, c, batch, s_max, cross=cross)
+            for j, c in enumerate(cfg.pattern_unit)}
+    specs = {"unit": _stack(unit, cfg.num_units)}
+    if cfg.tail:
+        specs["tail"] = {f"{j}{c}": _block_cache_specs(cfg, c, batch, s_max,
+                                                       cross=cross)
+                         for j, c in enumerate(cfg.tail)}
+    return specs
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    return materialize(cache_specs(cfg, batch, s_max),
+                       jax.random.PRNGKey(0), jnp.dtype(cfg.dtype))
+
+
+# --------------------------------------------------------------------------
+# Block forward.
+# --------------------------------------------------------------------------
+
+def _block_fwd(char: str, params: dict, cfg: ModelConfig, h: jax.Array,
+               positions, mode: str, cache: dict | None,
+               cache_len, enc_out):
+    """One block.  Returns (h, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    new_cache: dict = {}
+    if char == "M":
+        state = None
+        if mode == "decode":
+            state = {k: cache[k] for k in
+                     ("ssm", "conv_x", "conv_b", "conv_c")}
+        x = rmsnorm(h, params["ln"], cfg.rms_eps)
+        # SP boundary: gather the sequence for the mixer, scatter after.
+        x = shard(x, "batch", None, None)
+        y, st = ssd.mamba_block(params["mamba"], cfg, x, state)
+        y = shard(y, "batch", "seq", None)
+        h = h + y
+        new_cache = st
+        return h, new_cache, aux
+
+    x = rmsnorm(h, params["ln1"], cfg.rms_eps)
+    # SP boundary (Megatron-SP): residual stream stays sequence-sharded;
+    # attention sees the gathered sequence, its output reduce-scatters.
+    x = shard(x, "batch", None, None)
+    if mode == "decode":
+        y, k_c, v_c = attn.decode_attention(params["attn"], cfg, x,
+                                            cache["k"], cache["v"], cache_len)
+        new_cache = {"k": k_c, "v": v_c}
+        if "cross" in params:
+            xc = rmsnorm(h + y, params["ln_cross"], cfg.rms_eps)
+            y = y + attn.cross_attention(params["cross"], cfg, xc,
+                                         (cache["ck"], cache["cv"]))
+            new_cache["ck"], new_cache["cv"] = cache["ck"], cache["cv"]
+    else:
+        y, (k_c, v_c) = attn.attention(params["attn"], cfg, x, positions,
+                                       causal=(mode != "encode"))
+        if mode == "prefill":
+            new_cache = {"k": k_c, "v": v_c}
+        if "cross" in params and enc_out is not None:
+            ckv = attn.cross_kv(params["cross"], enc_out)
+            xc = rmsnorm(h + y, params["ln_cross"], cfg.rms_eps)
+            y = y + attn.cross_attention(params["cross"], cfg, xc, ckv)
+            if mode == "prefill":
+                new_cache["ck"], new_cache["cv"] = ckv
+    y = shard(y, "batch", "seq", None)
+    h = h + y
+    x2 = rmsnorm(h, params["ln2"], cfg.rms_eps)
+    if char == "E":
+        y2, aux = moe_lib.moe(params["moe"], cfg, x2)
+    else:
+        y2 = mlp(params["mlp"], x2)
+    return h + y2, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# Stacks.
+# --------------------------------------------------------------------------
+
+def _run_stack(params: dict, cfg: ModelConfig, h, positions, mode: str,
+               cache, cache_len, enc_out, pattern_unit: str,
+               want_cache: bool):
+    """Scan over stacked units + unrolled tail."""
+
+    def unit_body(carry, xs):
+        hh, aux = carry
+        unit_params, unit_cache = xs
+        new_unit_cache = {}
+        for j, c in enumerate(pattern_unit):
+            key = f"{j}{c}"
+            blk_cache = unit_cache.get(key) if unit_cache else None
+            hh, nc, a = _block_fwd(c, unit_params[key], cfg, hh, positions,
+                                   mode, blk_cache, cache_len, enc_out)
+            new_unit_cache[key] = nc
+            aux = aux + a
+        hh = shard(hh, "batch", "seq", None)
+        return (hh, aux), new_unit_cache
+
+    body = unit_body
+    if cfg.remat != "none":
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat == "full" else
+                  jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(unit_body, policy=policy)
+
+    if not cfg.scan_layers:
+        # Unrolled variant (cost-analysis extrapolation in launch/dryrun).
+        carry = (h, jnp.float32(0.0))
+        caches_out = []
+        for i in range(cfg.num_units):
+            unit_p = jax.tree.map(lambda x: x[i], params["unit"])
+            unit_c = (jax.tree.map(lambda x: x[i], cache["unit"])
+                      if cache is not None else None)
+            carry, nc = body(carry, (unit_p, unit_c))
+            caches_out.append(nc)
+        h, aux = carry
+        new_unit_cache = (jax.tree.map(lambda *xs: jnp.stack(xs),
+                                       *caches_out)
+                          if want_cache else None)
+    elif cache is not None:
+        (h, aux), new_unit_cache = jax.lax.scan(
+            body, (h, jnp.float32(0.0)), (params["unit"], cache["unit"]))
+    else:
+        def body_nocache(carry, unit_params):
+            out_carry, nc = body(carry, (unit_params, None))
+            return out_carry, (nc if want_cache else 0)
+        (h, aux), new_unit_cache = jax.lax.scan(
+            body_nocache, (h, jnp.float32(0.0)), params["unit"])
+
+    new_cache = {"unit": new_unit_cache} if want_cache else {}
+    if "tail" in params:
+        new_tail = {}
+        for key, blk in params["tail"].items():
+            c = key[-1]
+            blk_cache = cache["tail"][key] if cache else None
+            h, nc, a = _block_fwd(c, blk, cfg, h, positions, mode, blk_cache,
+                                  cache_len, enc_out)
+            new_tail[key] = nc
+            aux = aux + a
+        if want_cache:
+            new_cache["tail"] = new_tail
+    return h, aux, new_cache
+
+
+def _encode(params: dict, cfg: ModelConfig, frames: jax.Array):
+    """Whisper encoder over stub frontend embeddings (B, F, d)."""
+    h = shard(frames, "batch", "seq", None)
+    b, f, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32)[None], (b, f))
+    enc = params["encoder"]
+    h, _, _ = _run_stack(enc, cfg, h, positions, "encode", None, None, None,
+                         "D", want_cache=False)
+    return rmsnorm(h, enc["final_norm"], cfg.rms_eps)
+
+
+# --------------------------------------------------------------------------
+# Entry points.
+# --------------------------------------------------------------------------
+
+def forward_hidden(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                   enc_frames: jax.Array | None = None):
+    """tokens: (B, S) -> (final hidden states (B,S,d), aux_loss).
+
+    The loss computes logits chunk-by-chunk from these (the 200k-vocab f32
+    logits tensor is never materialized — see train.step.chunked_xent)."""
+    b, s = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    h = embed(params["embed"], tokens, dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    enc_out = _encode(params, cfg, enc_frames.astype(dtype)) \
+        if cfg.encoder else None
+    h, aux, _ = _run_stack(params, cfg, h, positions, "train", None, None,
+                           enc_out, cfg.pattern_unit, want_cache=False)
+    return rmsnorm(h, params["final_norm"], cfg.rms_eps), aux
+
+
+def forward_train(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                  enc_frames: jax.Array | None = None):
+    """tokens: (B, S) -> (logits (B,S,V), aux_loss)."""
+    h, aux = forward_hidden(params, cfg, tokens, enc_frames)
+    return logits_fn(params["embed"], h, cfg.vocab_size), aux
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            enc_frames: jax.Array | None = None):
+    """Returns (last-position logits (B, V), cache)."""
+    b, s = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    h = embed(params["embed"], tokens, dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    enc_out = _encode(params, cfg, enc_frames.astype(dtype)) \
+        if cfg.encoder else None
+    h, aux, cache = _run_stack(params, cfg, h, positions, "prefill", None,
+                               None, enc_out, cfg.pattern_unit,
+                               want_cache=True)
+    h = rmsnorm(h, params["final_norm"], cfg.rms_eps)
+    logits = logits_fn(params["embed"], h[:, -1:], cfg.vocab_size)
+    return logits[:, 0], cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: dict, cache_len: jax.Array):
+    """tokens: (B, 1); cache_len: scalar int32 (tokens already in cache).
+
+    Returns (logits (B, V), new_cache)."""
+    b, _ = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    h = embed(params["embed"], tokens, dtype)
+    positions = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    h, aux, new_cache = _run_stack(params, cfg, h, positions, "decode",
+                                   cache, cache_len, None, cfg.pattern_unit,
+                                   want_cache=True)
+    h = rmsnorm(h, params["final_norm"], cfg.rms_eps)
+    logits = logits_fn(params["embed"], h, cfg.vocab_size)
+    return logits[:, 0], new_cache

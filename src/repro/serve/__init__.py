@@ -1,0 +1,2 @@
+from .engine import (make_prefill_step, make_decode_step, abstract_cache,
+                     ServeEngine)

@@ -1,0 +1,84 @@
+"""Serving: prefill/decode step factories + a batched request engine.
+
+``decode_step`` is what the ``decode_32k`` / ``long_500k`` dry-run cells
+lower: one new token against a seq_len-sized KV/SSM cache.  KV caches are
+sequence-sharded over the model axis when KV heads don't divide it
+(flash-decode-style partial-softmax combine is inserted by SPMD).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import ShardingRules, shard_ctx
+from repro.models import transformer as tfm
+from repro.models.params import abstract, shardings
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, rules: ShardingRules):
+    def prefill_step(params, batch):
+        with shard_ctx(mesh, rules):
+            logits, cache = tfm.prefill(params, cfg, batch["tokens"],
+                                        batch.get("enc_frames"))
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh, rules: ShardingRules):
+    def decode_step(params, cache, tokens, cache_len):
+        with shard_ctx(mesh, rules):
+            logits, new_cache = tfm.decode_step(params, cfg, tokens, cache,
+                                                cache_len)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, new_cache
+    return decode_step
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, s_max: int, mesh, rules):
+    specs = tfm.cache_specs(cfg, batch, s_max)
+    sh = shardings(specs, mesh, rules)
+    return abstract(specs, jnp.dtype(cfg.dtype), shardings_tree=sh)
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Minimal batched serving loop (greedy decoding) for the examples."""
+
+    cfg: ModelConfig
+    params: dict
+    max_seq: int
+
+    def generate(self, prompts: jax.Array, num_new: int,
+                 enc_frames=None) -> jax.Array:
+        """prompts: (B, P) int32 -> (B, P + num_new)."""
+        cfg = self.cfg
+        logits, cache = tfm.prefill(self.params, cfg, prompts, enc_frames)
+        # Grow attention caches to max_seq capacity.
+        from jax.tree_util import tree_map_with_path
+
+        def grow(path, x):
+            names = [str(getattr(p, "key", "")) for p in path]
+            if any(n in ("k", "v") for n in names):
+                ax = x.ndim - 3
+                pad = [(0, 0)] * x.ndim
+                pad[ax] = (0, self.max_seq - x.shape[ax])
+                return jnp.pad(x, pad)
+            return x
+
+        cache = tree_map_with_path(grow, cache)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out = [prompts, tok]
+        step = jax.jit(lambda p, c, t, n: tfm.decode_step(cfg=cfg, params=p,
+                                                          tokens=t, cache=c,
+                                                          cache_len=n))
+        cache_len = prompts.shape[1]
+        for _ in range(num_new - 1):
+            logits, cache = step(self.params, cache, tok,
+                                 jnp.int32(cache_len))
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            out.append(tok)
+            cache_len += 1
+        return jnp.concatenate(out, axis=1)

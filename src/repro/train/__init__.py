@@ -1,0 +1,2 @@
+from .step import (make_train_step, make_eval_step, loss_fn,
+                   batch_specs, abstract_batch)

@@ -1,0 +1,140 @@
+"""Train/eval step factories: sharded loss + grad + AdamW, with optional
+gradient accumulation and pod-axis (DCN) gradient compression.
+
+``make_train_step(cfg, mesh, rules, opt)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` ready for
+``jax.jit`` with in/out shardings from the ParamSpec trees.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import (ShardingRules, axes_to_spec,
+                                        shard_ctx)
+from repro.models import transformer as tfm
+from repro.models.params import ParamSpec
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+XENT_CHUNK = 8  # sequence chunks for the blockwise loss
+
+
+def chunked_xent(embed_params, h, labels, vocab_size: int):
+    """Blockwise softmax cross-entropy: logits exist only one sequence
+    chunk at a time (f32 (B, S/k, V) instead of (B, S, V) — the 200k-vocab
+    archs would otherwise spend >10 GiB/device on loss temps)."""
+    b, s, _ = h.shape
+    k = XENT_CHUNK if s % XENT_CHUNK == 0 else 1
+    hs = h.reshape(b, k, s // k, h.shape[-1]).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, k, s // k).transpose(1, 0, 2)
+
+    def one(args):
+        hc, lc = args
+        from repro.layers.core import logits_fn
+        logits = logits_fn(embed_params, hc, vocab_size).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, lc[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        return (nll * mask).sum(), mask.sum()
+
+    one = jax.checkpoint(one, policy=jax.checkpoint_policies.nothing_saveable)
+    nll_sum, tok_sum = jax.lax.map(one, (hs, ls))
+    return nll_sum.sum(), tok_sum.sum()
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    h, aux = tfm.forward_hidden(params, cfg, batch["tokens"],
+                                batch.get("enc_frames"))
+    nll, ntok = chunked_xent(params["embed"], h, batch["labels"],
+                             cfg.vocab_size)
+    loss = nll / jnp.maximum(ntok, 1.0)
+    total = loss + AUX_LOSS_WEIGHT * aux
+    return total, {"loss": loss, "aux_loss": aux, "tokens": ntok}
+
+
+def make_train_step(cfg: ModelConfig, mesh, rules: ShardingRules,
+                    opt: AdamWConfig, *, accum_steps: int = 1,
+                    compress_pod_grads: bool = False):
+    """Build the train step (microbatched when accum_steps > 1)."""
+
+    def train_step(params, opt_state, batch):
+        with shard_ctx(mesh, rules):
+            if accum_steps == 1:
+                (_, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, cfg, batch)
+            else:
+                # Microbatch scan: per-microbatch grads accumulate in f32;
+                # XLA overlaps each microbatch's collectives with the next
+                # microbatch's compute (latency-hiding scheduler).
+                def micro(carry, mb):
+                    acc, met = carry
+                    (_, m), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, cfg, mb)
+                    acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), acc, g)
+                    met = jax.tree.map(lambda a, b: a + b, met, m)
+                    return (acc, met), 0
+
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((accum_steps,
+                                         x.shape[0] // accum_steps)
+                                        + x.shape[1:]), batch)
+                zero_g = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                zero_m = {k: jnp.float32(0.0)
+                          for k in ("loss", "aux_loss", "tokens")}
+                (grads, metrics), _ = jax.lax.scan(micro, (zero_g, zero_m),
+                                                   mbs)
+                grads = jax.tree.map(lambda g: g / accum_steps, grads)
+                metrics = {k: v / accum_steps for k, v in metrics.items()}
+            if compress_pod_grads:
+                from repro.train.compress import ef_int8_allreduce_sim
+                grads = ef_int8_allreduce_sim(grads)
+            new_params, new_opt, om = adamw_update(params, grads, opt_state,
+                                                   opt)
+            metrics.update(om)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, mesh, rules: ShardingRules):
+    def eval_step(params, batch):
+        with shard_ctx(mesh, rules):
+            _, metrics = loss_fn(params, cfg, batch)
+        return metrics
+    return eval_step
+
+
+# --------------------------------------------------------------------------
+# Batch specs (ShapeDtypeStructs for the dry-run; see launch/dryrun.py).
+# --------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": ParamSpec((b, s), ("batch", "seq"), dtype="int32"),
+        "labels": ParamSpec((b, s), ("batch", "seq"), dtype="int32"),
+    }
+    if cfg.encoder:
+        out["enc_frames"] = ParamSpec(
+            (b, cfg.encoder.num_frames, cfg.d_model),
+            ("batch", None, None), dtype=cfg.dtype)
+    return out
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeSpec, mesh, rules):
+    specs = batch_specs(cfg, shape)
+    return {
+        k: jax.ShapeDtypeStruct(
+            v.shape, jnp.dtype(v.dtype),
+            sharding=jax.sharding.NamedSharding(
+                mesh, axes_to_spec(v.axes, v.shape, rules, mesh)))
+        for k, v in specs.items()
+    }

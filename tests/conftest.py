@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: device count stays 1 here (the 512-device flag
+belongs ONLY to launch/dryrun.py); multi-device executor tests spawn
+subprocesses or run in degraded single-device mode."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

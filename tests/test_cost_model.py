@@ -1,0 +1,92 @@
+"""Cost model (paper Eqs. 1–5): structure, special cases, optimizers."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.calibrate import APU_CPU, APU_GPU
+from repro.core.cost_model import (DCN_LINK, ICI_LINK, PCIE_LINK,
+                                   SeriesCostModel, ZEROCOPY_LINK,
+                                   series_model_from_costs)
+from repro.core.shj import BUILD_SERIES, PROBE_SERIES
+
+
+def _model(link=ICI_LINK, discrete=False, n_items=1e6):
+    return series_model_from_costs(PROBE_SERIES.steps, [n_items] * 4,
+                                   APU_CPU, APU_GPU, link,
+                                   discrete=discrete)
+
+
+def test_cpu_only_vs_gpu_only():
+    m = _model()
+    t_cpu = m.estimate_batch(np.ones((1, 4)))[0]
+    t_gpu = m.estimate_batch(np.zeros((1, 4)))[0]
+    # APU: GPU wins hash steps by >15x, so GPU-only beats CPU-only overall.
+    assert t_gpu < t_cpu
+
+
+def test_pl_no_worse_than_dd_and_ol():
+    m = _model()
+    _, tpl = m.optimize_pl(delta=0.05)
+    _, tdd = m.optimize_dd(delta=0.05)
+    _, tol = m.optimize_ol()
+    assert tpl <= tdd + 1e-12
+    assert tpl <= tol + 1e-12
+
+
+def test_dd_is_pl_special_case():
+    m = _model()
+    r, tdd = m.optimize_dd(delta=0.1)
+    assert abs(m.estimate_batch(np.full((1, 4), r))[0] - tdd) < 1e-12
+
+
+def test_equal_ratio_no_pipeline_delay():
+    m = _model()
+    bd = m.estimate([0.3, 0.3, 0.3, 0.3])
+    assert np.allclose(bd.delay_c, 0.0)
+    assert np.allclose(bd.delay_g, 0.0)
+    assert np.allclose(bd.link, 0.0)
+
+
+def test_discrete_adds_bus_cost():
+    coupled = _model(ZEROCOPY_LINK, discrete=False)
+    discrete = _model(PCIE_LINK, discrete=True)
+    r = np.array([[0.3, 0.3, 0.3, 0.3]])
+    assert discrete.estimate_batch(r)[0] > coupled.estimate_batch(r)[0]
+
+
+def test_pl_ratio_mismatch_penalized_on_discrete():
+    """The paper's central claim: fine-grained PL collapses on discrete
+    (PCIe-priced intermediates) but stays cheap on coupled."""
+    varied = np.array([[0.0, 0.2, 0.8, 0.1]])
+    flat = np.array([[0.3, 0.3, 0.3, 0.3]])
+    disc = _model(PCIE_LINK, discrete=True)
+    coup = _model(ICI_LINK, discrete=False)
+    penalty_disc = disc.estimate_batch(varied)[0] - disc.estimate_batch(flat)[0]
+    penalty_coup = coup.estimate_batch(varied)[0] - coup.estimate_batch(flat)[0]
+    assert penalty_disc > penalty_coup
+
+
+def test_monte_carlo_never_beats_optimum_much():
+    m = _model()
+    _, tpl = m.optimize_pl(delta=0.02)
+    _, times = m.monte_carlo(500, seed=1)
+    assert times.min() >= tpl - 0.05 * tpl
+
+
+@settings(max_examples=30, deadline=None)
+@given(r=st.lists(st.floats(0, 1), min_size=4, max_size=4),
+       x=st.floats(1e3, 1e8))
+def test_property_estimate_positive_and_max(r, x):
+    m = _model(n_items=x)
+    bd = m.estimate(np.array(r))
+    assert bd.total >= 0
+    assert bd.total == pytest.approx(max(bd.t_c, bd.t_g))
+    batch = m.estimate_batch(np.array([r]))[0]
+    assert batch == pytest.approx(bd.total, rel=1e-9)
+
+
+def test_build_series_model_works():
+    m = series_model_from_costs(BUILD_SERIES.steps, [1e6] * 4, APU_CPU,
+                                APU_GPU, DCN_LINK, discrete=True)
+    r, t = m.optimize_pl(delta=0.1)
+    assert np.isfinite(t) and t > 0

@@ -1,0 +1,158 @@
+"""Hash-join engine correctness: unit + hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Relation, build_hash_table, default_num_buckets,
+                        join_oracle, phj_join, probe_hash_table,
+                        probe_with_selectivity, shj_join, skewed_relation,
+                        uniform_relation, unique_relation)
+from repro.core.hash_table import merge_hash_tables
+from repro.core.partition import radix_partition, partition_ids
+from repro.core.phj import phj_coarse_join
+
+
+def _check_join(build, probe, num_buckets=None, max_out=None):
+    exp = join_oracle(build, probe)
+    nb = num_buckets or default_num_buckets(build.size)
+    mo = max_out or max(64, 4 * (len(exp) + 8))
+    res = shj_join(build, probe, num_buckets=nb, max_out=mo)
+    got = res.valid_pairs()
+    assert got.shape == exp.shape
+    assert (got == exp).all()
+    return exp
+
+
+def test_shj_unique_keys():
+    _check_join(unique_relation(1000, seed=1),
+                uniform_relation(3000, key_range=1500, seed=2))
+
+
+def test_shj_duplicate_build_keys():
+    _check_join(uniform_relation(2000, key_range=300, seed=3),
+                uniform_relation(1000, key_range=300, seed=4))
+
+
+def test_shj_skewed():
+    _check_join(skewed_relation(2000, s_percent=25, seed=5),
+                skewed_relation(3000, s_percent=25, seed=6))
+
+
+def test_shj_no_matches():
+    b = Relation(jnp.arange(100), jnp.arange(100))
+    p = Relation(jnp.arange(50), jnp.arange(50) + 1000)
+    res = shj_join(b, p, num_buckets=32, max_out=64)
+    assert int(res.count) == 0
+
+
+def test_shj_selectivity():
+    b = unique_relation(1000, seed=7)
+    for sel in (0.125, 0.5, 1.0):
+        p = probe_with_selectivity(b, 2000, selectivity=sel, seed=8)
+        exp = _check_join(b, p)
+        assert abs(len(exp) / 2000 - sel) < 0.05
+
+
+def test_phj_matches_shj():
+    b = uniform_relation(4096, key_range=1000, seed=9)
+    p = uniform_relation(8192, key_range=1000, seed=10)
+    exp = join_oracle(b, p)
+    res = phj_join(b, p, bits_per_pass=3, num_passes=2, buckets_per_part=8,
+                   max_out=4 * len(exp))
+    assert (res.valid_pairs() == exp).all()
+
+
+def test_phj_coarse_matches():
+    bits = 4
+    b = uniform_relation(2048, key_range=700, seed=11)
+    p = uniform_relation(4096, key_range=700, seed=12)
+    exp = join_oracle(b, p)
+    pr = radix_partition(b, bits_per_pass=2, num_passes=2)
+    ps = radix_partition(p, bits_per_pass=2, num_passes=2)
+    cap = int(max(np.asarray(pr.part_count).max(),
+                  np.asarray(ps.part_count).max())) + 8
+    res = phj_coarse_join(pr, ps, num_parts=1 << bits, part_cap=cap,
+                          buckets_per_part=16,
+                          max_out_per_part=cap * 16)
+    assert (res.valid_pairs() == exp).all()
+
+
+def test_merge_partial_tables():
+    b = uniform_relation(2048, key_range=512, seed=13)
+    p = uniform_relation(2048, key_range=512, seed=14)
+    nb = 256
+    t1 = build_hash_table(b.take(0, 1024), nb)
+    t2 = build_hash_table(b.take(1024, 2048), nb)
+    merged = merge_hash_tables([t1, t2], nb)
+    res = probe_hash_table(p, merged, 65536)
+    assert (res.valid_pairs() == join_oracle(b, p)).all()
+
+
+def test_output_capacity_truncation():
+    b = uniform_relation(512, key_range=4, seed=15)   # heavy duplication
+    p = uniform_relation(512, key_range=4, seed=16)
+    res = shj_join(b, p, num_buckets=16, max_out=100)
+    assert int(res.count) == 100   # truncated, reported honestly
+    assert (np.asarray(res.probe_rid[:100]) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Property tests.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(1, 400), np_=st.integers(1, 400),
+    key_range=st.integers(1, 500), seed=st.integers(0, 2**31 - 1),
+)
+def test_property_join_equals_oracle(nb, np_, key_range, seed):
+    rng = np.random.default_rng(seed)
+    b = Relation(jnp.arange(nb, dtype=jnp.int32),
+                 jnp.asarray(rng.integers(0, key_range, nb, dtype=np.int32)))
+    p = Relation(jnp.arange(np_, dtype=jnp.int32),
+                 jnp.asarray(rng.integers(0, key_range, np_,
+                                          dtype=np.int32)))
+    exp = join_oracle(b, p)
+    res = shj_join(b, p, num_buckets=64, max_out=max(64, 4 * len(exp) + 8))
+    assert (res.valid_pairs() == exp).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 2000), bits=st.integers(1, 6),
+       passes=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_property_partition_complete_and_clustered(n, bits, passes, seed):
+    """Radix partitioning is a permutation AND clusters by partition id."""
+    rng = np.random.default_rng(seed)
+    rel = Relation(jnp.arange(n, dtype=jnp.int32),
+                   jnp.asarray(rng.integers(0, 1 << 30, n, dtype=np.int32)))
+    parts = radix_partition(rel, bits_per_pass=bits, num_passes=passes)
+    # permutation: same multiset of (rid, key)
+    got = np.stack([np.asarray(parts.rel.rid), np.asarray(parts.rel.key)], 1)
+    exp = np.stack([np.asarray(rel.rid), np.asarray(rel.key)], 1)
+    assert (got[np.lexsort(got.T)] == exp[np.lexsort(exp.T)]).all()
+    # clustered: pids non-decreasing; headers consistent
+    pid = np.asarray(partition_ids(parts.rel, total_bits=bits * passes))
+    assert (np.diff(pid) >= 0).all()
+    counts = np.asarray(parts.part_count)
+    assert counts.sum() == n
+    assert (np.asarray(parts.part_start)
+            == np.concatenate([[0], np.cumsum(counts)[:-1]])).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 512), dup=st.integers(1, 50),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_build_table_invariants(n, dup, seed):
+    """Bucket headers tile the key entries; rid lists cover every tuple."""
+    rng = np.random.default_rng(seed)
+    rel = Relation(jnp.arange(n, dtype=jnp.int32),
+                   jnp.asarray(rng.integers(0, dup, n, dtype=np.int32)))
+    nb = 32
+    t = build_hash_table(rel, nb)
+    nk = int(t.num_keys)
+    assert nk == len(np.unique(np.asarray(rel.key)))
+    bks = np.asarray(t.bucket_key_start)
+    bkc = np.asarray(t.bucket_key_count)
+    assert bkc.sum() == nk
+    assert (np.asarray(t.key_rid_count)[:nk].sum()) == n
