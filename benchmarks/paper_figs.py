@@ -252,23 +252,56 @@ def fig16_basic_unit():
     return out
 
 
+def partition_fused_bench():
+    """Fused pipeline + planner vs the seed's unfused 3-step partition path.
+
+    Times the partition phase only (the paper's dominant cost): the seed's
+    materialized (n1, n2, n3) x 2 at its hard-coded knobs against the fused
+    data path at the planner-chosen schedule for the same total radix.
+    """
+    from repro.core import (default_planner, radix_partition_scheduled,
+                            radix_partition_unfused)
+    n = min(N_TUPLES, 1 << 20)
+    b, _ = default_relations(n)
+    seed_bits, seed_passes = 3, 2          # the seed's hard-coded knobs
+    total_bits = seed_bits * seed_passes
+    plan = default_planner().plan(n, total_bits=total_bits)
+    t_unfused = time_call(
+        lambda: radix_partition_unfused(b, bits_per_pass=seed_bits,
+                                        num_passes=seed_passes))
+    t_fused = time_call(
+        lambda: radix_partition_scheduled(b, schedule=plan.schedule))
+    out = {"n": n, "total_bits": total_bits,
+           "seed_schedule": [seed_bits] * seed_passes,
+           "planned_schedule": list(plan.schedule),
+           "unfused_s": t_unfused, "fused_s": t_fused,
+           "speedup_pct": 100 * (1 - t_fused / t_unfused),
+           "fused_no_slower": bool(t_fused <= t_unfused * 1.05)}
+    csv_row("partition/unfused", t_unfused * 1e6,
+            f"schedule={seed_bits}x{seed_passes}")
+    csv_row("partition/fused", t_fused * 1e6,
+            f"schedule={plan.schedule};speedup={out['speedup_pct']:.0f}%")
+    report("partition_fused", out)
+    return out
+
+
 def table3_step_granularity():
     """Table 3: fine-grained PL vs coarse-grained PL' (per-pair step)."""
-    from repro.core import phj_join
-    from repro.core.partition import radix_partition
+    from repro.core import default_planner, phj_join
+    from repro.core.partition import radix_partition_scheduled
     from repro.core.phj import phj_coarse_join
     n = min(N_TUPLES // 4, 262144)
     b, s = default_relations(n)
-    bits_pp, passes = 3, 2
+    sched = default_planner().plan(n, total_bits=6).schedule
     t_fine = time_call(
-        lambda: phj_join(b, s, bits_per_pass=bits_pp, num_passes=passes,
+        lambda: phj_join(b, s, schedule=sched,
                          buckets_per_part=64, max_out=2 * n))
-    pr = radix_partition(b, bits_per_pass=bits_pp, num_passes=passes)
-    ps = radix_partition(s, bits_per_pass=bits_pp, num_passes=passes)
+    pr = radix_partition_scheduled(b, schedule=sched)
+    ps = radix_partition_scheduled(s, schedule=sched)
     cap = int(max(np.asarray(pr.part_count).max(),
                   np.asarray(ps.part_count).max()))
     cap = ((cap + 127) // 128) * 128
-    num_parts = 1 << (bits_pp * passes)
+    num_parts = 1 << sum(sched)
     t_coarse = time_call(
         lambda: phj_coarse_join(pr, ps, num_parts=num_parts, part_cap=cap,
                                 buckets_per_part=64,

@@ -28,6 +28,7 @@ def registry():
         "fig10": paper_figs.fig10_shared_vs_separate,
         "fig11_12": alloc_figs.fig11_12_allocator,
         "divergence": alloc_figs.workload_divergence,
+        "partition_fused": paper_figs.partition_fused_bench,
         "table3": paper_figs.table3_step_granularity,
         "fig13_14_uniform": lambda: scale_figs.fig13_14_end_to_end("uniform"),
         "fig13_14_high_skew": lambda: scale_figs.fig13_14_end_to_end("high"),

@@ -81,8 +81,9 @@ def fig19_large_data():
         n = base * mult
         b, s = default_relations(n, seed=mult)
         t0 = time.perf_counter()
-        res = phj_join(b, s, bits_per_pass=4, num_passes=1,
-                       buckets_per_part=max(64, n // 64), max_out=2 * n)
+        # Planner-chosen pass schedule; buckets_per_part derives from the
+        # planned radix width (phj_bucket_count).
+        res = phj_join(b, s, max_out=2 * n)
         res.probe_rid.block_until_ready()
         dt = time.perf_counter() - t0
         rows.append({"tuples": n, "join_s": dt})

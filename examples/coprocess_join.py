@@ -53,7 +53,7 @@ def main():
             ok = (res.valid_pairs() == exp).all()
             print(f"  SHJ {name:11s} {t.wall_s*1e3:8.0f}ms verified={ok}")
             assert ok
-        res, t = cp.phj(r, s, bits_per_pass=4, num_passes=2, shj_bits=2,
+        res, t = cp.phj(r, s, shj_bits=2,  # planner picks the pass schedule
                         max_out=mo, partition_ratio=0.25, join_ratio=0.4)
         ok = (res.valid_pairs() == exp).all()
         print(f"  PHJ DD/PL     {t.wall_s*1e3:8.0f}ms verified={ok} "

@@ -16,8 +16,12 @@ from .hash_table import (HashTable, JoinResult, build_hash_table,
                          probe_hash_table, merge_hash_tables, join_oracle,
                          default_num_buckets)
 from .shj import shj_join, BUILD_SERIES, PROBE_SERIES
-from .phj import phj_join, phj_coarse_join, partition_series
-from .partition import radix_partition, Partitions
+from .phj import (phj_join, phj_coarse_join, partition_series,
+                  resolve_schedule)
+from .partition import (radix_partition, radix_partition_scheduled,
+                        radix_partition_unfused, Partitions)
+from .pass_planner import (PassPlan, PassPlanner, default_planner,
+                           even_schedule, calibrate_partition_unit_costs)
 from .cost_model import (SeriesCostModel, series_model_from_costs, LinkSpec,
                          DeviceSpec, PCIE_LINK, ICI_LINK, DCN_LINK,
                          ZEROCOPY_LINK)

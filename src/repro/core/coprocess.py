@@ -388,26 +388,35 @@ class PhjCoProcessorMixin:
     """PHJ orchestration + the appendix's BasicUnit scheduler."""
 
     def phj(self, build_rel: Relation, probe_rel: Relation, *,
-            bits_per_pass: int, num_passes: int, shj_bits: int, max_out: int,
+            bits_per_pass: int | None = None, num_passes: int | None = None,
+            schedule: tuple[int, ...] | None = None, planner=None,
+            shj_bits: int, max_out: int,
             partition_ratio: float, join_ratio: float) -> tuple[ht.JoinResult, "Timing"]:
         """PHJ co-processing: ratio-split partitioning, then partition-pair
         ownership split for the join phase (paper PHJ-DD/PL skeleton).
 
+        Pass knobs may be explicit or planner-chosen (``resolve_schedule``);
+        every pass runs the fused n1+n2 / scan+scatter data path.
+
         ``partition_ratio`` — C-group share of the partition passes.
         ``join_ratio``      — fraction of partition pairs owned by C.
         """
-        from .partition import radix_partition
+        from .partition import radix_partition_scheduled
+        from .phj import resolve_schedule
         from .relation import radix_of
 
         timing = Timing()
-        total_bits = bits_per_pass * num_passes
+        sched = resolve_schedule(build_rel.size, bits_per_pass=bits_per_pass,
+                                 num_passes=num_passes, schedule=schedule,
+                                 planner=planner)
+        total_bits = sum(sched)
+        timing.notes["schedule"] = list(sched)
         build_rel = self.pad_relation(build_rel, self.BUILD_PAD_KEY)
         probe_rel = self.pad_relation(probe_rel, self.PROBE_PAD_KEY)
         t0 = time.perf_counter()
 
         def part_fn(rel):
-            return radix_partition(rel, bits_per_pass=bits_per_pass,
-                                   num_passes=num_passes).rel
+            return radix_partition_scheduled(rel, schedule=sched).rel
 
         parts = {}
         for tag, rel in (("R", build_rel), ("S", probe_rel)):
@@ -417,10 +426,10 @@ class PhjCoProcessorMixin:
                 self._bus_delay((n - cut) * 8, timing)
             pieces = []
             if cut > 0:
-                f = self.c.jit(("phj_part", tag, cut), part_fn)
+                f = self.c.jit(("phj_part", tag, cut, sched), part_fn)
                 pieces.append(f(self.c.put_items(rel.take(0, cut))))
             if cut < n:
-                f = self.g.jit(("phj_part", tag, n - cut), part_fn)
+                f = self.g.jit(("phj_part", tag, n - cut, sched), part_fn)
                 pieces.append(f(self.g.put_items(rel.take(cut, n))))
             pieces = [jax.tree.map(jax.device_get, x) for x in pieces]
             parts[tag] = Relation(

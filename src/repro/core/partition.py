@@ -68,14 +68,47 @@ def partition_n3(rel: Relation, pid: jax.Array) -> Relation:
     return Relation(rel.rid[order], rel.key[order])
 
 
-@partial(jax.jit, static_argnames=("bits_per_pass", "num_passes"))
-def radix_partition(rel: Relation, *, bits_per_pass: int,
-                    num_passes: int) -> Partitions:
-    """Full multi-pass radix partitioning: (n1 n2 n3) x num_passes.
+@partial(jax.jit, static_argnames=("schedule", "use_pallas", "interpret"))
+def radix_partition_scheduled(rel: Relation, *, schedule: tuple[int, ...],
+                              use_pallas: bool | None = None,
+                              interpret: bool = False) -> Partitions:
+    """Multi-pass radix partitioning over an explicit pass ``schedule``.
 
-    Passes run low-digit first with stable reorders, so the final layout is
-    clustered by the complete ``bits_per_pass * num_passes``-bit radix.
+    ``schedule`` lists each pass's digit width, low digit first (a
+    ``PassPlan.schedule`` — see ``repro.core.pass_planner``).  Every pass
+    is the FUSED data path (``repro.kernels.partition_hist.ops``): n1+n2
+    in one VMEM sweep, n3 as a fused scan+scatter; stable reorders make
+    the final layout clustered by the complete ``sum(schedule)``-bit radix.
     """
+    from repro.kernels.partition_hist.ops import fused_partition_pass
+
+    total_bits = sum(schedule)
+    cur = rel
+    shift = 0
+    for bits in schedule:
+        cur, _, _ = fused_partition_pass(cur, shift=shift, bits=bits,
+                                         use_pallas=use_pallas,
+                                         interpret=interpret)
+        shift += bits
+    full_pid = radix_of(cur.key, shift=0, bits=total_bits)
+    start, count = partition_n2(full_pid, 1 << total_bits)
+    return Partitions(cur, start, count)
+
+
+def radix_partition(rel: Relation, *, bits_per_pass: int,
+                    num_passes: int, use_pallas: bool | None = None,
+                    interpret: bool = False) -> Partitions:
+    """Uniform-schedule partitioning: (n1 n2 n3) x num_passes (fused)."""
+    return radix_partition_scheduled(
+        rel, schedule=(bits_per_pass,) * num_passes, use_pallas=use_pallas,
+        interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("bits_per_pass", "num_passes"))
+def radix_partition_unfused(rel: Relation, *, bits_per_pass: int,
+                            num_passes: int) -> Partitions:
+    """The seed's materialized 3-step path, kept as the benchmark baseline
+    (``benchmarks/run.py --only partition_fused`` compares against it)."""
     total_bits = bits_per_pass * num_passes
     cur = rel
     for g in range(num_passes):

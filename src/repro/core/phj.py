@@ -22,9 +22,12 @@ import jax.numpy as jnp
 
 from . import hash_table as ht
 from .partition import Partitions, partition_n1, partition_n2, partition_n3, \
-    radix_partition
+    radix_partition_scheduled
 from .relation import Relation, radix_of
 from .steps import Step, StepCost, StepSeries
+
+# Buckets sized for this many tuples each (paper §5.2's bucket-load knob).
+DEFAULT_AVG_BUCKET = 4
 
 PARTITION_COSTS = {
     "n1": StepCost(ops_per_item=60, seq_bytes_per_item=12,
@@ -61,24 +64,71 @@ def partition_series(pass_idx: int) -> StepSeries:
     ))
 
 
-def phj_bucket_count(n: int, total_radix_bits: int, *, avg_bucket: int = 4):
+def phj_bucket_count(n: int, total_radix_bits: int, *,
+                     avg_bucket: int = DEFAULT_AVG_BUCKET):
     """Buckets per partition (power of two)."""
     from .relation import next_pow2
     per_part = max(1, n >> total_radix_bits)
     return max(1, next_pow2(max(1, per_part // avg_bucket)))
 
 
-@partial(jax.jit, static_argnames=("bits_per_pass", "num_passes", "max_out",
-                                   "buckets_per_part"))
-def phj_join(build_rel: Relation, probe_rel: Relation, *, bits_per_pass: int,
-             num_passes: int, buckets_per_part: int,
+def resolve_schedule(n: int, *, bits_per_pass: int | None = None,
+                     num_passes: int | None = None,
+                     schedule: tuple[int, ...] | None = None,
+                     planner=None) -> tuple[int, ...]:
+    """The ONE place pass knobs are decided (no hard-coded constants).
+
+    Priority: explicit ``schedule`` > explicit ``bits_per_pass`` x
+    ``num_passes`` > the cost-model-guided ``PassPlanner`` for ``n``.
+    """
+    if schedule is not None:
+        sched = tuple(int(b) for b in schedule)
+    elif bits_per_pass is not None:
+        sched = (int(bits_per_pass),) * int(num_passes or 1)
+    else:
+        if planner is None:
+            from .pass_planner import default_planner
+            planner = default_planner()
+        if num_passes is not None:
+            # Honor the requested pass count: split the planner's total
+            # radix width into that many near-even digits.
+            from .pass_planner import even_schedule
+            total = max(int(num_passes), planner.choose_total_bits(n))
+            sched = even_schedule(total, int(num_passes))
+        else:
+            sched = planner.plan(n).schedule
+    if not sched or any(b < 1 for b in sched):
+        raise ValueError(f"each pass needs >= 1 radix bit: {sched}")
+    return sched
+
+
+def phj_join(build_rel: Relation, probe_rel: Relation, *,
+             bits_per_pass: int | None = None, num_passes: int | None = None,
+             schedule: tuple[int, ...] | None = None, planner=None,
+             buckets_per_part: int | None = None,
              max_out: int) -> ht.JoinResult:
-    """Full PHJ: partition R and S, then SHJ per partition pair (fused)."""
-    total_bits = bits_per_pass * num_passes
-    pr = radix_partition(build_rel, bits_per_pass=bits_per_pass,
-                         num_passes=num_passes)
-    ps = radix_partition(probe_rel, bits_per_pass=bits_per_pass,
-                         num_passes=num_passes)
+    """Full PHJ: partition R and S, then SHJ per partition pair (fused).
+
+    Pass knobs may be given explicitly or left to the planner (the paper's
+    "tuned according to the memory hierarchy"); ``buckets_per_part``
+    defaults from the planned radix width."""
+    sched = resolve_schedule(build_rel.size, bits_per_pass=bits_per_pass,
+                             num_passes=num_passes, schedule=schedule,
+                             planner=planner)
+    if buckets_per_part is None:
+        buckets_per_part = phj_bucket_count(build_rel.size, sum(sched))
+    return _phj_join_scheduled(build_rel, probe_rel, schedule=sched,
+                               buckets_per_part=buckets_per_part,
+                               max_out=max_out)
+
+
+@partial(jax.jit, static_argnames=("schedule", "max_out", "buckets_per_part"))
+def _phj_join_scheduled(build_rel: Relation, probe_rel: Relation, *,
+                        schedule: tuple[int, ...], buckets_per_part: int,
+                        max_out: int) -> ht.JoinResult:
+    total_bits = sum(schedule)
+    pr = radix_partition_scheduled(build_rel, schedule=schedule)
+    ps = radix_partition_scheduled(probe_rel, schedule=schedule)
     # Partition-aligned bucket ids: buckets never cross partitions.
     shj_bits = max(0, buckets_per_part.bit_length() - 1)
     num_buckets = 1 << (total_bits + shj_bits)

@@ -1,7 +1,22 @@
-import jax
+"""Dispatchers for the radix-partition kernels.
 
+``fused_partition_pass`` is the data path behind one radix pass everywhere
+(``repro.core.partition`` routes through it): the fused n1+n2 kernel plus
+the fused scan+scatter n3 kernel on TPU-shaped inputs, and an equivalent
+single-dispatch jnp path (one pid computation feeding histogram, scan and
+stable reorder — no re-materialization between steps) elsewhere.
+"""
+import jax
+import jax.numpy as jnp
+
+from .fused import partition_hist_fused_pallas
 from .partition_hist import radix_hist_pallas
-from .ref import radix_hist_ref
+from .ref import partition_hist_fused_ref, radix_hist_ref
+from .reorder import radix_scatter_pallas
+
+# The one-hot scatter kernel keeps the whole output in VMEM; beyond this
+# many tuples the fused jnp path wins (and always on non-TPU backends).
+_SCATTER_VMEM_LIMIT = 1 << 17
 
 
 def radix_hist(pid, *, num_parts: int, use_pallas: bool | None = None):
@@ -10,3 +25,34 @@ def radix_hist(pid, *, num_parts: int, use_pallas: bool | None = None):
     if use_pallas and pid.shape[0] % 1024 == 0:
         return radix_hist_pallas(pid, num_parts=num_parts)
     return radix_hist_ref(pid, num_parts=num_parts)
+
+
+def fused_partition_pass(rel, *, shift: int, bits: int,
+                         use_pallas: bool | None = None,
+                         interpret: bool = False):
+    """One full radix pass (n1+n2+n3 fused).
+
+    Returns ``(reordered Relation, starts, counts)`` for the ``bits``-wide
+    digit at ``shift``; the reorder is a stable clustering by that digit.
+    """
+    from repro.core.relation import Relation
+
+    n = rel.key.shape[0]
+    num_parts = 1 << bits
+    if use_pallas is None:
+        use_pallas = (jax.default_backend() == "tpu"
+                      and n <= _SCATTER_VMEM_LIMIT)
+    if (use_pallas or interpret) and n % 1024 == 0:
+        pid, counts = partition_hist_fused_pallas(
+            rel.key, shift=shift, bits=bits, interpret=interpret)
+        starts = jnp.cumsum(counts) - counts
+        rid, key = radix_scatter_pallas(rel.rid, rel.key, pid,
+                                        starts.astype(jnp.int32),
+                                        num_parts=num_parts,
+                                        interpret=interpret)
+        return Relation(rid, key), starts, counts
+    # Fused jnp path: pid computed once, shared by histogram and reorder.
+    pid, counts = partition_hist_fused_ref(rel.key, shift=shift, bits=bits)
+    starts = jnp.cumsum(counts) - counts
+    order = jnp.argsort(pid, stable=True)
+    return Relation(rel.rid[order], rel.key[order]), starts, counts

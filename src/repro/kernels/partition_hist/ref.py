@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the radix histogram kernel."""
+"""Pure-jnp oracles for the radix-partition kernels."""
 import jax
 import jax.numpy as jnp
 
@@ -6,3 +6,21 @@ import jax.numpy as jnp
 def radix_hist_ref(pid, *, num_parts: int):
     return jax.ops.segment_sum(jnp.ones_like(pid), pid,
                                num_segments=num_parts).astype(jnp.int32)
+
+
+def partition_hist_fused_ref(keys, *, shift: int, bits: int):
+    """Oracle for the fused n1+n2 kernel: (pid, hist)."""
+    from repro.core.relation import radix_of
+    pid = radix_of(keys, shift=shift, bits=bits)
+    return pid, radix_hist_ref(pid, num_parts=1 << bits)
+
+
+def radix_scatter_ref(rid, key, pid, starts=None, *, num_parts: int = 0):
+    """Oracle for the fused n3 kernel: stable reorder of tuples by pid.
+
+    ``dest[i] = starts[pid[i]] + rank_of_i_within_its_partition`` is exactly
+    the inverse of the stable argsort permutation, so the oracle is the
+    stable sort itself (``starts`` is accepted for signature parity).
+    """
+    order = jnp.argsort(pid, stable=True)
+    return rid[order], key[order]

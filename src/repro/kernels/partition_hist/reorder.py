@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: FUSED radix-partition step n3 (scan + scatter).
+
+Stable reorder of ``<rid, key>`` tuples into their partitions.  The seed
+path materialized a full argsort; here the exclusive scan over partition
+headers and the scatter are fused into one streaming kernel:
+
+  * a VMEM scratch holds the running per-partition fill count — the scan
+    state carried across grid steps (deterministic sequential accumulation,
+    no atomics: DESIGN §2);
+  * each tile computes, per tuple, its stable within-tile rank via a
+    one-hot cumulative sum, adds the global partition start plus the
+    running offset, and scatters the tuple into the full VMEM-resident
+    output block via one-hot accumulation (every destination is written
+    exactly once, so `+=` over zero-initialized output is a scatter).
+
+The one-hot scatter is O(tile * n) per tile, so this kernel is for
+VMEM-resident relations (the per-partition working sets the planner
+produces); ops.py gates dispatch by size and falls back to the fused jnp
+path otherwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_kernel(pid_ref, rid_ref, key_ref, starts_ref,
+                    out_rid_ref, out_key_ref, offs_ref, *, num_parts: int,
+                    n: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        offs_ref[...] = jnp.zeros_like(offs_ref)
+        out_rid_ref[...] = jnp.zeros_like(out_rid_ref)
+        out_key_ref[...] = jnp.zeros_like(out_key_ref)
+
+    pid = pid_ref[...].reshape(-1)                        # (tile,)
+    onehot = (pid[:, None] == jnp.arange(num_parts, dtype=jnp.int32)[None, :]
+              ).astype(jnp.int32)                         # (tile, P)
+    # Stable within-tile rank: #earlier tuples of the same partition
+    # (exclusive one-hot cumsum along the tile axis).
+    rank = ((jnp.cumsum(onehot, axis=0) - onehot) * onehot).sum(axis=1)
+    starts = starts_ref[...].reshape(-1)                  # (P,)
+    offs = offs_ref[...].reshape(-1)                      # (P,) scan state
+    dest = starts[pid] + offs[pid] + rank                 # (tile,) in [0,n)
+
+    # Scatter: one-hot over the full output; each dest hit exactly once.
+    scat = (dest[:, None] == jnp.arange(n, dtype=jnp.int32)[None, :]
+            ).astype(jnp.int32)                           # (tile, n)
+    rid = rid_ref[...].reshape(-1)
+    key = key_ref[...].reshape(-1)
+    out_rid_ref[...] += (rid[:, None] * scat).sum(axis=0).reshape(
+        out_rid_ref.shape)
+    out_key_ref[...] += (key[:, None] * scat).sum(axis=0).reshape(
+        out_key_ref.shape)
+    # Advance the scan state by this tile's histogram.
+    offs_ref[...] += onehot.sum(axis=0).reshape(offs_ref.shape)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_parts", "block_rows", "interpret"))
+def radix_scatter_pallas(rid: jax.Array, key: jax.Array, pid: jax.Array,
+                         starts: jax.Array, *, num_parts: int,
+                         block_rows: int = 8, interpret: bool = False):
+    """Stable scatter of tuples to ``starts[pid] + running offset``.
+
+    ``rid``/``key``/``pid``: (n,) int32 with n % (block_rows*128) == 0;
+    ``starts``: (num_parts,) exclusive-scanned global histogram of ``pid``.
+    Returns the reordered ``(rid, key)`` — bit-identical to a stable sort
+    of the tuples by ``pid``.
+    """
+    n = pid.shape[0]
+    lanes = 128
+    rows = n // lanes
+    assert rows % block_rows == 0 and n == rows * lanes, (n, block_rows)
+    grid = (rows // block_rows,)
+    out_rid, out_key = pl.pallas_call(
+        functools.partial(_scatter_kernel, num_parts=num_parts, n=n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+                  pl.BlockSpec((1, num_parts), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((rows, lanes), lambda i: (0, 0)),
+                   pl.BlockSpec((rows, lanes), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+                   jax.ShapeDtypeStruct((rows, lanes), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((1, num_parts), jnp.int32)],
+        interpret=interpret,
+    )(pid.reshape(rows, lanes), rid.reshape(rows, lanes),
+      key.reshape(rows, lanes), starts.reshape(1, num_parts))
+    return out_rid.reshape(n), out_key.reshape(n)

@@ -185,8 +185,17 @@ def _build_lowered(cfg, shape, mesh, rules, opt_dtype):
             params, cache, tokens, cache_len)
 
 
-def _cost_of(compiled):
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax versions: older jax returns
+    a one-element list of dicts, newer returns the dict directly."""
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def _cost_of(compiled):
+    cost = cost_analysis_dict(compiled)
     colls = parse_collectives(compiled.as_text())
     return {"flops": cost.get("flops", 0.0),
             "bytes": cost.get("bytes accessed", 0.0),

@@ -104,8 +104,9 @@ def test_loss_decreases_on_structured_data():
     mesh = make_host_mesh()
     step = jax.jit(make_train_step(cfg, mesh, TRAIN_RULES, opt))
     losses = []
-    for i in range(8):
+    for i in range(16):
         batch = make_batch(cfg, ShapeSpec("t", 128, 4, "train"), step=i)
         params, opt_state, m = step(params, opt_state, batch)
         losses.append(float(m["loss"]))
-    assert losses[-1] < losses[0] - 0.2, losses
+    # Per-step losses are noisy on 4-sequence batches; compare window means.
+    assert np.mean(losses[-4:]) < np.mean(losses[:4]) - 0.2, losses

@@ -1,6 +1,8 @@
 """Cost model (paper Eqs. 1–5): structure, special cases, optimizers."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.calibrate import APU_CPU, APU_GPU

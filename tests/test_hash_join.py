@@ -2,6 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Relation, build_hash_table, default_num_buckets,

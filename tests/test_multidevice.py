@@ -39,8 +39,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, dataclasses, jax, numpy as np
 from repro.configs import all_configs, reduced, SHAPES, ShapeSpec
 from repro.launch import dryrun as dr
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 cfg = reduced(all_configs()["qwen3_8b"])
 cfg = dataclasses.replace(cfg, d_model=64, num_heads=8, num_kv_heads=4,
                           head_dim=16, d_ff=128)
@@ -48,7 +48,7 @@ shape = ShapeSpec("t", 64, 8, "train")
 dr.SHAPES["t"] = shape
 lowered = dr._build_lowered(cfg, shape, mesh, None, "float32")
 compiled = lowered.compile()
-cost = compiled.cost_analysis()
+cost = dr.cost_analysis_dict(compiled)
 colls = dr.parse_collectives(compiled.as_text())
 print(json.dumps({"flops": cost.get("flops", 0.0),
                   "collectives": len(colls),
@@ -57,10 +57,12 @@ print(json.dumps({"flops": cost.get("flops", 0.0),
 
 
 def _run(code: str) -> dict:
+    # JAX_PLATFORMS=cpu: these tests are about forced HOST devices; without
+    # it, a machine with libtpu installed but no TPU blocks in backend init.
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=600,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-2000:]
     return json.loads(r.stdout.strip().splitlines()[-1])
 

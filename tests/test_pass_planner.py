@@ -1,0 +1,83 @@
+"""PassPlanner: the cost-model-guided choice of radix pass knobs."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (PassPlan, PassPlanner, default_planner,
+                        even_schedule)
+from repro.core.calibrate import APU_CPU, APU_GPU
+from repro.core.phj import resolve_schedule
+
+
+def test_even_schedule_partitions_bits():
+    for total, p in itertools.product(range(1, 17), range(1, 9)):
+        if p > total:
+            continue
+        s = even_schedule(total, p)
+        assert len(s) == p and sum(s) == total
+        assert max(s) - min(s) <= 1  # near-equal widths
+
+
+@pytest.mark.parametrize("spec", [APU_CPU, APU_GPU])
+def test_plan_minimizes_modeled_cost_on_grid(spec):
+    """The chosen schedule attains the minimum of the planner's own model
+    over the full calibration grid of pass counts."""
+    planner = PassPlanner.from_device_spec(spec)
+    for n, total_bits in [(1 << 14, 6), (1 << 20, 12), (1 << 22, 16)]:
+        plan = planner.plan(n, total_bits=total_bits)
+        grid = {p: planner.schedule_cost(n, even_schedule(total_bits, p))
+                for p in range(1, total_bits + 1)}
+        assert plan.est_s == pytest.approx(min(grid.values()))
+        assert plan.total_bits == total_bits
+
+
+def test_flat_hierarchy_prefers_one_wide_pass():
+    """No scatter penalty -> every extra pass is pure overhead."""
+    p = PassPlanner(1e-9, 1e-9, 3e-9, capacity_bits=32)
+    assert p.plan(1 << 20, total_bits=12).schedule == (12,)
+
+
+def test_steep_hierarchy_prefers_narrow_passes():
+    """A scatter knee far below the fanout forces the multi-pass regime
+    (the paper's 'tuned according to the memory hierarchy')."""
+    p = PassPlanner(1e-9, 1e-9, 5e-9, capacity_bits=4, fanout_penalty=2.0)
+    plan = p.plan(1 << 20, total_bits=16)
+    assert plan.num_passes > 1
+    assert plan.bits_per_pass <= 6
+
+
+def test_choose_total_bits_tracks_relation_size():
+    p = default_planner()
+    bits = [p.choose_total_bits(n) for n in (1 << 12, 1 << 16, 1 << 20,
+                                             1 << 24)]
+    assert bits == sorted(bits)          # monotone in n
+    assert all(1 <= b <= 16 for b in bits)
+    # target partition size respected within a factor of two
+    b20 = p.choose_total_bits(1 << 20)
+    assert (1 << 20) / (1 << b20) == pytest.approx(p.part_tuples, rel=1.0)
+
+
+def test_pass_model_prices_ratio_sweep():
+    """The planner's per-pass SeriesCostModel supports the schemes'
+    optimizers (extends, not forks, the paper's model)."""
+    planner = PassPlanner.from_device_spec(APU_CPU)
+    m = planner.pass_model(1 << 18, 6, device_g=APU_GPU)
+    r, t = m.optimize_dd(delta=0.1)
+    assert 0.0 <= r <= 1.0
+    assert t <= m.estimate_batch(np.ones((1, 3)))[0] + 1e-12
+    assert t <= m.estimate_batch(np.zeros((1, 3)))[0] + 1e-12
+
+
+def test_resolve_schedule_priorities():
+    assert resolve_schedule(4096, schedule=(2, 3)) == (2, 3)
+    assert resolve_schedule(4096, bits_per_pass=4, num_passes=2) == (4, 4)
+    planned = resolve_schedule(1 << 20)
+    assert sum(planned) >= 1 and len(planned) >= 1
+
+
+def test_plan_properties():
+    plan = PassPlan((3, 3, 2), 1.0)
+    assert plan.total_bits == 8
+    assert plan.num_passes == 3
+    assert plan.bits_per_pass == 3
