@@ -37,6 +37,37 @@ def csv_row(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+def write_run_summary(results: dict) -> str:
+    """Per-run rollup artifact: reports/bench/BENCH_<utc-stamp>.json.
+
+    One file per harness invocation (timestamped, never overwritten) so
+    the perf trajectory across commits is machine-readable.
+    """
+    import datetime
+    import sys as _sys
+    stamp = datetime.datetime.now(datetime.timezone.utc).strftime(
+        "%Y%m%dT%H%M%SZ")
+    try:  # record the topology the numbers were actually measured on
+        import jax
+        device_count = jax.device_count()
+    except Exception:
+        device_count = None
+    payload = {
+        "timestamp_utc": stamp,
+        "argv": _sys.argv[1:],
+        "scale": SCALE,
+        "n_tuples": N_TUPLES,
+        "device_count": device_count,
+        "c_devices_env": os.environ.get("REPRO_C_DEVICES", ""),
+        "benchmarks": results,
+    }
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    path = os.path.join(REPORT_DIR, f"BENCH_{stamp}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
 def time_call(fn, *args, reps: int = 3, warmup: int = 1, **kw) -> float:
     import jax
     for _ in range(warmup):

@@ -1,14 +1,28 @@
 import os
-# Benchmarks need real two-group co-processing: 8 host devices (2 C + 6 G).
-# (Deliberately NOT 512 — that flag belongs only to launch/dryrun.py.)
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# Benchmarks need real two-group co-processing.  The device-group layout is
+# env-configurable: REPRO_NUM_DEVICES host devices total (default 8), of
+# which REPRO_C_DEVICES form the C-group (default 2; consumed by
+# CoProcessor).  (Deliberately NOT 512 — that flag belongs only to
+# launch/dryrun.py.)
+NUM_DEVICES = int(os.environ.get("REPRO_NUM_DEVICES", "8"))
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    # Append rather than setdefault: a user's unrelated XLA_FLAGS must not
+    # silently swallow the requested device-group layout.  An explicit
+    # count in XLA_FLAGS wins over REPRO_NUM_DEVICES.
+    os.environ["XLA_FLAGS"] = (_flags + " " if _flags else "") + \
+        f"--xla_force_host_platform_device_count={NUM_DEVICES}"
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV; artifacts land in reports/bench/.
+Prints ``name,us_per_call,derived`` CSV; per-figure artifacts land in
+reports/bench/<name>.json and every invocation writes a machine-readable
+rollup reports/bench/BENCH_<utc-stamp>.json (the perf trajectory).
 
   python -m benchmarks.run            # full suite
   python -m benchmarks.run --only fig4,roofline
+  python -m benchmarks.run --only engine_throughput --smoke
   REPRO_BENCH_SCALE=16 ...            # paper-scale 16M-tuple relations
+  REPRO_NUM_DEVICES=4 REPRO_C_DEVICES=1 ...  # device-group layout
 """
 import argparse
 import sys
@@ -16,8 +30,11 @@ import time
 import traceback
 
 
-def registry():
-    from . import alloc_figs, paper_figs, roofline, scale_figs
+def registry(smoke: bool = False):
+    from functools import partial
+
+    from . import (alloc_figs, engine_bench, paper_figs, roofline,
+                   scale_figs)
     return {
         "fig3": paper_figs.fig3_time_breakdown,
         "fig4": paper_figs.fig4_step_unit_costs,
@@ -38,6 +55,8 @@ def registry():
         "fig20": alloc_figs.fig20_locking_microbench,
         "tpu_projection": scale_figs.tpu_pod_projection,
         "roofline": roofline.run,
+        "engine_throughput": partial(engine_bench.engine_throughput,
+                                     smoke=smoke),
     }
 
 
@@ -45,20 +64,32 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes/counts for CI (engine_throughput)")
     args = ap.parse_args()
-    reg = registry()
+    reg = registry(smoke=args.smoke)
     names = args.only.split(",") if args.only else list(reg)
     failures = 0
+    results = {}
     for name in names:
         t0 = time.time()
         print(f"# === {name} ===", flush=True)
         try:
-            reg[name]()
-            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+            payload = reg[name]()
+            dt = time.time() - t0
+            results[name] = {"ok": True, "seconds": dt,
+                             "payload": payload if isinstance(payload, dict)
+                             else None}
+            print(f"# {name} done in {dt:.1f}s", flush=True)
         except Exception:
             failures += 1
+            results[name] = {"ok": False, "seconds": time.time() - t0,
+                             "error": traceback.format_exc(limit=5)}
             print(f"# {name} FAILED", flush=True)
             traceback.print_exc()
+    from .common import write_run_summary
+    path = write_run_summary(results)
+    print(f"# run summary -> {path}", flush=True)
     if failures:
         sys.exit(f"{failures} benchmarks failed")
 

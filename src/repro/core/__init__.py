@@ -17,7 +17,7 @@ from .hash_table import (HashTable, JoinResult, build_hash_table,
                          default_num_buckets)
 from .shj import shj_join, BUILD_SERIES, PROBE_SERIES
 from .phj import (phj_join, phj_coarse_join, partition_series,
-                  resolve_schedule)
+                  resolve_schedule, default_shj_bits, phj_bucket_count)
 from .partition import (radix_partition, radix_partition_scheduled,
                         radix_partition_unfused, Partitions)
 from .pass_planner import (PassPlan, PassPlanner, default_planner,
@@ -26,6 +26,7 @@ from .cost_model import (SeriesCostModel, series_model_from_costs, LinkSpec,
                          DeviceSpec, PCIE_LINK, ICI_LINK, DCN_LINK,
                          ZEROCOPY_LINK)
 from .coprocess import CoProcessor, Timing, DeviceGroup
+from .calibrate import OnlineUnitCosts, calibrated_overrides
 from .allocator import scan_alloc, alloc_stats, basic_alloc_units
 from .divergence import (divergence_order, inverse_permutation,
                          tile_divergence_waste)

@@ -101,3 +101,71 @@ def calibrated_overrides(series, shared, items, group_c, group_g,
     uc = measure_unit_costs(series, shared, items, group_c, **kw)
     ug = measure_unit_costs(series, shared, items, group_g, **kw)
     return {k: (uc[k], ug[k]) for k in uc if k in ug}
+
+
+class OnlineUnitCosts:
+    """Closes the §4.2 calibration loop *online*, per phase.
+
+    The offline path measures unit costs once (``measure_unit_costs``); the
+    engine instead observes every served query's measured phase time against
+    the model's estimate and folds the ratio back into a multiplicative
+    scale on that phase's unit costs.  Updates are EWMA in log space
+    (``scale *= ratio ** alpha``), so one outlier query cannot capsize the
+    model, and the scale converges geometrically to the measured/estimated
+    ratio as traffic flows.
+    """
+
+    def __init__(self, alpha: float = 0.5,
+                 scale_bounds: tuple[float, float] = (1e-3, 1e3),
+                 version_threshold: float = 1.2):
+        self.alpha = float(alpha)
+        self.scale_bounds = scale_bounds
+        # ``version`` ticks when a scale moves materially (by more than
+        # ``version_threshold``) away from its value at the last tick —
+        # consumers cache decisions against it (the engine's sticky query
+        # plans).  Comparing against the last-tick snapshot (not the
+        # previous observation) means gradual drift still invalidates.
+        self.version = 0
+        self.version_threshold = float(version_threshold)
+        self._scale: dict[str, float] = {}
+        self._samples: dict[str, int] = {}
+        self._scale_at_tick: dict[str, float] = {}
+
+    def scale_for(self, phase: str) -> float:
+        return self._scale.get(phase, 1.0)
+
+    def observe(self, phase: str, est_s: float, measured_s: float) -> float:
+        """Fold one (estimate, measurement) pair in; returns the new scale.
+
+        ``est_s`` must be the estimate *as priced with the current scale*
+        (the engine re-prices each query), so ratio==1 is a fixed point.
+        The first observation of a phase corrects the scale fully (the
+        analytic seed carries no information worth averaging against);
+        later ones smooth with ``alpha``.
+        """
+        if est_s <= 0.0 or measured_s <= 0.0:
+            return self.scale_for(phase)
+        if self.alpha == 0.0:
+            # Hard freeze: no updates at all — including the first-sample
+            # full correction, which would otherwise tick the version and
+            # invalidate consumers' cached (sticky) decisions.
+            return self.scale_for(phase)
+        ratio = min(max(measured_s / est_s, 1e-3), 1e3)
+        a = 1.0 if self._samples.get(phase, 0) == 0 else self.alpha
+        prev = self.scale_for(phase)
+        s = prev * ratio ** a
+        lo, hi = self.scale_bounds
+        s = min(max(s, lo), hi)
+        self._scale[phase] = s
+        self._samples[phase] = self._samples.get(phase, 0) + 1
+        anchor = self._scale_at_tick.get(phase, 1.0)
+        if max(s, anchor) / max(min(s, anchor), 1e-30) > \
+                self.version_threshold:
+            self.version += 1
+            self._scale_at_tick[phase] = s
+        return s
+
+    def to_dict(self) -> dict:
+        return {p: {"scale": self._scale[p],
+                    "samples": self._samples.get(p, 0)}
+                for p in sorted(self._scale)}

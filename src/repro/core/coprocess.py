@@ -26,6 +26,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
+import threading
 import time
 from functools import partial
 
@@ -52,6 +54,18 @@ class Timing:
     merge_s: float = 0.0
     notes: dict = dataclasses.field(default_factory=dict)
 
+    def to_dict(self) -> dict:
+        """JSON-serializable view (machine-readable bench artifacts)."""
+        return {
+            "wall_s": float(self.wall_s),
+            "phase_s": {k: float(v) for k, v in self.phase_s.items()},
+            "transfer_bytes": int(self.transfer_bytes),
+            "transfer_s": float(self.transfer_s),
+            "merge_s": float(self.merge_s),
+            "notes": {k: (v if isinstance(v, (int, float, str, bool, list))
+                          else str(v)) for k, v in self.notes.items()},
+        }
+
 
 class DeviceGroup:
     """A set of devices acting as one logical processor (C or G)."""
@@ -70,6 +84,7 @@ class DeviceGroup:
             self.mesh, jax.sharding.PartitionSpec())
             if self.mesh else self.sharding)
         self._jit_cache: dict = {}
+        self._jit_lock = threading.Lock()
 
     @property
     def size(self) -> int:
@@ -86,9 +101,12 @@ class DeviceGroup:
         return _round_up(max(n, self.size), self.size)
 
     def jit(self, key, fn):
-        if key not in self._jit_cache:
-            self._jit_cache[key] = jax.jit(fn)
-        return self._jit_cache[key]
+        # Lock: the engine's worker threads share one CoProcessor, so the
+        # compile cache sees concurrent lookups for the same key.
+        with self._jit_lock:
+            if key not in self._jit_cache:
+                self._jit_cache[key] = jax.jit(fn)
+            return self._jit_cache[key]
 
 
 class CoProcessor:
@@ -102,7 +120,11 @@ class CoProcessor:
                  ratio_quantum: int = 64):
         devs = jax.devices()
         if c_devices is None or g_devices is None:
-            if len(devs) >= 8:
+            want_c = os.environ.get("REPRO_C_DEVICES")
+            if want_c is not None and len(devs) >= 2:
+                k = min(max(int(want_c), 1), len(devs) - 1)
+                c_devices, g_devices = devs[:k], devs[k:]
+            elif len(devs) >= 8:
                 c_devices, g_devices = devs[:2], devs[2:]
             elif len(devs) >= 2:
                 c_devices, g_devices = devs[:1], devs[1:]
@@ -110,6 +132,12 @@ class CoProcessor:
                 c_devices = g_devices = devs[:1]
         self.c = DeviceGroup("C", c_devices)
         self.g = DeviceGroup("G", g_devices)
+        # Per-group execution locks for concurrent callers (the engine's
+        # worker threads).  Two sharded programs with collectives must
+        # never interleave on the same device group — XLA's rendezvous
+        # deadlocks — but a C-only and a G-only query may overlap freely.
+        # Acquire in fixed C-then-G order.
+        self.group_locks = {"C": threading.Lock(), "G": threading.Lock()}
         self.link = link
         self.discrete = discrete
         self.ratio_quantum = ratio_quantum
@@ -143,7 +171,16 @@ class CoProcessor:
 
     def _cut(self, n: int, ratio: float) -> int:
         """Quantized split point (bounds recompilation count and keeps both
-        slices divisible by the group sizes)."""
+        slices divisible by the group sizes).
+
+        Exact at the endpoints: ratio 0/1 must assign the WHOLE relation to
+        one group — quantization leaving a remainder slice on the other
+        group would dispatch work there that callers (and the engine's
+        group locks) believe cannot happen."""
+        if ratio <= 0.0:
+            return 0
+        if ratio >= 1.0:
+            return n
         q = max(self.lcm, _round_up(n // self.ratio_quantum, self.lcm))
         cut = int(round(ratio * n / q)) * q
         return min(n, max(0, cut))
@@ -232,19 +269,45 @@ class CoProcessor:
             measure: bool = True) -> tuple[ht.JoinResult, Timing]:
         """Run SHJ with per-step ratios (len-4 each; DD = equal entries,
         OL = 0/1 entries, CPU-only = all 1, GPU-only = all 0)."""
-        timing = Timing()
+        table, timing = self.build_table(build_rel, num_buckets=num_buckets,
+                                         ratios=build_ratios,
+                                         table_mode=table_mode)
+        result, timing = self.probe_table(probe_rel, table, max_out=max_out,
+                                          ratios=probe_ratios, timing=timing)
+        timing.wall_s = timing.phase_s["build"] + timing.phase_s["probe"]
+        return result, timing
+
+    def build_table(self, build_rel: Relation, *, num_buckets: int, ratios,
+                    table_mode: str = "shared",
+                    timing: Timing | None = None
+                    ) -> tuple[ht.HashTable, Timing]:
+        """Build phase only, returning the finished table.
+
+        The engine's build-table cache keeps this output resident so later
+        probes against the same build relation skip the phase entirely (the
+        paper's cache-reuse insight lifted to the query level)."""
+        timing = timing or Timing()
         build_rel = self.pad_relation(build_rel, self.BUILD_PAD_KEY)
+        t0 = time.perf_counter()
+        table = self._build(build_rel, num_buckets, ratios, table_mode,
+                            timing)
+        timing.phase_s["build"] = time.perf_counter() - t0
+        return table, timing
+
+    def probe_table(self, probe_rel: Relation, table: ht.HashTable, *,
+                    max_out: int, ratios,
+                    timing: Timing | None = None
+                    ) -> tuple[ht.JoinResult, Timing]:
+        """Probe phase against an existing (possibly cached) table."""
+        timing = timing or Timing()
         probe_rel = self.pad_relation(probe_rel, self.PROBE_PAD_KEY)
         t0 = time.perf_counter()
-        table = self._build(build_rel, num_buckets, build_ratios, table_mode,
-                            timing)
-        t1 = time.perf_counter()
-        result = self._probe(probe_rel, table, max_out, probe_ratios, timing)
+        result = self._probe(probe_rel, table, max_out, ratios, timing)
         jax.block_until_ready(result.probe_rid)
-        t2 = time.perf_counter()
-        timing.phase_s["build"] = t1 - t0
-        timing.phase_s["probe"] = t2 - t1
-        timing.wall_s = t2 - t0
+        timing.phase_s["probe"] = time.perf_counter() - t0
+        if not timing.wall_s:
+            timing.wall_s = timing.phase_s.get("build", 0.0) + \
+                timing.phase_s["probe"]
         return result, timing
 
     def _build(self, rel: Relation, num_buckets: int, ratios, table_mode,
@@ -331,8 +394,12 @@ class CoProcessor:
             self._bus_delay(table_bytes + (n - cut) * 8, timing)
         tbl_c = self.c.put_shared(table)
         tbl_g = self.g.put_shared(table)
-        max_c = max(1, _round_up(int(max_out * (cut / max(n, 1))), 8))
-        max_g = max(1, max_out - max_c + 8)
+        # Per-group result capacity: proportional to the tuple share, plus
+        # slack covering statistical fluctuation of the match density (a
+        # proportional cap with O(1) slack truncates skewed probes).
+        slack = max(64, max_out // 16)
+        max_c = max(1, _round_up(int(max_out * (cut / max(n, 1))), 8) + slack)
+        max_g = max(1, max_out - max_c + 2 * slack)
 
         def probe_fn(mo):
             return lambda r, t: ht.probe_hash_table(r, t, mo)
@@ -348,6 +415,13 @@ class CoProcessor:
             out = res[0]
             if self.discrete:
                 self._bus_delay(int(out.count) * 8, timing)
+            if out.probe_rid.shape[0] > max_out:
+                # The per-group slack padded capacity past the caller's
+                # max_out; restore the contract (valid pairs are front-
+                # compacted, so a prefix slice keeps the first matches).
+                out = ht.JoinResult(out.probe_rid[:max_out],
+                                    out.build_rid[:max_out],
+                                    jnp.minimum(out.count, max_out))
             return out
         res_host = [jax.tree.map(jax.device_get, r) for r in res]
         if self.discrete:
@@ -464,8 +538,11 @@ class PhjCoProcessorMixin:
                     self._bus_delay(len(idx) * 8 // 2, timing)
                 sub[tag] = grp.put_items(Relation(jnp.asarray(rid),
                                                   jnp.asarray(key)))
-            mo = max(64, _round_up(int(max_out * (join_ratio if grp is self.c
-                                                  else 1 - join_ratio)), 8) + 64)
+            # Full capacity per group: partition ownership is by radix
+            # value, so a skewed relation's hot partition (and all its
+            # matches) can land wholly on either side regardless of
+            # join_ratio — proportional caps would truncate it.
+            mo = _round_up(max_out, 8) + 64
             f = grp.jit(("phj_join", sub["R"].size, sub["S"].size, mo),
                         partial(_phj_owned_join, total_bits=total_bits,
                                 shj_bits=shj_bits, max_out=mo))

@@ -231,6 +231,34 @@ class SeriesCostModel:
         i = int(np.argmin(t))
         return plans[i], float(t[i])
 
+    def scheme_sweep(self, delta: float = 0.05,
+                     schemes: tuple[str, ...] | None = None
+                     ) -> dict[str, tuple[np.ndarray, float]]:
+        """Best ratio assignment + estimate per named scheme (§3.2).
+
+        Returns ``{scheme: (ratios, est_s)}`` over the requested subset of
+        CPU_ONLY / GPU_ONLY / OL / DD / PL — the engine's planner picks the
+        argmin per query instead of taking hard-coded knobs.
+        """
+        out: dict[str, tuple[np.ndarray, float]] = {}
+        want = schemes or ("CPU_ONLY", "GPU_ONLY", "OL", "DD", "PL")
+        ones = np.ones(self.n)
+        if "CPU_ONLY" in want:
+            out["CPU_ONLY"] = (ones, float(self.estimate_batch(ones)[0]))
+        if "GPU_ONLY" in want:
+            zeros = np.zeros(self.n)
+            out["GPU_ONLY"] = (zeros, float(self.estimate_batch(zeros)[0]))
+        if "OL" in want:
+            r, t = self.optimize_ol()
+            out["OL"] = (r, t)
+        if "DD" in want:
+            r, t = self.optimize_dd(delta=delta)
+            out["DD"] = (np.full(self.n, r), t)
+        if "PL" in want:
+            r, t = self.optimize_pl(delta=delta)
+            out["PL"] = (r, t)
+        return out
+
     def monte_carlo(self, num: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
         """Random ratio assignments + their estimates (paper Fig. 9)."""
         rng = np.random.default_rng(seed)

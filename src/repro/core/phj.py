@@ -72,6 +72,16 @@ def phj_bucket_count(n: int, total_radix_bits: int, *,
     return max(1, next_pow2(max(1, per_part // avg_bucket)))
 
 
+def default_shj_bits(n: int, total_radix_bits: int, *,
+                     avg_bucket: int = DEFAULT_AVG_BUCKET) -> int:
+    """Sub-bucket bits per partition, from the bucket-count heuristic.
+
+    The engine's planner derives ``shj_bits`` for planner-chosen schedules
+    from this instead of a hard-coded constant."""
+    return max(0, phj_bucket_count(n, total_radix_bits,
+                                   avg_bucket=avg_bucket).bit_length() - 1)
+
+
 def resolve_schedule(n: int, *, bits_per_pass: int | None = None,
                      num_passes: int | None = None,
                      schedule: tuple[int, ...] | None = None,

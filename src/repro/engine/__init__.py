@@ -1,0 +1,20 @@
+"""Concurrent join-query engine: admission, adaptive planning, caching.
+
+The layer the ROADMAP's "production-scale system" needs over the join
+stack: a service that accepts a stream of heterogeneous join requests,
+plans each through the paper's cost model (scheme *and* SHJ-vs-PHJ choice
+per query), executes on a shared two-group ``CoProcessor``, and reuses
+resident build tables across queries.
+
+  * ``JoinQueryService`` / ``JoinQuery``  — admission + execution
+  * ``QueryPlanner`` / ``QueryPlan``      — per-query cost-model planning
+  * ``BuildTableCache``                   — LRU build-table reuse
+  * ``WorkloadGenerator`` / ``make_workload`` — scenario mixes
+"""
+from .planner import (EXECUTABLE_SCHEMES, SCHEMES, QueryPlan, QueryPlanner)
+from .service import (JoinQuery, JoinQueryService, QueryOutcome, QueueFull)
+from .table_cache import (BuildTableCache, relation_fingerprint,
+                          table_nbytes)
+from .workload import MIXES, WorkloadGenerator, make_workload, zipf_keys
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,382 @@
+"""Per-query scheme + algorithm planning (the paper's §3.2/§4 machinery,
+promoted from hand-set benchmark knobs to an online decision per query).
+
+For every admitted join the planner prices, through ``SeriesCostModel``:
+
+  * SHJ under each co-processing scheme (CPU_ONLY / GPU_ONLY / OL / DD /
+    PL), build and probe series separately — Eqs. 1–5 with the δ-sweep
+    optimizers choosing the per-step ratios;
+  * PHJ: planner-chosen radix schedule priced per pass (the
+    ``PassPlanner`` knee model), plus a post-partition join phase whose
+    random accesses are cache-resident (the paper's locality argument for
+    partitioning in the first place).
+
+SHJ's probe-side random accesses degrade once the hash table outgrows the
+cache (working set ≈ 32 B/tuple of CSR arrays); that is priced as a
+multiplicative penalty per doubling past ``cache_bytes`` — the same knee
+idiom the pass planner uses for scatter fanout.  Small inputs therefore
+plan to SHJ (partitioning is pure overhead) and large ones to PHJ,
+reproducing the paper's regime split.
+
+Two signals close the loop as traffic flows:
+
+  * ``OnlineUnitCosts`` (calibrate.py) — measured phase times fold back
+    into per-phase unit-cost scales, so estimates track this host;
+  * cache awareness — a query whose build table is already resident is
+    priced with zero build cost, which is what makes the engine prefer
+    probe-only SHJ on hot tables over re-partitioning.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+
+import numpy as np
+
+from repro.core.calibrate import APU_CPU, APU_GPU, OnlineUnitCosts
+from repro.core.cost_model import DeviceSpec, LinkSpec, SeriesCostModel
+from repro.core.hash_table import default_num_buckets
+from repro.core.pass_planner import PassPlanner, default_planner
+from repro.core.phj import default_shj_bits
+from repro.core.shj import BUILD_SERIES, PROBE_SERIES
+
+SCHEMES = ("CPU_ONLY", "GPU_ONLY", "OL", "DD", "PL")
+# What CoProcessor.build_table/probe_table actually realize: one quantized
+# cut per phase (ratios[0]).  Per-step OL/PL vectors are priced by the
+# model but only run_map_series executes them, and the engine does not use
+# that path yet — so by default the planner only offers schemes whose
+# estimate matches what will execute.  Pass allowed_schemes=SCHEMES to
+# price the full catalog (model studies, paper figures).
+EXECUTABLE_SCHEMES = ("CPU_ONLY", "GPU_ONLY", "DD")
+
+# What a PL boundary exchange actually costs between host device groups: a
+# device_get + concat + device_put round trip (~ms), not a zero-copy
+# alias.  The analytic ZEROCOPY_LINK underprices that by orders of
+# magnitude, which would make the planner pick PL ratio boundaries that
+# measure slower than DD; this spec is calibrated to the observed host
+# shuffle cost.  Pass an explicit link (ICI_LINK etc.) for pod-scale
+# planning.
+HOST_SHUFFLE_LINK = LinkSpec("host_shuffle", 1e-3, 1e9)
+
+# CSR hash-table working set per build tuple (7 dense int32 columns plus
+# bucket headers at the default load factor).
+TABLE_BYTES_PER_TUPLE = 32
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    """Everything the executor needs, plus the estimates behind the choice."""
+
+    algorithm: str                  # "shj" | "phj"
+    scheme: str                     # one of SCHEMES
+    build_ratios: tuple             # len-4 per-step CPU shares
+    probe_ratios: tuple
+    num_buckets: int
+    max_out: int
+    table_mode: str = "shared"
+    cached: bool = False            # probe-only against a resident table
+    est_s: float = 0.0
+    est_build_s: float = 0.0        # phj: partition-phase estimate
+    est_probe_s: float = 0.0        # phj: join-phase estimate
+    # phj-only knobs (planner-chosen)
+    schedule: tuple | None = None
+    shj_bits: int = 0
+    partition_ratio: float = 0.5
+    join_ratio: float = 0.5
+
+    @property
+    def c_share(self) -> float:
+        """Mean CPU-side ratio — drives load-aware admission."""
+        if self.algorithm == "phj":
+            return 0.5 * (self.partition_ratio + self.join_ratio)
+        rs = list(self.probe_ratios) + ([] if self.cached
+                                        else list(self.build_ratios))
+        return float(np.mean(rs)) if rs else 0.5
+
+
+def _unit_parts(device: DeviceSpec, cost) -> tuple[float, float]:
+    """(non-random, random-access) components of seconds/item (Eq. 3)."""
+    non_rand = (cost.ops_per_item / device.ops_per_s
+                + cost.seq_bytes_per_item / device.seq_bw_bytes_per_s)
+    rand = cost.rand_accesses_per_item / device.rand_access_per_s
+    return non_rand, rand
+
+
+class QueryPlanner:
+    """Chooses algorithm, scheme, and ratios for one join query."""
+
+    def __init__(self, device_c: DeviceSpec = APU_CPU,
+                 device_g: DeviceSpec = APU_GPU,
+                 link: LinkSpec = HOST_SHUFFLE_LINK, *,
+                 discrete: bool = False,
+                 delta: float = 0.05,
+                 allowed_schemes: tuple[str, ...] = EXECUTABLE_SCHEMES,
+                 allow_phj: bool = True,
+                 cache_bytes: int = 4 << 20, rand_penalty: float = 0.35,
+                 reuse_discount: float = 0.5,
+                 phj_overhead_s: float = 2e-3,
+                 coproc_margin: float = 1.1,
+                 u_overrides: dict | None = None,
+                 pass_planner: PassPlanner | None = None,
+                 partition_device_g: DeviceSpec | None = None,
+                 online: OnlineUnitCosts | None = None):
+        self.device_c = device_c
+        self.device_g = device_g
+        self.link = link
+        self.discrete = discrete
+        self.delta = float(delta)
+        self.allowed_schemes = tuple(allowed_schemes)
+        self.allow_phj = allow_phj
+        self.cache_bytes = int(cache_bytes)
+        self.rand_penalty = float(rand_penalty)
+        self.reuse_discount = float(reuse_discount)
+        # Fixed per-query cost of PHJ's partition-ownership exchange (host
+        # gather/scatter of both relations between the groups) — it is what
+        # makes PHJ a losing plan for small queries even before the online
+        # scales converge.
+        self.phj_overhead_s = float(phj_overhead_s)
+        # Handicap on mixed-ratio schemes (OL/DD/PL): splitting a step
+        # series across groups carries coordination overhead the series
+        # model does not price, so co-processing must promise at least
+        # this factor of improvement over the best single-group plan.
+        self.coproc_margin = float(coproc_margin)
+        self.u_overrides = dict(u_overrides or {})
+        self.pass_planner = pass_planner or default_planner(device_c)
+        # None -> the G-group mirrors the planner's (calibrated) C costs;
+        # a DeviceSpec prices it analytically.  Analytic planners default
+        # to the G device spec.
+        self.partition_device_g = (partition_device_g if pass_planner
+                                   is not None else
+                                   (partition_device_g or device_g))
+        self.online = online or OnlineUnitCosts()
+        self.plan_counts: dict[tuple[str, str], int] = {}
+        self._sweep_cache: dict = {}
+        self._plan_cache: dict = {}
+        self._lock = threading.Lock()
+
+    # -- measured construction (paper §4.2, once at service start) ---------
+    @classmethod
+    def calibrated(cls, cp, *, n: int = 32768, reps: int = 2, **kw
+                   ) -> "QueryPlanner":
+        """Measure per-step unit costs on ``cp``'s real device groups."""
+        from repro.core import build_hash_table, uniform_relation
+        from repro.core.calibrate import calibrated_overrides
+        from repro.core.pass_planner import calibrate_partition_unit_costs
+        rel = uniform_relation(n, seed=0)
+        probe = uniform_relation(n, key_range=n, seed=1)
+        nb = default_num_buckets(n)
+        items_b = {"rid": rel.rid, "key": rel.key}
+        u = calibrated_overrides(BUILD_SERIES, {"num_buckets": nb}, items_b,
+                                 cp.c, cp.g, reps=reps)
+        table = build_hash_table(rel, nb)
+        u.update(calibrated_overrides(
+            PROBE_SERIES, {"table": table, "max_out": 4 * n,
+                           "num_buckets": nb},
+            {"rid": probe.rid, "key": probe.key}, cp.c, cp.g, reps=reps))
+        part_u = calibrate_partition_unit_costs(cp.c, n, reps=reps)
+        return cls(u_overrides=u,
+                   pass_planner=PassPlanner.from_measurements(part_u),
+                   partition_device_g=None, **kw)
+
+    # -- model construction --------------------------------------------------
+    def table_rand_scale(self, build_n: int) -> float:
+        """Random-access penalty once the table outgrows the cache."""
+        ws = max(1, build_n * TABLE_BYTES_PER_TUPLE)
+        excess = max(0.0, math.log2(ws / self.cache_bytes))
+        return 1.0 + self.rand_penalty * excess
+
+    def _series_model(self, series, x, *, rand_scale: float = 1.0
+                      ) -> SeriesCostModel:
+        names, u_c, u_g, outb = [], [], [], []
+        for s in series:
+            nc, rc = _unit_parts(self.device_c, s.cost)
+            ng, rg = _unit_parts(self.device_g, s.cost)
+            if s.name in self.u_overrides:
+                # Measured u; the rand share of the *analytic* split decides
+                # how much of it the table-size penalty inflates.
+                mc, mg = self.u_overrides[s.name]
+                fc = rc / max(nc + rc, 1e-30)
+                fg = rg / max(ng + rg, 1e-30)
+                uc = mc * (1.0 + fc * (rand_scale - 1.0))
+                ug = mg * (1.0 + fg * (rand_scale - 1.0))
+            else:
+                uc = nc + rc * rand_scale
+                ug = ng + rg * rand_scale
+            names.append(s.name)
+            u_c.append(uc)
+            u_g.append(ug)
+            outb.append(s.cost.out_bytes_per_item)
+        return SeriesCostModel(names, u_c, u_g, np.asarray(x, np.float64),
+                               np.asarray(outb, np.float64), self.link,
+                               discrete=self.discrete)
+
+    def _sweep(self, key, series, x, *, rand_scale: float):
+        """Memoized scheme sweep (hot-table traffic re-plans same shapes).
+
+        The sweep prices the *unscaled* model, so the chosen ratios — and
+        therefore the compiled slice shapes — are stable; online scales
+        adjust candidate totals afterwards, per scheme.
+        """
+        cache_key = (key, tuple(x), round(rand_scale, 4), self.delta)
+        with self._lock:
+            hit = self._sweep_cache.get(cache_key)
+        if hit is not None:
+            return hit
+        m = self._series_model(series, x, rand_scale=rand_scale)
+        out = m.scheme_sweep(delta=self.delta, schemes=self.allowed_schemes)
+        with self._lock:
+            if len(self._sweep_cache) > 512:
+                self._sweep_cache.clear()
+            self._sweep_cache[cache_key] = out
+        return out
+
+    # -- candidate estimates -------------------------------------------------
+    def _shj_candidates(self, build_n: int, probe_n: int, cached: bool):
+        rs = self.table_rand_scale(build_n)
+        probe = self._sweep("shj_probe", PROBE_SERIES.steps, [probe_n] * 4,
+                            rand_scale=rs)
+        if cached:
+            build = None
+        else:
+            build = self._sweep("shj_build", BUILD_SERIES.steps,
+                                [build_n] * 4, rand_scale=rs)
+        for scheme in self.allowed_schemes:
+            rp, tp = probe[scheme]
+            rb, tb = build[scheme] if build else (rp, 0.0)
+            # Per-scheme online scales: a PL plan's boundary shuffles and a
+            # DD plan's flat split calibrate independently.
+            tp = tp * self.online.scale_for(f"shj_probe:{scheme}")
+            tb = tb * self.online.scale_for(f"shj_build:{scheme}")
+            yield QueryPlan(
+                algorithm="shj", scheme=scheme,
+                build_ratios=tuple(float(r) for r in rb),
+                probe_ratios=tuple(float(r) for r in rp),
+                num_buckets=default_num_buckets(build_n), max_out=0,
+                cached=cached, est_s=tb + tp, est_build_s=tb, est_probe_s=tp)
+
+    def _phj_candidate(self, build_n: int, probe_n: int) -> QueryPlan | None:
+        plan = self.pass_planner.plan(build_n)
+        total_bits = plan.total_bits
+        part_scale = self.online.scale_for("phj_partition")
+        est_part, part_ratio = 0.0, 0.5
+        for i, bits in enumerate(plan.schedule):
+            m = self.pass_planner.pass_model(
+                build_n, bits, device_g=self.partition_device_g,
+                link=self.link)
+            r, t_r = m.optimize_dd(delta=self.delta)
+            m_s = self.pass_planner.pass_model(
+                probe_n, bits, device_g=self.partition_device_g,
+                link=self.link)
+            _, t_s = m_s.optimize_dd(delta=self.delta)
+            est_part += (t_r + t_s) * part_scale
+            if i == 0:
+                part_ratio = float(r)
+        # Post-partition join: one ownership ratio across both sub-phases;
+        # random accesses are partition-local, hence cache-resident
+        # (rand_scale=1) — the whole point of paying for partitioning.
+        steps = list(BUILD_SERIES.steps) + list(PROBE_SERIES.steps)
+        m_join = self._series_model(steps, [build_n] * 4 + [probe_n] * 4,
+                                    rand_scale=1.0)
+        join_ratio, est_join = m_join.optimize_dd(delta=self.delta)
+        est_join = est_join * self.online.scale_for("phj_join")
+        return QueryPlan(
+            algorithm="phj", scheme="DD",
+            build_ratios=(part_ratio,) * 4, probe_ratios=(join_ratio,) * 4,
+            num_buckets=default_num_buckets(build_n), max_out=0,
+            est_s=est_part + est_join + self.phj_overhead_s,
+            est_build_s=est_part,
+            est_probe_s=est_join, schedule=plan.schedule,
+            shj_bits=default_shj_bits(build_n, total_bits),
+            partition_ratio=part_ratio, join_ratio=float(join_ratio))
+
+    # -- the decision --------------------------------------------------------
+    def choose(self, build_n: int, probe_n: int, *, max_out: int,
+               cached: bool = False, expect_reuse: bool = False,
+               c_load: float = 0.0, g_load: float = 0.0) -> QueryPlan:
+        """Plan one query.
+
+        ``cached``       — the build table is resident: probe-only SHJ.
+        ``expect_reuse`` — this fingerprint has been seen before, so an SHJ
+                           build is an investment the cache will amortize
+                           (its cost is discounted by ``reuse_discount``).
+        ``c_load``/``g_load`` — outstanding estimated seconds already
+        admitted per group; added to each candidate in proportion to the
+        share of that group it would use, so near-ties break toward the
+        idler group and work from different queries overlaps.
+
+        Plans are *sticky*: once a signature has been planned, the same
+        plan (and therefore its compiled executables) is reused until the
+        online calibration moves materially (``OnlineUnitCosts.version``).
+        Load bias applies at (re)planning moments, not on every repeat of
+        a hot signature.
+        """
+        # Coarse load-imbalance bucket: plans stay sticky under balanced
+        # load, but a strongly lopsided group gets its own (sticky) variant
+        # — bounded to three compiled variants per shape.  The dead zone is
+        # wide on purpose: each extra variant is an extra compilation.
+        if abs(c_load - g_load) <= max(0.5 * max(c_load, g_load), 0.2):
+            load_bucket = 0
+        else:
+            load_bucket = 1 if c_load > g_load else -1
+        sig = (build_n, probe_n, cached, expect_reuse, load_bucket)
+        with self._lock:
+            hit = self._plan_cache.get(sig)
+        if hit is not None and hit[0] == self.online.version:
+            plan = dataclasses.replace(hit[1], max_out=int(max_out))
+            with self._lock:
+                k = (plan.algorithm, "cached" if cached else plan.scheme)
+                self.plan_counts[k] = self.plan_counts.get(k, 0) + 1
+            return plan
+        # A resident table does not *force* probe-only: at sizes where the
+        # un-partitioned table is cache-hostile, re-running PHJ can beat
+        # probing it — the sweep arbitrates (plan.cached marks the winner).
+        candidates = list(self._shj_candidates(build_n, probe_n, cached))
+        if self.allow_phj:
+            phj = self._phj_candidate(build_n, probe_n)
+            if phj is not None:
+                candidates.append(phj)
+
+        def effective(p: QueryPlan) -> float:
+            est = p.est_s
+            if (expect_reuse and not cached and p.algorithm == "shj"):
+                est = p.est_build_s * self.reuse_discount + p.est_probe_s
+            if p.algorithm == "shj" and p.scheme not in ("CPU_ONLY",
+                                                         "GPU_ONLY"):
+                est = est * self.coproc_margin
+            c = p.c_share
+            return est + c * c_load + (1.0 - c) * g_load
+
+        best = min(candidates, key=effective)
+        best.max_out = int(max_out)
+        with self._lock:
+            if len(self._plan_cache) > 512:
+                self._plan_cache.clear()
+            self._plan_cache[sig] = (self.online.version, best)
+            k = (best.algorithm, "cached" if cached else best.scheme)
+            self.plan_counts[k] = self.plan_counts.get(k, 0) + 1
+        return best
+
+    # -- feedback (satellite: close the calibration loop online) -----------
+    def observe(self, plan: QueryPlan, timing) -> None:
+        """Fold one executed query's measured phase times back in."""
+        phases = timing.phase_s
+        if plan.algorithm == "phj":
+            self.online.observe("phj_partition", plan.est_build_s,
+                                phases.get("partition", 0.0))
+            self.online.observe("phj_join", plan.est_probe_s,
+                                phases.get("join", 0.0))
+        else:
+            if not plan.cached:
+                self.online.observe(f"shj_build:{plan.scheme}",
+                                    plan.est_build_s,
+                                    phases.get("build", 0.0))
+            self.online.observe(f"shj_probe:{plan.scheme}",
+                                plan.est_probe_s,
+                                phases.get("probe", 0.0))
+
+    def stats(self) -> dict:
+        with self._lock:
+            counts = {f"{a}/{s}": n for (a, s), n in
+                      sorted(self.plan_counts.items())}
+        return {"plan_counts": counts, "online": self.online.to_dict()}

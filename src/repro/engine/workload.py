@@ -1,0 +1,125 @@
+"""Workload generation: streams of heterogeneous join queries.
+
+Scenario catalog (each yields ``JoinQuery`` instances with varying relation
+sizes, skew, and selectivity — the axes the paper sweeps in §5):
+
+  * ``uniform``     — both sides uniform keys, sizes drawn from a small
+                      grid around the base size (bounds recompilation).
+  * ``zipf``        — PK build side, probe keys Zipf-distributed over it
+                      (skewed foreign keys: matches stay ≤ |S|).
+  * ``selectivity`` — PK build side, probe selectivity cycling through the
+                      paper's {12.5%, 50%, 100%} (§5.5).
+  * ``hot_table``   — fresh probes against a small pool of recurring build
+                      relations: the scenario the build-table cache exists
+                      for (every repeat skips the build phase).
+
+``make_workload`` assembles a weighted mix; ``MIXES`` names the standard
+mixes the benchmarks and tests use.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.relation import (Relation, probe_with_selectivity,
+                                 uniform_relation, unique_relation)
+from .service import JoinQuery
+
+# Size multipliers: a deliberately small grid so repeated shapes reuse
+# compiled executables instead of forcing a fresh jit per query.
+SIZE_GRID = (0.5, 1.0, 2.0)
+
+MIXES = {
+    "uniform": (("uniform", 1.0),),
+    "zipf": (("zipf", 1.0),),
+    "selectivity": (("selectivity", 1.0),),
+    "hot_table": (("hot_table", 1.0),),
+    # The headline mixed workload: enough hot-table traffic that cache
+    # reuse matters, plus every other axis of heterogeneity.
+    "mixed": (("uniform", 0.2), ("zipf", 0.2), ("selectivity", 0.2),
+              ("hot_table", 0.4)),
+}
+
+
+def zipf_keys(rng: np.random.Generator, n: int, key_range: int,
+              theta: float = 1.3) -> np.ndarray:
+    """Zipf-distributed int32 keys folded into [0, key_range)."""
+    return ((rng.zipf(theta, size=n) - 1) % key_range).astype(np.int32)
+
+
+def _size(rng: np.random.Generator, base: int) -> int:
+    return max(256, int(base * rng.choice(SIZE_GRID)))
+
+
+class WorkloadGenerator:
+    """Deterministic (seeded) query stream over the scenario catalog."""
+
+    def __init__(self, base_tuples: int = 65536, *, seed: int = 0,
+                 hot_pool: int = 3, zipf_theta: float = 1.3):
+        self.base = int(base_tuples)
+        self.rng = np.random.default_rng(seed)
+        self.zipf_theta = zipf_theta
+        # Hot build relations are materialized once and re-submitted, so
+        # their fingerprints recur (and their generation cost isn't paid
+        # per query).
+        self._hot_pool: list[Relation] = [
+            unique_relation(_size(self.rng, self.base), seed=1000 + i)
+            for i in range(hot_pool)]
+        self._sel_cycle = (0.125, 0.5, 1.0)
+        self._sel_i = 0
+        self._qid = 0
+
+    # -- scenarios ----------------------------------------------------------
+    def uniform(self) -> JoinQuery:
+        nb, ns = _size(self.rng, self.base), _size(self.rng, self.base)
+        b = uniform_relation(nb, seed=int(self.rng.integers(1 << 30)))
+        s = uniform_relation(ns, key_range=nb,
+                             seed=int(self.rng.integers(1 << 30)))
+        # Uniform build keys collide, so matches can exceed |S| slightly.
+        return self._query(b, s, "uniform", max_out=8 * ns + 1024)
+
+    def zipf(self) -> JoinQuery:
+        nb, ns = _size(self.rng, self.base), _size(self.rng, self.base)
+        b = unique_relation(nb, seed=int(self.rng.integers(1 << 30)))
+        keys = zipf_keys(self.rng, ns, nb, self.zipf_theta)
+        import jax.numpy as jnp
+        s = Relation(jnp.arange(ns, dtype=jnp.int32), jnp.asarray(keys))
+        return self._query(b, s, "zipf", max_out=ns + 64)  # PK side: ≤ |S|
+
+    def selectivity(self) -> JoinQuery:
+        sel = self._sel_cycle[self._sel_i % len(self._sel_cycle)]
+        self._sel_i += 1
+        nb, ns = _size(self.rng, self.base), _size(self.rng, self.base)
+        b = unique_relation(nb, seed=int(self.rng.integers(1 << 30)))
+        s = probe_with_selectivity(b, ns, selectivity=sel,
+                                   seed=int(self.rng.integers(1 << 30)))
+        return self._query(b, s, f"sel_{sel}", max_out=ns + 64)
+
+    def hot_table(self) -> JoinQuery:
+        b = self._hot_pool[int(self.rng.integers(len(self._hot_pool)))]
+        ns = _size(self.rng, self.base)
+        keys = zipf_keys(self.rng, ns, b.size, self.zipf_theta)
+        import jax.numpy as jnp
+        s = Relation(jnp.arange(ns, dtype=jnp.int32), jnp.asarray(keys))
+        return self._query(b, s, "hot_table", max_out=ns + 64)
+
+    def _query(self, b, s, tag, *, max_out) -> JoinQuery:
+        self._qid += 1
+        return JoinQuery(build=b, probe=s, tag=tag, max_out=max_out,
+                         query_id=self._qid)
+
+    # -- mixes --------------------------------------------------------------
+    def stream(self, num_queries: int, mix="mixed") -> list[JoinQuery]:
+        spec = MIXES[mix] if isinstance(mix, str) else tuple(mix)
+        names = [n for n, _ in spec]
+        w = np.array([float(x) for _, x in spec])
+        w = w / w.sum()
+        return [getattr(self, names[int(self.rng.choice(len(names), p=w))])()
+                for _ in range(num_queries)]
+
+
+def make_workload(mix: str = "mixed", num_queries: int = 32, *,
+                  base_tuples: int = 65536, seed: int = 0,
+                  **kw) -> list[JoinQuery]:
+    """One-call workload: a seeded list of queries from a named mix."""
+    return WorkloadGenerator(base_tuples, seed=seed, **kw).stream(
+        num_queries, mix)

@@ -1,0 +1,221 @@
+"""Concurrent join-query engine: cache, planner, service, feedback.
+
+Runs in degraded single-device mode like test_coprocess.py; the real
+8-device overlap is exercised by ``benchmarks.run --only engine_throughput``.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CoProcessor, Timing, join_oracle, uniform_relation,
+                        unique_relation)
+from repro.core.calibrate import OnlineUnitCosts
+from repro.core.hash_table import default_num_buckets
+from repro.engine import (BuildTableCache, JoinQuery, JoinQueryService,
+                          QueryPlanner, WorkloadGenerator, make_workload,
+                          relation_fingerprint, table_nbytes)
+
+
+@pytest.fixture(scope="module")
+def cp():
+    return CoProcessor()
+
+
+@pytest.fixture(scope="module")
+def planner():
+    return QueryPlanner(delta=0.25)
+
+
+# ---------------------------------------------------------------------------
+# Build-table cache.
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_is_content_based():
+    a = uniform_relation(512, seed=3)
+    b = uniform_relation(512, seed=3)      # regenerated, same content
+    c = uniform_relation(512, seed=4)
+    assert relation_fingerprint(a, 64) == relation_fingerprint(b, 64)
+    assert relation_fingerprint(a, 64) != relation_fingerprint(c, 64)
+    # Different table geometry is a different cache line.
+    assert relation_fingerprint(a, 64) != relation_fingerprint(a, 128)
+
+
+def test_cache_hit_and_lru_eviction():
+    from repro.core import build_hash_table
+    tables = {i: build_hash_table(unique_relation(256, seed=i), 64)
+              for i in range(3)}
+    nbytes = table_nbytes(tables[0])
+    cache = BuildTableCache(budget_bytes=2 * nbytes)  # room for two
+    cache.put("t0", tables[0])
+    cache.put("t1", tables[1])
+    assert cache.get("t0") is tables[0]    # t0 is now MRU
+    cache.put("t2", tables[2])             # evicts LRU = t1
+    assert cache.get("t1") is None
+    assert cache.get("t0") is tables[0]
+    assert cache.get("t2") is tables[2]
+    st = cache.stats()
+    assert st["evictions"] == 1 and st["entries"] == 2
+    assert st["bytes"] <= st["budget_bytes"]
+    # A table bigger than the whole budget is refused, not cached.
+    assert not BuildTableCache(budget_bytes=8).put("big", tables[0])
+
+
+# ---------------------------------------------------------------------------
+# Planner: scheme + algorithm choice.
+# ---------------------------------------------------------------------------
+
+def test_planner_small_prefers_shj_large_prefers_phj(planner):
+    small = planner.choose(4096, 4096, max_out=8192)
+    big = planner.choose(1 << 24, 1 << 24, max_out=1024)
+    assert small.algorithm == "shj"        # partitioning is pure overhead
+    assert big.algorithm == "phj"          # table >> cache: pay to partition
+    assert big.schedule is not None and sum(big.schedule) > 0
+
+
+def test_planner_apu_model_avoids_cpu_only(planner):
+    # The APU model's GPU wins the hash-heavy steps >15x (Fig. 4), so the
+    # sweep must never land on CPU_ONLY.
+    plan = planner.choose(65536, 65536, max_out=65536)
+    assert plan.scheme != "CPU_ONLY"
+    assert plan.est_s > 0
+
+
+def test_planner_cached_skips_build_cost(planner):
+    cold = planner.choose(65536, 65536, max_out=65536, cached=False)
+    hot = planner.choose(65536, 65536, max_out=65536, cached=True)
+    assert hot.cached and hot.est_build_s == 0.0
+    assert hot.est_s < cold.est_s
+
+
+def test_planner_load_aware_tiebreak():
+    # Symmetric devices + a heavily loaded C-group: the chosen plan should
+    # lean on the G-group (low c_share), and vice versa.
+    from repro.core.calibrate import APU_CPU
+    pl = QueryPlanner(APU_CPU, APU_CPU, delta=0.25, allow_phj=False)
+    on_g = pl.choose(16384, 16384, max_out=16384, c_load=10.0, g_load=0.0)
+    on_c = pl.choose(16384, 16384, max_out=16384, c_load=0.0, g_load=10.0)
+    assert on_g.c_share < on_c.c_share
+
+
+def test_online_unit_costs_ewma():
+    o = OnlineUnitCosts(alpha=0.5)
+    assert o.scale_for("x") == 1.0
+    o.observe("x", est_s=1.0, measured_s=4.0)    # first: full correction
+    assert o.scale_for("x") == pytest.approx(4.0)
+    o.observe("x", est_s=1.0, measured_s=4.0)    # still 4x off: EWMA step
+    assert o.scale_for("x") == pytest.approx(8.0)  # 4 * 4**0.5
+    o.observe("x", est_s=1.0, measured_s=1.0)    # fixed point
+    assert o.scale_for("x") == pytest.approx(8.0)
+    o.observe("x", est_s=0.0, measured_s=1.0)    # degenerate: ignored
+    assert o.scale_for("x") == pytest.approx(8.0)
+
+
+def test_feedback_shifts_estimates():
+    pl = QueryPlanner(delta=0.25, allowed_schemes=("DD",), allow_phj=False)
+    plan = pl.choose(8192, 8192, max_out=16384)
+    before = plan.est_s
+    t = Timing()
+    t.phase_s = {"build": 100.0 * plan.est_build_s or 1.0,
+                 "probe": 100.0 * plan.est_probe_s or 1.0}
+    pl.observe(plan, t)
+    after = pl.choose(8192, 8192, max_out=16384).est_s
+    assert after > before                       # estimates track reality
+    assert pl.online.scale_for("shj_probe:DD") > 1.0
+
+
+# ---------------------------------------------------------------------------
+# Service: correctness, cache reuse, admission.
+# ---------------------------------------------------------------------------
+
+def test_service_executes_mixed_workload_correctly(cp):
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=0)
+    wl = make_workload("mixed", num_queries=8, base_tuples=2048, seed=5)
+    for q in wl:
+        out = svc.execute(q)
+        exp = join_oracle(q.build, q.probe)
+        got = out.result.valid_pairs()
+        assert got.shape == exp.shape and (got == exp).all(), \
+            (q.tag, out.plan.algorithm, out.plan.scheme)
+        assert out.timing.wall_s > 0
+    assert svc.stats()["completed"] == len(wl)
+
+
+def test_service_cache_hit_skips_build(cp):
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25,
+                                                       allow_phj=False),
+                           num_workers=0)
+    b = unique_relation(2048, seed=1)
+    s1 = uniform_relation(4096, key_range=2048, seed=2)
+    s2 = uniform_relation(4096, key_range=2048, seed=3)
+    out1 = svc.execute(JoinQuery(build=b, probe=s1, query_id=1))
+    out2 = svc.execute(JoinQuery(build=b, probe=s2, query_id=2))
+    assert not out1.cache_hit and out2.cache_hit
+    assert out2.timing.phase_s["build"] == 0.0
+    assert (out2.result.valid_pairs() == join_oracle(b, s2)).all()
+    assert svc.cache.stats()["hits"] == 1
+
+
+def test_service_threaded_run_matches_oracle(cp):
+    with JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                          num_workers=2) as svc:
+        wl = make_workload("hot_table", num_queries=6, base_tuples=1024,
+                           seed=9)
+        outs = svc.run(wl)
+        assert [o.query_id for o in outs] == [q.query_id for q in wl]
+        for q, o in zip(wl, outs):
+            assert (o.result.valid_pairs()
+                    == join_oracle(q.build, q.probe)).all()
+        assert svc.stats()["cache"]["hits"] > 0   # hot pool recurs
+
+
+def test_admission_rejects_when_full(cp):
+    from repro.engine import QueueFull
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           max_queue=1, num_workers=0)
+    # No workers drain the queue: the second non-blocking submit must bounce.
+    b = unique_relation(256, seed=1)
+    s = uniform_relation(256, key_range=256, seed=2)
+    svc._ensure_workers = lambda: None
+    svc.submit(JoinQuery(build=b, probe=s, query_id=1), block=False)
+    with pytest.raises(QueueFull):
+        svc.submit(JoinQuery(build=b, probe=s, query_id=2), block=False)
+    assert svc.stats()["rejected"] == 1
+
+
+def test_outcome_and_timing_to_dict(cp):
+    import json
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=0)
+    q = make_workload("uniform", num_queries=1, base_tuples=512, seed=1)[0]
+    out = svc.execute(q)
+    d = out.to_dict()
+    json.dumps(d)                               # fully serializable
+    assert d["timing"]["phase_s"] and d["matches"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# Workload generator.
+# ---------------------------------------------------------------------------
+
+def test_workload_scenarios_and_mixes():
+    gen = WorkloadGenerator(1024, seed=0)
+    for name in ("uniform", "zipf", "selectivity", "hot_table"):
+        q = getattr(gen, name)()
+        assert q.build.size >= 256 and q.probe.size >= 256
+        assert q.max_out > 0 and q.query_id > 0
+    wl = make_workload("mixed", num_queries=20, base_tuples=512, seed=2)
+    tags = {q.tag.split("_")[0] for q in wl}
+    assert len(wl) == 20 and len(tags) >= 2     # genuinely mixed
+    # Determinism: same seed, same stream.
+    wl2 = make_workload("mixed", num_queries=20, base_tuples=512, seed=2)
+    assert [q.tag for q in wl] == [q.tag for q in wl2]
+    assert all(np.asarray(a.probe.key).tobytes()
+               == np.asarray(b.probe.key).tobytes()
+               for a, b in zip(wl, wl2))
+
+
+def test_hot_table_stream_recurs_fingerprints():
+    wl = make_workload("hot_table", num_queries=8, base_tuples=512, seed=4)
+    fps = [relation_fingerprint(q.build, default_num_buckets(q.build.size))
+           for q in wl]
+    assert len(set(fps)) < len(fps)             # pool recurrence
