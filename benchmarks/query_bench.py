@@ -1,0 +1,138 @@
+"""Query-pipeline benchmark: join ordering, co-processing, and reuse.
+
+Three measured figures for the multi-join subsystem on a 3-join star
+query (fact ⋈ D0 ⋈ D1 ⋈ D2, one highly selective dimension filter):
+
+  1. **join order** — the cost-model-chosen order vs the worst enumerated
+     order vs the textual left-deep baseline, all verified against the
+     NumPy reference; the chosen order must beat the worst (the optimizer's
+     reason to exist).
+  2. **single device** — the chosen order re-run with planning pinned to
+     GPU_ONLY: what pipelined co-processing over both groups adds.
+  3. **star replay** — a ``WorkloadGenerator.star()`` stream through one
+     shared executor: multi-join traffic with recurring dimensions,
+     reporting pipelines/sec and both build-side cache hit kinds.
+
+Smoke mode (CI) shrinks sizes so the whole thing runs in tens of seconds.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import N_TUPLES, csv_row, report, time_call
+
+
+def _run_verified(executor, query, physical, ref):
+    res = executor.run(query, physical)
+    got = res.rows_array()
+    assert got.shape == ref[0].shape and (got == ref[0]).all(), \
+        "pipeline rows diverge from the NumPy reference"
+    assert res.aggregate == ref[1], (res.aggregate, ref[1])
+    return res
+
+
+def query_pipeline(smoke: bool = False):
+    from repro.core import CoProcessor
+    from repro.engine import JoinQueryService, QueryPlanner, WorkloadGenerator
+    from repro.queries import (JoinOrderOptimizer, PipelineExecutor,
+                               make_star_query, reference_execute)
+
+    # Sizes where data volume dominates per-stage dispatch overhead —
+    # at a few thousand tuples every order costs the same ~5 ms of fixed
+    # overhead per stage and the comparison measures noise.
+    if smoke:
+        fact, dim, delta, cal_n, reps, n_stars = 65536, 4096, 0.25, 8192, 3, 4
+    else:
+        fact = min(max(N_TUPLES // 4, 1 << 18), 1 << 20)
+        dim, delta, cal_n, reps, n_stars = fact // 8, 0.1, 32768, 5, 6
+
+    cp = CoProcessor()
+    out: dict = {"smoke": smoke, "fact_rows": fact, "dim_rows": dim}
+    planner = QueryPlanner.calibrated(cp, n=cal_n, reps=1, delta=delta)
+    optimizer = JoinOrderOptimizer(planner)
+
+    # -- 1. chosen vs worst vs textual join order -------------------------
+    # One selective dimension: the chosen order shrinks the pipeline's
+    # intermediates immediately, the worst order drags full-size ones.
+    query = make_star_query(fact, [dim] * 3, selectivities=[0.02, None, 0.5],
+                            seed=17, aggregate=("count",))
+    ref = reference_execute(query)
+    chosen = optimizer.optimize(query)
+    worst = optimizer.worst_order(query)
+    textual = optimizer.price_order(query, query.joins)
+    out["plans"] = {"chosen": chosen.to_dict(), "worst": worst.to_dict(),
+                    "textual": textual.to_dict()}
+
+    def timed(physical, use_planner=None):
+        pl = use_planner or planner
+        svc = JoinQueryService(cp=cp, planner=pl, num_workers=2)
+        with PipelineExecutor(service=svc, optimizer=optimizer) as ex:
+            # Warm passes: compile every stage variant and let the online
+            # scales settle, then freeze adaptation so the timed passes
+            # measure the converged plans (engine_bench's protocol).
+            _run_verified(ex, query, physical, ref)
+            for _ in range(2):
+                ex.run(query, physical)
+            saved, pl.online.alpha = pl.online.alpha, 0.0
+            try:
+                t = time_call(lambda: ex.run(query, physical), reps=reps,
+                              warmup=1)
+            finally:
+                pl.online.alpha = saved
+            stats = svc.stats()
+        return t, stats
+
+    t_chosen, st_chosen = timed(chosen)
+    t_worst, _ = timed(worst)
+    t_textual, _ = timed(textual)
+    out["join_order"] = {
+        "chosen_s": t_chosen, "worst_s": t_worst, "textual_s": t_textual,
+        "chosen_est_s": chosen.est_total_s, "worst_est_s": worst.est_total_s,
+        "speedup_vs_worst": t_worst / t_chosen,
+        "optimized_beats_worst": bool(t_chosen < t_worst),
+        "chosen_cache": st_chosen["cache"]}
+    csv_row("query/order_chosen", t_chosen * 1e6,
+            f"est={chosen.est_total_s*1e3:.2f}ms")
+    csv_row("query/order_worst", t_worst * 1e6,
+            f"slowdown={t_worst/t_chosen:.2f}x")
+    csv_row("query/order_textual", t_textual * 1e6, "")
+
+    # -- 2. pipelined co-processing vs a single device --------------------
+    single_planner = QueryPlanner.calibrated(
+        cp, n=cal_n, reps=1, delta=delta,
+        allowed_schemes=("GPU_ONLY",), allow_phj=False)
+    single_opt = JoinOrderOptimizer(single_planner)
+    t_single, _ = timed(single_opt.optimize(query),
+                        use_planner=single_planner)
+    out["single_device"] = {"gpu_only_s": t_single,
+                            "coproc_vs_single": t_single / t_chosen}
+    csv_row("query/single_device", t_single * 1e6,
+            f"coproc_speedup={t_single/t_chosen:.2f}x")
+
+    # -- 3. star replay: multi-join traffic with recurring dimensions -----
+    gen = WorkloadGenerator(max(1024, fact // 4), seed=29)
+    stars = [gen.star() for _ in range(n_stars)]
+    refs = [reference_execute(s) for s in stars]
+    svc = JoinQueryService(cp=cp, planner=planner, num_workers=2)
+    with PipelineExecutor(service=svc, optimizer=optimizer) as ex:
+        for s, r in zip(stars, refs):                 # warm + verify
+            _run_verified(ex, s, optimizer.optimize(s), r)
+        t0 = time.perf_counter()
+        outcomes = [ex.run(s) for s in stars]
+        elapsed = time.perf_counter() - t0
+        stats = svc.stats()
+    pps = len(stars) / elapsed
+    out["star_replay"] = {
+        "pipelines_per_s": pps, "elapsed_s": elapsed,
+        "stage_wall_s_mean": float(np.mean(
+            [o.wall_s for r in outcomes for o in r.outcomes])),
+        "cache": stats["cache"],
+        "pipelines": [r.to_dict() for r in outcomes]}
+    csv_row("query/star_replay", 1e6 / pps,
+            f"pipelines_per_s={pps:.2f};"
+            f"hit_rate={stats['cache']['hit_rate']:.2f};"
+            f"partition_hits={stats['cache']['partition_hits']}")
+    report("query_pipeline", out)
+    return out

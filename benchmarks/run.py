@@ -33,8 +33,8 @@ import traceback
 def registry(smoke: bool = False):
     from functools import partial
 
-    from . import (alloc_figs, engine_bench, paper_figs, roofline,
-                   scale_figs)
+    from . import (alloc_figs, engine_bench, paper_figs, query_bench,
+                   roofline, scale_figs)
     return {
         "fig3": paper_figs.fig3_time_breakdown,
         "fig4": paper_figs.fig4_step_unit_costs,
@@ -57,6 +57,7 @@ def registry(smoke: bool = False):
         "roofline": roofline.run,
         "engine_throughput": partial(engine_bench.engine_throughput,
                                      smoke=smoke),
+        "query_pipeline": partial(query_bench.query_pipeline, smoke=smoke),
     }
 
 

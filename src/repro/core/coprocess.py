@@ -465,7 +465,9 @@ class PhjCoProcessorMixin:
             bits_per_pass: int | None = None, num_passes: int | None = None,
             schedule: tuple[int, ...] | None = None, planner=None,
             shj_bits: int, max_out: int,
-            partition_ratio: float, join_ratio: float) -> tuple[ht.JoinResult, "Timing"]:
+            partition_ratio: float, join_ratio: float,
+            build_parts: Relation | None = None,
+            parts_out: dict | None = None) -> tuple[ht.JoinResult, "Timing"]:
         """PHJ co-processing: ratio-split partitioning, then partition-pair
         ownership split for the join phase (paper PHJ-DD/PL skeleton).
 
@@ -474,6 +476,14 @@ class PhjCoProcessorMixin:
 
         ``partition_ratio`` — C-group share of the partition passes.
         ``join_ratio``      — fraction of partition pairs owned by C.
+        ``build_parts``     — an already-partitioned build relation (as a
+                              prior call returned through ``parts_out``
+                              under the SAME schedule): R skips the n1–n3
+                              partition passes entirely.  This is what the
+                              engine's partition-layout cache feeds back.
+        ``parts_out``       — when a dict is passed, its ``"R"`` slot
+                              receives the partitioned build layout for the
+                              caller to cache.
         """
         from .partition import radix_partition_scheduled
         from .phj import resolve_schedule
@@ -493,7 +503,12 @@ class PhjCoProcessorMixin:
             return radix_partition_scheduled(rel, schedule=sched).rel
 
         parts = {}
-        for tag, rel in (("R", build_rel), ("S", probe_rel)):
+        if build_parts is not None:
+            parts["R"] = build_parts
+            timing.notes["build_parts_reused"] = True
+        todo = ([("S", probe_rel)] if build_parts is not None
+                else [("R", build_rel), ("S", probe_rel)])
+        for tag, rel in todo:
             n = rel.size
             cut = self._cut(n, partition_ratio)
             if self.discrete and 0 < cut < n:
@@ -509,6 +524,8 @@ class PhjCoProcessorMixin:
             parts[tag] = Relation(
                 jnp.concatenate([x.rid for x in pieces]),
                 jnp.concatenate([x.key for x in pieces]))
+        if parts_out is not None:
+            parts_out["R"] = parts["R"]
         t1 = time.perf_counter()
         timing.phase_s["partition"] = t1 - t0
 

@@ -41,6 +41,19 @@ class Relation:
     def take(self, lo: int, hi: int) -> "Relation":
         return Relation(self.rid[lo:hi], self.key[lo:hi])
 
+    def gather(self, idx) -> "Relation":
+        """Rows selected by index — the semijoin/materialization primitive.
+
+        A join result's ``(probe_rid, build_rid)`` pairs index back into the
+        originating relations when ``rid == arange(n)`` (the generator
+        convention); gathering by those indices materializes the matched
+        tuples, which is how the query pipeline carries intermediates
+        between stages.
+        """
+        idx = jnp.asarray(idx)
+        return Relation(jnp.take(self.rid, idx, axis=0),
+                        jnp.take(self.key, idx, axis=0))
+
     def tree_flatten(self):
         return (self.rid, self.key), None
 

@@ -117,6 +117,8 @@ class QueryPlanner:
                  reuse_discount: float = 0.5,
                  phj_overhead_s: float = 2e-3,
                  coproc_margin: float = 1.1,
+                 min_feedback_items: int = 2048,
+                 replan_margin: float = 0.8,
                  u_overrides: dict | None = None,
                  pass_planner: PassPlanner | None = None,
                  partition_device_g: DeviceSpec | None = None,
@@ -141,6 +143,19 @@ class QueryPlanner:
         # model does not price, so co-processing must promise at least
         # this factor of improvement over the best single-group plan.
         self.coproc_margin = float(coproc_margin)
+        # Feedback floor: a query this small measures dispatch overhead,
+        # not per-item cost — one such sample can swing the online scales
+        # by orders of magnitude, and every material move invalidates all
+        # sticky plans (recompile churn).  The query pipeline's post-filter
+        # stages routinely run a few hundred tuples; they must not
+        # calibrate the model.
+        self.min_feedback_items = int(min_feedback_items)
+        # Replan hysteresis: when a calibration tick re-prices a sticky
+        # signature, the challenger must beat the incumbent's re-priced
+        # estimate by this factor to displace it.  Near-tie flips would
+        # trade compiled executables for a fresh XLA compile each time the
+        # scales wiggle — far more expensive than any near-tie gain.
+        self.replan_margin = float(replan_margin)
         self.u_overrides = dict(u_overrides or {})
         self.pass_planner = pass_planner or default_planner(device_c)
         # None -> the G-group mirrors the planner's (calibrated) C costs;
@@ -348,6 +363,17 @@ class QueryPlanner:
             return est + c * c_load + (1.0 - c) * g_load
 
         best = min(candidates, key=effective)
+        if hit is not None:
+            # Re-priced after a calibration tick: keep the incumbent's
+            # scheme (and its compiled executables) unless the challenger
+            # is a material improvement, not a near-tie flip.
+            prev = hit[1]
+            keep = [p for p in candidates
+                    if (p.algorithm, p.scheme, p.cached)
+                    == (prev.algorithm, prev.scheme, prev.cached)]
+            if keep and effective(best) >= self.replan_margin * \
+                    effective(keep[0]):
+                best = keep[0]
         best.max_out = int(max_out)
         with self._lock:
             if len(self._plan_cache) > 512:

@@ -30,7 +30,8 @@ from repro.core.coprocess import CoProcessor, Timing
 from repro.core.hash_table import JoinResult, default_num_buckets
 
 from .planner import QueryPlan, QueryPlanner
-from .table_cache import BuildTableCache, relation_fingerprint
+from .table_cache import (BuildTableCache, partition_layout_key,
+                          relation_fingerprint)
 
 
 @dataclasses.dataclass
@@ -42,6 +43,7 @@ class JoinQuery:
     tag: str = "adhoc"
     max_out: int | None = None    # result capacity; defaulted from |S|
     query_id: int = -1
+    priority: int = 0             # higher runs earlier (aged, so no starving)
 
 
 @dataclasses.dataclass
@@ -54,12 +56,22 @@ class QueryOutcome:
     queued_s: float
     wall_s: float                 # plan + execute (excludes queue wait)
     result: JoinResult
+    partition_cache_hit: bool = False
+    priority: int = 0
 
     def to_dict(self) -> dict:
+        """Everything a bench rollup needs to segment latency by plan type
+        — algorithm/scheme, both cache-hit flags, and the PHJ schedule —
+        without re-deriving any of it from the plan object."""
         return {"query_id": self.query_id, "tag": self.tag,
+                "priority": self.priority,
                 "algorithm": self.plan.algorithm,
                 "scheme": self.plan.scheme,
+                "table_mode": self.plan.table_mode,
                 "cache_hit": self.cache_hit,
+                "partition_cache_hit": self.partition_cache_hit,
+                "schedule": (list(self.plan.schedule)
+                             if self.plan.schedule else None),
                 "est_s": self.plan.est_s,
                 "queued_s": self.queued_s, "wall_s": self.wall_s,
                 "matches": int(self.result.count),
@@ -68,6 +80,83 @@ class QueryOutcome:
 
 class QueueFull(RuntimeError):
     """Admission rejected: the service is at capacity."""
+
+
+class PriorityAgingQueue:
+    """Bounded priority queue: highest priority first, FIFO within a level.
+
+    Waiting items age — effective priority is ``priority + waited/aging_s``
+    — so a steady stream of high-priority queries cannot starve a low-
+    priority one: after ``aging_s * gap`` seconds the old query outranks
+    every fresh arrival.  ``clock`` is injectable for deterministic tests.
+    """
+
+    def __init__(self, maxsize: int = 0, *, aging_s: float = 5.0,
+                 clock=time.monotonic):
+        self.maxsize = int(maxsize)
+        self.aging_s = float(aging_s)
+        self._clock = clock
+        self._items: list[tuple[int, int, float, object]] = []
+        self._cond = threading.Condition()
+        self._seq = 0
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._items)
+
+    qsize = __len__
+
+    def put(self, item, priority: int = 0, block: bool = True,
+            timeout: float | None = None):
+        with self._cond:
+            if self.maxsize > 0:
+                if not block and len(self._items) >= self.maxsize:
+                    raise queue.Full
+                end = None if timeout is None else self._clock() + timeout
+                while len(self._items) >= self.maxsize:
+                    rem = None if end is None else end - self._clock()
+                    if rem is not None and rem <= 0:
+                        raise queue.Full
+                    if not self._cond.wait(rem):
+                        raise queue.Full
+            self._seq += 1
+            self._items.append((int(priority), self._seq, self._clock(),
+                                item))
+            self._cond.notify()
+
+    def _pop_best(self):
+        now = self._clock()
+
+        def eff(entry):
+            prio, seq, enq_t, _ = entry
+            # Tie-break on -seq: among equal effective priorities the
+            # oldest admission wins (FIFO within a level).
+            return (prio + (now - enq_t) / self.aging_s, -seq)
+
+        i = max(range(len(self._items)), key=lambda j: eff(self._items[j]))
+        entry = self._items.pop(i)
+        self._cond.notify()          # a blocked put may now have room
+        return entry[3]
+
+    def get(self, timeout: float | None = None):
+        with self._cond:
+            end = None if timeout is None else self._clock() + timeout
+            while not self._items:
+                rem = None if end is None else end - self._clock()
+                if rem is not None and rem <= 0:
+                    raise queue.Empty
+                if not self._cond.wait(rem):
+                    raise queue.Empty
+            return self._pop_best()
+
+    def get_nowait(self):
+        with self._cond:
+            if not self._items:
+                raise queue.Empty
+            return self._pop_best()
+
+    def task_done(self):              # queue.Queue API compat (no join())
+        pass
 
 
 def _plan_groups(plan: QueryPlan) -> set[str]:
@@ -98,12 +187,14 @@ class JoinQueryService:
     def __init__(self, cp: CoProcessor | None = None,
                  planner: QueryPlanner | None = None, *,
                  cache_budget_bytes: int = 256 << 20,
-                 max_queue: int = 128, num_workers: int = 2):
+                 max_queue: int = 128, num_workers: int = 2,
+                 priority_aging_s: float = 5.0):
         self.cp = cp or CoProcessor()
         self.planner = planner or QueryPlanner()
         self.cache = BuildTableCache(cache_budget_bytes)
         self.num_workers = int(num_workers)
-        self._queue: queue.Queue = queue.Queue(maxsize=max_queue)
+        self._queue = PriorityAgingQueue(maxsize=max_queue,
+                                         aging_s=priority_aging_s)
         self._workers: list[threading.Thread] = []
         self._stop = threading.Event()
         self._lock = threading.Lock()
@@ -168,6 +259,7 @@ class JoinQueryService:
                 if g in _plan_groups(plan)]
         for lock in held:
             lock.acquire()
+        partition_hit = False
         try:
             cache_hit = table is not None and plan.cached
             if cache_hit:
@@ -178,11 +270,25 @@ class JoinQueryService:
                     q.probe, table, max_out=max_out,
                     ratios=plan.probe_ratios, timing=timing)
             elif plan.algorithm == "phj":
+                # Partition-layout cache: a repeated PHJ build side skips
+                # its n1–n3 passes off the resident partitioned layout
+                # (keyed by content + schedule; hits counted separately).
+                pkey = partition_layout_key(key, plan.schedule)
+                layout = self.cache.peek_partition(pkey)
+                parts_out: dict = {}
                 result, timing = self.cp.phj(
                     q.build, q.probe, schedule=plan.schedule,
                     shj_bits=plan.shj_bits, max_out=max_out,
                     partition_ratio=plan.partition_ratio,
-                    join_ratio=plan.join_ratio)
+                    join_ratio=plan.join_ratio,
+                    build_parts=layout,
+                    parts_out=None if layout is not None else parts_out)
+                if layout is not None:
+                    self.cache.get_partition(pkey)  # hit + LRU touch
+                    partition_hit = True
+                else:
+                    self.cache.record_partition_miss()
+                    self.cache.put_partition(pkey, parts_out["R"])
             else:
                 # Miss accounting mirrors hit accounting: only a plan that
                 # would have *used* a resident table counts as a miss (a
@@ -222,13 +328,21 @@ class JoinQueryService:
         with self._lock:
             warmed = sig in self._observed_sigs
             self._observed_sigs.add(sig)
-        if warmed and solo:
+        # A partition-cache hit skipped the build-side passes, so its
+        # partition phase time is not a clean sample of the estimate; a
+        # tiny query measures dispatch overhead, not per-item cost (see
+        # QueryPlanner.min_feedback_items).
+        big_enough = (build_n + probe_n
+                      >= getattr(self.planner, "min_feedback_items", 0))
+        if warmed and solo and not partition_hit and big_enough:
             self.planner.observe(plan, timing)
         wall = time.perf_counter() - t0
         with self._lock:
             self.completed += 1
         return QueryOutcome(q.query_id, q.tag, plan, timing, cache_hit,
-                            0.0, wall, result)
+                            0.0, wall, result,
+                            partition_cache_hit=partition_hit,
+                            priority=q.priority)
 
     # -- admission + workers -------------------------------------------------
     def _ensure_workers(self):
@@ -272,7 +386,8 @@ class JoinQueryService:
         done = threading.Event()
         try:
             self._queue.put((q, time.perf_counter(), box, done),
-                            block=block, timeout=timeout)
+                            priority=q.priority, block=block,
+                            timeout=timeout)
         except queue.Full:
             with self._lock:
                 self.rejected += 1
@@ -283,6 +398,54 @@ class JoinQueryService:
         def wait(timeout: float | None = None) -> QueryOutcome:
             if not done.wait(timeout):
                 raise TimeoutError(f"query {q.query_id} still running")
+            if "error" in box:
+                raise box["error"]
+            return box["outcome"]
+
+        return wait
+
+    def submit_deferred(self, make_query, deps=(), *, finalize=None,
+                        priority: int | None = None):
+        """Admit one pipeline stage that depends on earlier stages.
+
+        ``make_query(dep_outcomes)`` is called — with the outcomes of the
+        ``deps`` handles, in order — only once they have all resolved, and
+        must return the stage's ``JoinQuery`` (its inputs typically do not
+        exist before its dependencies finish).  ``finalize(outcome)``, when
+        given, runs before the returned handle resolves; the query-pipeline
+        executor materializes stage intermediates there so dependent
+        stages always find them.  Returns a ``wait()``-able like
+        ``submit``.  Stages with disjoint dependency sets go through the
+        normal admission queue concurrently — that is where independent
+        subtrees of a join tree overlap on the two device groups.
+        """
+        box: dict = {}
+        done = threading.Event()
+
+        def runner():
+            try:
+                outs = [d() for d in deps]   # dep failures propagate
+                q = make_query(outs)
+                if priority is not None:
+                    q.priority = priority
+                if self.num_workers <= 0:
+                    out = self.execute(q)
+                else:
+                    out = self.submit(q)()
+                if finalize is not None:
+                    finalize(out)
+                box["outcome"] = out
+            except Exception as e:
+                box["error"] = e
+            finally:
+                done.set()
+
+        threading.Thread(target=runner, daemon=True,
+                         name="join-deferred").start()
+
+        def wait(timeout: float | None = None) -> QueryOutcome:
+            if not done.wait(timeout):
+                raise TimeoutError("deferred query still running")
             if "error" in box:
                 raise box["error"]
             return box["outcome"]

@@ -42,8 +42,28 @@ def table_nbytes(table) -> int:
     return int(sum(x.nbytes for x in jax.tree.leaves(table)))
 
 
+def partition_layout_key(fingerprint: str, schedule) -> str:
+    """Cache key for a PHJ partitioned layout: content + pass schedule.
+
+    Layouts produced under different radix schedules assign different
+    partition ids, so they are not interchangeable."""
+    return f"part:{fingerprint}|sched={tuple(int(b) for b in schedule)}"
+
+
 class BuildTableCache:
-    """LRU hash-table cache under a byte budget.  Thread-safe."""
+    """LRU cache of finished build state under one byte budget.  Thread-safe.
+
+    Two kinds of entries share the budget and the LRU order:
+
+      * **hash tables** (SHJ) — the finished CSR table; a hit runs
+        probe-only.
+      * **partitioned layouts** (PHJ) — the build relation after its n1–n3
+        radix passes (``partition_layout_key``); a hit skips the build-side
+        partition passes, the PHJ analogue of table reuse (ROADMAP open
+        item: "caching partitions would extend the reuse story").
+
+    Hit/miss counters are kept per kind so ``stats()`` can attribute reuse.
+    """
 
     def __init__(self, budget_bytes: int = 256 << 20):
         self.budget_bytes = int(budget_bytes)
@@ -54,6 +74,9 @@ class BuildTableCache:
         self.misses = 0
         self.puts = 0
         self.evictions = 0
+        self.partition_hits = 0
+        self.partition_misses = 0
+        self.partition_puts = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -86,16 +109,44 @@ class BuildTableCache:
     def put(self, key: str, table) -> bool:
         """Insert; evicts LRU entries until under budget.  Returns False if
         the table alone exceeds the whole budget (not cached)."""
-        nbytes = table_nbytes(table)
+        return self._put(key, table, "table")
+
+    # -- partitioned layouts (PHJ build side) -------------------------------
+    def peek_partition(self, key: str):
+        """Partition-layout lookup without touching stats or LRU order."""
+        return self.peek(key)
+
+    def get_partition(self, key: str):
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                self.partition_misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.partition_hits += 1
+            return ent[0]
+
+    def record_partition_miss(self):
+        with self._lock:
+            self.partition_misses += 1
+
+    def put_partition(self, key: str, layout) -> bool:
+        return self._put(key, layout, "partition")
+
+    def _put(self, key: str, obj, kind: str) -> bool:
+        nbytes = table_nbytes(obj)
         if nbytes > self.budget_bytes:
             return False
         with self._lock:
             if key in self._entries:
                 self._entries.move_to_end(key)
                 return True
-            self._entries[key] = (table, nbytes)
+            self._entries[key] = (obj, nbytes)
             self.bytes += nbytes
-            self.puts += 1
+            if kind == "partition":
+                self.partition_puts += 1
+            else:
+                self.puts += 1
             while self.bytes > self.budget_bytes:
                 _, (_, ev_bytes) = self._entries.popitem(last=False)
                 self.bytes -= ev_bytes
@@ -112,10 +163,19 @@ class BuildTableCache:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    @property
+    def partition_hit_rate(self) -> float:
+        total = self.partition_hits + self.partition_misses
+        return self.partition_hits / total if total else 0.0
+
     def stats(self) -> dict:
         with self._lock:
             return {"entries": len(self._entries), "bytes": self.bytes,
                     "budget_bytes": self.budget_bytes, "hits": self.hits,
                     "misses": self.misses, "puts": self.puts,
                     "evictions": self.evictions,
-                    "hit_rate": self.hit_rate}
+                    "hit_rate": self.hit_rate,
+                    "partition_hits": self.partition_hits,
+                    "partition_misses": self.partition_misses,
+                    "partition_puts": self.partition_puts,
+                    "partition_hit_rate": self.partition_hit_rate}

@@ -12,9 +12,16 @@ sizes, skew, and selectivity — the axes the paper sweeps in §5):
   * ``hot_table``   — fresh probes against a small pool of recurring build
                       relations: the scenario the build-table cache exists
                       for (every repeat skips the build phase).
+  * ``star``        — multi-join traffic: a star-shaped *logical query*
+                      (fresh fact table, dimensions drawn from a recurring
+                      hot pool) for ``repro.queries.PipelineExecutor`` —
+                      the engine sees its stages as ordinary join queries,
+                      so dimension reuse hits the build-side caches.
 
 ``make_workload`` assembles a weighted mix; ``MIXES`` names the standard
-mixes the benchmarks and tests use.
+mixes the benchmarks and tests use.  ``star`` produces ``queries.Query``
+objects (not ``JoinQuery``), so it is replayed through the query-pipeline
+executor rather than ``stream``.
 """
 from __future__ import annotations
 
@@ -66,6 +73,11 @@ class WorkloadGenerator:
             for i in range(hot_pool)]
         self._sel_cycle = (0.125, 0.5, 1.0)
         self._sel_i = 0
+        # Star scenario: recurring dimension tables + a short selectivity
+        # cycle (repeats make the per-stage build sides cacheable).
+        self._star_pool: list = []
+        self._star_sels = (None, 0.1, 0.4)
+        self._star_i = 0
         self._qid = 0
 
     # -- scenarios ----------------------------------------------------------
@@ -101,6 +113,37 @@ class WorkloadGenerator:
         import jax.numpy as jnp
         s = Relation(jnp.arange(ns, dtype=jnp.int32), jnp.asarray(keys))
         return self._query(b, s, "hot_table", max_out=ns + 64)
+
+    def star(self, num_dims: int = 3):
+        """A star-shaped logical ``repro.queries.Query`` (multi-join).
+
+        The fact table is fresh per call; the dimensions come from a
+        recurring pool with a small cycle of filter selectivities, so
+        replaying stars through ``PipelineExecutor`` produces repeated
+        build sides — the cross-operator reuse the caches exist for.
+        """
+        from repro.queries import make_star_query
+        if not self._star_pool:
+            rng = np.random.default_rng(int(self.rng.integers(1 << 30)))
+            from repro.queries import Table
+            for i in range(len(self._hot_pool)):
+                n = _size(rng, max(1024, self.base // 2))
+                self._star_pool.append(Table(f"D{i}", {
+                    "id": rng.permutation(n).astype(np.int32),
+                    "a": rng.integers(0, 1000, size=n, dtype=np.int32)}))
+        idx = sorted(self.rng.choice(len(self._star_pool),
+                                     size=min(num_dims,
+                                              len(self._star_pool)),
+                                     replace=False))
+        dims = [self._star_pool[i] for i in idx]
+        sels = [self._star_sels[(self._star_i + k) % len(self._star_sels)]
+                for k in range(len(dims))]
+        self._star_i += 1
+        self._qid += 1
+        return make_star_query(
+            _size(self.rng, 2 * self.base), [d.size for d in dims],
+            selectivities=sels, seed=int(self.rng.integers(1 << 30)),
+            aggregate=("count",), dim_tables=dims)
 
     def _query(self, b, s, tag, *, max_out) -> JoinQuery:
         self._qid += 1

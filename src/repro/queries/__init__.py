@@ -1,0 +1,23 @@
+"""Multi-join query pipeline over the concurrent join engine.
+
+The paper frames hash joins as the core of query co-processing; this
+package adds the query half: a declarative multi-join IR (``plan``), a
+cost-model join-order optimizer that prices each candidate stage through
+the engine's ``QueryPlanner`` (``optimize``), and a pipelined executor
+that streams the stages through ``JoinQueryService`` with dependency-aware
+admission, intermediate materialization, and build-side cache reuse
+(``executor``).
+
+  * ``Table`` / ``Filter`` / ``Join`` / ``Query``      — logical plan IR
+  * ``JoinOrderOptimizer`` / ``PhysicalPlan`` / ``PipelineStage``
+  * ``PipelineExecutor`` / ``PipelineResult``
+  * ``make_star_query`` / ``make_chain_query``          — query generators
+  * ``reference_execute`` / ``rows_array``              — NumPy oracle
+"""
+from .executor import PipelineExecutor, PipelineResult
+from .optimize import JoinOrderOptimizer, PhysicalPlan, PipelineStage
+from .plan import (Filter, Join, Query, Table, apply_aggregate,
+                   make_chain_query, make_star_query, reference_execute,
+                   reference_rows, rows_array)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

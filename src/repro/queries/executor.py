@@ -1,0 +1,205 @@
+"""Pipelined execution of a physical plan over the join-query engine.
+
+Each ``PipelineStage`` becomes one ``JoinQuery`` submitted through
+``JoinQueryService.submit_deferred``: a stage waits only on the stages
+whose outputs it consumes, so independent subtrees of a bushy plan sit in
+the admission queue together and overlap on the two device groups exactly
+like unrelated queries do (C-only/G-only concurrency).  Between stages the
+match indices are materialized into qualified payload columns with the
+``rid = arange(n)`` gather convention (Ozawa et al.'s point that
+pipelining intermediates between operators, not re-scanning, is the
+dominant win).
+
+Reuse falls out of the engine untouched: a stage's build side is
+fingerprinted like any other query, so a dimension table shared by many
+queries hits the build-table cache (SHJ) or the partition-layout cache
+(PHJ) after its first use.
+
+Capacity planning: a stage's result buffer is sized from an exact
+host-side match count (two ``searchsorted`` passes over the build keys) —
+estimates drive *ordering*, but capacities must never truncate.  Deeper
+stages get higher admission priority so in-flight pipelines drain before
+fresh root stages are admitted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.relation import Relation, next_pow2
+from repro.engine.service import JoinQuery, JoinQueryService
+
+from .optimize import JoinOrderOptimizer, PhysicalPlan
+from .plan import Query, apply_aggregate, rows_array
+
+# Filler keys for padding tiny/empty stage inputs up to a minimum size.
+# Distinct negative values per side: they match neither real keys (>= 0)
+# nor the engine's own pad sentinels (-2/-3) nor each other.
+BUILD_FILL_KEY = -6
+PROBE_FILL_KEY = -7
+MIN_STAGE_ROWS = 64
+
+
+def _as_relation(col: np.ndarray, fill_key: int) -> Relation:
+    """A core Relation over a column, rid = row index (gather convention)."""
+    n = col.shape[0]
+    if n and int(col.min()) < 0:
+        raise ValueError(
+            "negative join-key values are unsupported: they collide with "
+            "the executor's fill keys and the engine's pad sentinels")
+    rid = np.arange(n, dtype=np.int32)
+    if n < MIN_STAGE_ROWS:
+        pad = MIN_STAGE_ROWS - n
+        col = np.concatenate([col.astype(np.int32),
+                              np.full(pad, fill_key, np.int32)])
+        rid = np.concatenate([rid, np.full(pad, -1, np.int32)])
+    return Relation(jnp.asarray(rid), jnp.asarray(col, dtype=jnp.int32))
+
+
+def _apply_residual(cols: dict, left_q: str, right_q: str) -> dict:
+    """Cycle-edge equality filter over one component's columns."""
+    mask = cols[left_q] == cols[right_q]
+    return {q: v[mask] for q, v in cols.items()}
+
+
+def _match_count(build_keys: np.ndarray, probe_keys: np.ndarray) -> int:
+    """Exact join cardinality (host-side sort + two searchsorted passes)."""
+    bk = np.sort(build_keys.astype(np.int64), kind="stable")
+    pk = probe_keys.astype(np.int64)
+    return int((np.searchsorted(bk, pk, side="right")
+                - np.searchsorted(bk, pk, side="left")).sum())
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    """Outcome of one pipelined query execution."""
+
+    columns: dict                 # final qualified columns (NumPy)
+    rows: int
+    aggregate: object             # None | int
+    outcomes: list                # QueryOutcome per stage, stage order
+    wall_s: float
+    physical: PhysicalPlan
+
+    def rows_array(self) -> np.ndarray:
+        return rows_array(self.columns)
+
+    def to_dict(self) -> dict:
+        return {"rows": self.rows, "aggregate": self.aggregate,
+                "wall_s": self.wall_s,
+                "est_total_s": self.physical.est_total_s,
+                "stages": [o.to_dict() for o in self.outcomes]}
+
+
+class PipelineExecutor:
+    """Runs physical plans through a (possibly shared) JoinQueryService."""
+
+    def __init__(self, service: JoinQueryService | None = None,
+                 optimizer: JoinOrderOptimizer | None = None):
+        self.service = service or JoinQueryService(num_workers=2)
+        self.optimizer = optimizer or JoinOrderOptimizer(self.service.planner)
+        self._qid = itertools.count(1)
+
+    def close(self):
+        self.service.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- the pipeline --------------------------------------------------------
+    def run(self, query: Query,
+            physical: PhysicalPlan | None = None) -> PipelineResult:
+        """Execute ``query`` under ``physical`` (optimized when omitted)."""
+        if physical is None:
+            physical = self.optimizer.optimize(query)
+        base = {name: t.qualified() for name, t in query.tables.items()}
+        # Residual (cycle-edge) filters on base tables apply at scan time;
+        # the rest are grouped by the stage whose output they filter.
+        stage_residuals: dict[int, list] = {}
+        for ref, lq, rq in physical.residuals:
+            if isinstance(ref, str):
+                base[ref] = _apply_residual(base[ref], lq, rq)
+            else:
+                stage_residuals.setdefault(ref, []).append((lq, rq))
+        if not physical.stages:
+            if len(base) != 1:
+                raise ValueError("plan has no stages but several tables")
+            cols = next(iter(base.values()))
+            return PipelineResult(
+                columns=cols,
+                rows=next(iter(cols.values())).shape[0] if cols else 0,
+                aggregate=apply_aggregate(cols, query.aggregate),
+                outcomes=[], wall_s=0.0, physical=physical)
+
+        inter: dict[int, dict] = {}        # stage id -> qualified columns
+        depth: dict[int, int] = {}
+        handles: dict[int, object] = {}
+        t0 = time.perf_counter()
+        for stage in physical.stages:
+            depth[stage.stage_id] = 1 + max(
+                [depth[d] for d in stage.deps], default=0)
+            handles[stage.stage_id] = self.service.submit_deferred(
+                self._stage_query_fn(stage, base, inter),
+                deps=[handles[d] for d in stage.deps],
+                finalize=self._stage_finalize_fn(
+                    stage, base, inter,
+                    stage_residuals.get(stage.stage_id, ())),
+                priority=depth[stage.stage_id])
+        outcomes = [handles[s.stage_id]() for s in physical.stages]
+        wall = time.perf_counter() - t0
+        final = inter[physical.stages[-1].stage_id]
+        return PipelineResult(
+            columns=final,
+            rows=next(iter(final.values())).shape[0] if final else 0,
+            aggregate=apply_aggregate(final, query.aggregate),
+            outcomes=outcomes, wall_s=wall, physical=physical)
+
+    # -- per-stage plumbing --------------------------------------------------
+    def _input_cols(self, ref, base, inter) -> dict:
+        return base[ref] if isinstance(ref, str) else inter[ref]
+
+    def _stage_query_fn(self, stage, base, inter):
+        def make_query(_dep_outcomes) -> JoinQuery:
+            bcols = self._input_cols(stage.build_input, base, inter)
+            pcols = self._input_cols(stage.probe_input, base, inter)
+            bkey = bcols[stage.build_col]
+            pkey = pcols[stage.probe_col]
+            matches = _match_count(bkey, pkey)
+            # Power-of-two capacity: stable across repeats of the same
+            # pipeline (compile-cache friendly) with headroom for the
+            # executor's per-group split slack.
+            max_out = next_pow2(max(4 * MIN_STAGE_ROWS,
+                                    matches + matches // 4 + 256))
+            return JoinQuery(
+                build=_as_relation(bkey, BUILD_FILL_KEY),
+                probe=_as_relation(pkey, PROBE_FILL_KEY),
+                tag=f"stage{stage.stage_id}:{stage.join}",
+                max_out=max_out, query_id=next(self._qid))
+        return make_query
+
+    def _stage_finalize_fn(self, stage, base, inter, residuals=()):
+        def finalize(outcome) -> None:
+            bcols = self._input_cols(stage.build_input, base, inter)
+            pcols = self._input_cols(stage.probe_input, base, inter)
+            c = int(outcome.result.count)
+            pr = np.asarray(outcome.result.probe_rid[:c])
+            br = np.asarray(outcome.result.build_rid[:c])
+            cols = {q: v[pr] for q, v in pcols.items()}
+            cols.update({q: v[br] for q, v in bcols.items()})
+            for lq, rq in residuals:
+                cols = _apply_residual(cols, lq, rq)
+            inter[stage.stage_id] = cols
+        return finalize
+
+    # -- convenience ---------------------------------------------------------
+    def run_optimized(self, query: Query):
+        """(chosen physical plan, result) in one call."""
+        physical = self.optimizer.optimize(query)
+        return physical, self.run(query, physical)

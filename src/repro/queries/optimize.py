@@ -1,0 +1,232 @@
+"""Cost-model join ordering: from a logical ``Query`` to a stage pipeline.
+
+Any permutation of a query's join edges is executable as a *bushy* plan:
+each edge joins the two components currently containing its endpoints (a
+base table or an earlier stage's output).  The optimizer
+
+  1. estimates every stage's intermediate cardinality with the classic
+     System-R formulas — base tables from their selectivity annotations,
+     joins as ``|A| * |B| / max(ndv(a), ndv(b))``;
+  2. prices each stage through the engine's ``QueryPlanner.choose`` (the
+     paper's §3.2/§4 machinery: co-processing scheme *and* SHJ-vs-PHJ per
+     stage, from the calibrated ``SeriesCostModel``), build side = the
+     smaller estimated input;
+  3. searches orders — exhaustive over all edge permutations up to
+     ``exhaustive_joins`` edges (Shanbhag et al.'s point that placement
+     must be decided per operator makes per-stage pricing cheap enough to
+     afford it), greedy cheapest-next-edge beyond that (>4 relations).
+
+The emitted ``PhysicalPlan`` is a DAG of ``PipelineStage``s annotated with
+the chosen scheme and algorithm; stages whose dependency sets are disjoint
+(independent subtrees) run concurrently in the executor.  The estimate is
+therefore an upper bound on wall time — pricing sums stages serially.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from repro.engine.planner import QueryPlan, QueryPlanner
+
+from .plan import Join, Query
+
+# Result-capacity headroom over the estimated output cardinality; actual
+# capacities are re-derived from realized input sizes at execution time.
+EST_OUT_SLACK = 1.25
+
+
+@dataclasses.dataclass
+class PipelineStage:
+    """One physical join stage of the pipeline (JoinQuery-compatible).
+
+    ``build_input`` / ``probe_input`` name either a base table (str) or an
+    earlier stage's output (int stage id); ``deps`` lists the stage ids
+    this stage must wait for.
+    """
+
+    stage_id: int
+    join: Join
+    build_input: object           # str table name | int stage id
+    probe_input: object
+    build_col: str                # qualified "table.column"
+    probe_col: str
+    est_build: int
+    est_probe: int
+    est_out: int
+    plan: QueryPlan               # scheme + SHJ-vs-PHJ annotation
+    deps: tuple
+
+    def to_dict(self) -> dict:
+        return {"stage_id": self.stage_id, "join": str(self.join),
+                "build_input": self.build_input,
+                "probe_input": self.probe_input,
+                "est_build": self.est_build, "est_probe": self.est_probe,
+                "est_out": self.est_out, "algorithm": self.plan.algorithm,
+                "scheme": self.plan.scheme, "est_s": self.plan.est_s,
+                "deps": list(self.deps)}
+
+
+@dataclasses.dataclass
+class PhysicalPlan:
+    stages: list
+    order: tuple                  # the join-edge order that produced it
+    est_total_s: float
+    aggregate: tuple | None = None
+    # Cycle edges: a join whose endpoints already share a component is a
+    # residual equality filter, applied to that component's output —
+    # (ref, left_q, right_q) where ref is a table name or stage id.
+    residuals: tuple = ()
+
+    def describe(self) -> str:
+        lines = [f"physical plan — est {self.est_total_s * 1e3:.2f} ms"]
+        for s in self.stages:
+            src = (lambda x: x if isinstance(x, str) else f"#{x}")
+            lines.append(
+                f"  #{s.stage_id}: {src(s.build_input)} ⋈ "
+                f"{src(s.probe_input)} on {s.join}  "
+                f"[{s.plan.algorithm}/{s.plan.scheme}] "
+                f"est {s.est_build}x{s.est_probe} -> {s.est_out}, "
+                f"{s.plan.est_s * 1e3:.2f} ms"
+                + (f" (after {list(s.deps)})" if s.deps else ""))
+        return "\n".join(lines)
+
+    def to_dict(self) -> dict:
+        return {"est_total_s": self.est_total_s,
+                "order": [str(j) for j in self.order],
+                "residuals": [[str(x) for x in r] for r in self.residuals],
+                "stages": [s.to_dict() for s in self.stages]}
+
+
+class _Component:
+    """Optimizer-side summary of a base table or intermediate result."""
+
+    def __init__(self, ref, rows: float, ndv: dict):
+        self.ref = ref            # str table name | int stage id
+        self.rows = max(1.0, rows)
+        self.ndv = ndv            # qualified col -> estimated distinct
+        self.deps = () if isinstance(ref, str) else None  # set by caller
+
+    def col_ndv(self, q: str) -> float:
+        return max(1.0, min(self.ndv.get(q, self.rows), self.rows))
+
+
+def _base_component(query: Query, name: str) -> _Component:
+    t = query.tables[name]
+    rows = t.est_rows()
+    ndv = {f"{name}.{c}": t.ndv_est(c) for c in t.columns}
+    return _Component(name, rows, ndv)
+
+
+class JoinOrderOptimizer:
+    """Enumerates and prices join orders; emits the cheapest pipeline."""
+
+    def __init__(self, planner: QueryPlanner | None = None, *,
+                 exhaustive_joins: int = 4):
+        self.planner = planner or QueryPlanner()
+        # > exhaustive_joins edges (i.e. > ~4-5 relations): greedy search.
+        self.exhaustive_joins = int(exhaustive_joins)
+
+    # -- pricing one order ---------------------------------------------------
+    def price_order(self, query: Query, order) -> PhysicalPlan:
+        """Simulate ``order`` edge by edge, pricing every stage."""
+        comps = {name: _base_component(query, name) for name in query.tables}
+        stages: list[PipelineStage] = []
+        residuals: list = []
+        total = 0.0
+        for join in order:
+            left, right = comps[join.left], comps[join.right]
+            if left is right:
+                # Cycle edge: both sides already joined — an equality
+                # filter on the component, not a stage.
+                sel = 1.0 / max(left.col_ndv(join.left_q),
+                                left.col_ndv(join.right_q))
+                rows = max(1.0, left.rows * sel)
+                shrunk = _Component(left.ref, rows,
+                                    {q: min(n, rows)
+                                     for q, n in left.ndv.items()})
+                residuals.append((left.ref, join.left_q, join.right_q))
+                for name, c in comps.items():
+                    if c is left:
+                        comps[name] = shrunk
+                continue
+            # Build side = smaller estimated input (ties go right: dims
+            # typically appear on the right of a star query's edges).
+            if left.rows < right.rows:
+                build, probe = left, right
+                build_col, probe_col = join.left_q, join.right_q
+            else:
+                build, probe = right, left
+                build_col, probe_col = join.right_q, join.left_q
+            sel = 1.0 / max(build.col_ndv(build_col),
+                            probe.col_ndv(probe_col))
+            out_rows = max(1.0, build.rows * probe.rows * sel)
+            plan = self.planner.choose(
+                int(round(build.rows)), int(round(probe.rows)),
+                max_out=max(64, int(out_rows * EST_OUT_SLACK) + 64))
+            deps = tuple(sorted(
+                {r for r in (build.ref, probe.ref) if isinstance(r, int)}))
+            stage = PipelineStage(
+                stage_id=len(stages), join=join,
+                build_input=build.ref, probe_input=probe.ref,
+                build_col=build_col, probe_col=probe_col,
+                est_build=int(round(build.rows)),
+                est_probe=int(round(probe.rows)),
+                est_out=int(round(out_rows)), plan=plan, deps=deps)
+            stages.append(stage)
+            total += plan.est_s
+            merged = _Component(stage.stage_id, out_rows,
+                                {q: min(n, out_rows)
+                                 for q, n in {**build.ndv,
+                                              **probe.ndv}.items()})
+            for name, c in comps.items():
+                if c is left or c is right:
+                    comps[name] = merged
+        return PhysicalPlan(stages=stages, order=tuple(order),
+                            est_total_s=total, aggregate=query.aggregate,
+                            residuals=tuple(residuals))
+
+    # -- search --------------------------------------------------------------
+    def enumerate_orders(self, query: Query):
+        """Every executable edge order (any permutation is a bushy plan)."""
+        return [tuple(p) for p in itertools.permutations(query.joins)]
+
+    def _greedy_order(self, query: Query):
+        """Cheapest-marginal-stage-first (for beyond-exhaustive edge counts).
+
+        At each step, price every remaining edge as the *next* stage of the
+        partial plan and commit the cheapest — O(edges²) planner calls.
+        """
+        remaining = list(query.joins)
+        chosen: list[Join] = []
+        while remaining:
+            best, best_cost = None, None
+            for j in remaining:
+                candidate = chosen + [j]
+                plan = self.price_order(query, candidate)
+                cost = (plan.est_total_s, plan.stages[-1].est_out
+                        if plan.stages else 0)
+                if best_cost is None or cost < best_cost:
+                    best, best_cost = j, cost
+            chosen.append(best)
+            remaining.remove(best)
+        return tuple(chosen)
+
+    def optimize(self, query: Query) -> PhysicalPlan:
+        """The cheapest priced order (exhaustive when small, else greedy)."""
+        if len(query.joins) <= self.exhaustive_joins:
+            candidates = self.enumerate_orders(query)
+        else:
+            candidates = [self._greedy_order(query)]
+        priced = [self.price_order(query, order) for order in candidates]
+        # Never worse than the textual left-deep order: it is always one of
+        # the exhaustive candidates, and the greedy path falls back to it
+        # if its pick prices above the baseline.
+        baseline = self.price_order(query, query.joins)
+        best = min(priced, key=lambda p: p.est_total_s)
+        return best if best.est_total_s <= baseline.est_total_s else baseline
+
+    def worst_order(self, query: Query) -> PhysicalPlan:
+        """The most expensive enumerated order (benchmark foil)."""
+        priced = [self.price_order(query, order)
+                  for order in self.enumerate_orders(query)]
+        return max(priced, key=lambda p: p.est_total_s)

@@ -1,0 +1,338 @@
+"""Logical-plan IR for multi-join queries (star / snowflake / chain shapes).
+
+The engine executes one binary join per request; real analytical queries
+chain several equi-joins over filtered base tables and end in an
+aggregation.  This module is the *declarative* layer: named tables with
+integer columns, selectivity-annotated range filters, a set of equi-join
+edges, and an optional count/sum sink.  ``optimize.py`` turns a ``Query``
+into a physical stage pipeline; ``executor.py`` runs it through the
+engine.
+
+Conventions:
+
+  * columns are int32 NumPy arrays of equal length per table (the paper's
+    4-byte-integer columnar layout, widened to many columns);
+  * a row's identity is its position — join stages build core
+    ``Relation``s with ``rid = arange(n)``, so match indices gather
+    payload columns directly (``Relation.gather``'s convention);
+  * qualified column names are ``"table.column"``; intermediates carry the
+    union of their inputs' qualified columns.
+
+A NumPy reference implementation (``reference_rows`` /
+``reference_execute``) folds the joins in textual order; every physical
+plan, whatever join order the optimizer picked, must reproduce exactly its
+row multiset — that is the permutation-invariance contract the tests and
+the ``query_pipeline`` benchmark enforce.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Filter:
+    """Range predicate ``lo <= col < hi`` with a selectivity annotation.
+
+    ``selectivity`` is the optimizer's estimate of the surviving fraction;
+    when omitted it is estimated from the column's observed min/max under a
+    uniformity assumption (the classic System-R default).
+    """
+
+    column: str
+    lo: int
+    hi: int
+    selectivity: float | None = None
+
+    def mask(self, col: np.ndarray) -> np.ndarray:
+        return (col >= self.lo) & (col < self.hi)
+
+    def estimate(self, col: np.ndarray) -> float:
+        if self.selectivity is not None:
+            return float(min(max(self.selectivity, 0.0), 1.0))
+        if col.size == 0:
+            return 1.0
+        lo, hi = int(col.min()), int(col.max()) + 1
+        width = max(1, hi - lo)
+        covered = max(0, min(self.hi, hi) - max(self.lo, lo))
+        return min(1.0, covered / width)
+
+
+class Table:
+    """A named base table: equal-length int32 columns plus scan filters."""
+
+    def __init__(self, name: str, columns: dict, filters=()):
+        self.name = name
+        self.columns = {c: np.asarray(v, dtype=np.int32)
+                        for c, v in columns.items()}
+        sizes = {v.shape[0] for v in self.columns.values()}
+        if len(sizes) != 1:
+            raise ValueError(f"ragged columns in table {name!r}: {sizes}")
+        self.filters = tuple(filters)
+        self._filtered: "Table | None" = None
+        self._ndv: dict[str, int] = {}
+
+    @property
+    def size(self) -> int:
+        return next(iter(self.columns.values())).shape[0]
+
+    def with_filters(self, *filters: Filter) -> "Table":
+        return Table(self.name, self.columns, self.filters + tuple(filters))
+
+    # -- executor side: actual data -----------------------------------------
+    def filtered(self) -> "Table":
+        """The table with its filters applied (memoized; no filters = self)."""
+        if not self.filters:
+            return self
+        if self._filtered is None:
+            mask = np.ones(self.size, dtype=bool)
+            for f in self.filters:
+                mask &= f.mask(self.columns[f.column])
+            self._filtered = Table(
+                self.name, {c: v[mask] for c, v in self.columns.items()})
+        return self._filtered
+
+    def qualified(self) -> dict:
+        """Filtered columns under their qualified ``table.column`` names."""
+        t = self.filtered()
+        return {f"{self.name}.{c}": v for c, v in t.columns.items()}
+
+    # -- optimizer side: estimates only -------------------------------------
+    def est_rows(self) -> float:
+        """Estimated post-filter cardinality (annotations, not data)."""
+        est = float(self.size)
+        for f in self.filters:
+            est *= f.estimate(self.columns[f.column])
+        return max(1.0, est)
+
+    def ndv_est(self, column: str) -> float:
+        """Estimated distinct values of ``column`` after filtering.
+
+        Exact distinct count on the unfiltered column (cheap, memoized),
+        capped by the estimated surviving rows — filtering a uniform
+        fraction keeps at most that many distinct values.
+        """
+        if column not in self._ndv:
+            self._ndv[column] = int(np.unique(self.columns[column]).size)
+        return max(1.0, min(float(self._ndv[column]), self.est_rows()))
+
+
+@dataclasses.dataclass(frozen=True)
+class Join:
+    """One equi-join edge: ``left.left_col == right.right_col``."""
+
+    left: str
+    left_col: str
+    right: str
+    right_col: str
+
+    @property
+    def left_q(self) -> str:
+        return f"{self.left}.{self.left_col}"
+
+    @property
+    def right_q(self) -> str:
+        return f"{self.right}.{self.right_col}"
+
+    def __str__(self) -> str:
+        return f"{self.left_q}={self.right_q}"
+
+
+@dataclasses.dataclass
+class Query:
+    """A declarative multi-join query: tables, join edges, optional sink.
+
+    ``joins`` in textual order is the naive left-deep baseline the
+    optimizer must never price worse than.  ``aggregate`` is ``None`` (return
+    the joined rows), ``("count",)``, or ``("sum", "table.column")``.
+    """
+
+    tables: dict
+    joins: tuple
+    aggregate: tuple | None = None
+
+    def __post_init__(self):
+        self.joins = tuple(self.joins)
+        for j in self.joins:
+            for side, col in ((j.left, j.left_col), (j.right, j.right_col)):
+                if side not in self.tables:
+                    raise ValueError(f"join {j} references unknown table "
+                                     f"{side!r}")
+                if col not in self.tables[side].columns:
+                    raise ValueError(f"join {j}: no column {col!r} on "
+                                     f"{side!r}")
+        if self.aggregate is not None:
+            kind = self.aggregate[0]
+            if kind not in ("count", "sum"):
+                raise ValueError(f"unknown aggregate {kind!r}")
+            if kind == "sum":
+                ref = self.aggregate[1]
+                tbl, _, col = ref.partition(".")
+                if (not col or tbl not in self.tables
+                        or col not in self.tables[tbl].columns):
+                    raise ValueError(f"sum over unknown column {ref!r}")
+        # The join graph must connect every table: a disconnected query
+        # would need a cross product no stage expresses (the NumPy oracle
+        # rejects it too, but at execution time — fail at construction).
+        if len(self.tables) > 1:
+            reached = {next(iter(self.tables))}
+            frontier = True
+            while frontier:
+                frontier = False
+                for j in self.joins:
+                    if (j.left in reached) != (j.right in reached):
+                        reached.update((j.left, j.right))
+                        frontier = True
+            missing = set(self.tables) - reached
+            if missing:
+                raise ValueError(f"join graph is disconnected: "
+                                 f"{sorted(missing)} unreachable")
+
+    def describe(self) -> str:
+        parts = [f"{n}({t.size}{'σ' if t.filters else ''})"
+                 for n, t in self.tables.items()]
+        joins = " ⋈ ".join(str(j) for j in self.joins)
+        agg = f" -> {self.aggregate}" if self.aggregate else ""
+        return f"[{', '.join(parts)}] {joins}{agg}"
+
+
+# ---------------------------------------------------------------------------
+# NumPy reference (textual join order) — the correctness oracle.
+# ---------------------------------------------------------------------------
+
+def _np_equijoin(left_cols: dict, right_cols: dict, left_q: str,
+                 right_q: str) -> dict:
+    """All matching row pairs of two qualified column sets (sort-merge)."""
+    lk = left_cols[left_q].astype(np.int64)
+    rk = right_cols[right_q].astype(np.int64)
+    order = np.argsort(rk, kind="stable")
+    rk_sorted = rk[order]
+    lo = np.searchsorted(rk_sorted, lk, side="left")
+    hi = np.searchsorted(rk_sorted, lk, side="right")
+    counts = hi - lo
+    total = int(counts.sum())
+    li = np.repeat(np.arange(lk.size), counts)
+    # For row i of the left side, its matches are order[lo[i]:hi[i]]:
+    # vectorized as lo repeated per match plus a within-group ramp.
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+    within = np.arange(total) - np.repeat(offsets[:-1], counts)
+    ri = order[np.repeat(lo, counts) + within]
+    out = {q: v[li] for q, v in left_cols.items()}
+    out.update({q: v[ri] for q, v in right_cols.items()})
+    return out
+
+
+def reference_rows(query: Query) -> dict:
+    """Fold the joins in textual order over filtered tables (pure NumPy)."""
+    joined: dict[str, dict] = {}   # table name -> its current component cols
+
+    def component_of(name: str) -> dict:
+        if name not in joined:
+            joined[name] = query.tables[name].qualified()
+        return joined[name]
+
+    for j in query.joins:
+        left = component_of(j.left)
+        right = component_of(j.right)
+        if left is right:
+            # Cycle edge within one component: a residual filter.
+            merged = {q: v[left[j.left_q] == left[j.right_q]]
+                      for q, v in left.items()}
+        else:
+            merged = _np_equijoin(left, right, j.left_q, j.right_q)
+        for name, comp in list(joined.items()):
+            if comp is left or comp is right:
+                joined[name] = merged
+    if not joined:
+        return {}
+    final = joined[query.joins[-1].left]
+    if any(comp is not final for comp in joined.values()):
+        raise ValueError("query's join graph is disconnected")
+    return final
+
+
+def rows_array(columns: dict) -> np.ndarray:
+    """Canonical sorted (n, k) int64 row array over sorted column names.
+
+    Two executions are equivalent iff their ``rows_array`` outputs are
+    identical — row order and column order are both normalized away.
+    """
+    names = sorted(columns)
+    if not names:
+        return np.empty((0, 0), dtype=np.int64)
+    mat = np.stack([columns[c].astype(np.int64) for c in names], axis=1)
+    return mat[np.lexsort(tuple(mat[:, k] for k in range(mat.shape[1] - 1,
+                                                         -1, -1)))]
+
+
+def apply_aggregate(columns: dict, aggregate: tuple | None):
+    if aggregate is None:
+        return None
+    if aggregate[0] == "count":
+        return int(next(iter(columns.values())).shape[0]) if columns else 0
+    return int(columns[aggregate[1]].astype(np.int64).sum())
+
+
+def reference_execute(query: Query):
+    """(sorted rows array, aggregate value) — the oracle for any join order."""
+    cols = reference_rows(query)
+    return rows_array(cols), apply_aggregate(cols, query.aggregate)
+
+
+# ---------------------------------------------------------------------------
+# Query generators (star / chain shapes for benchmarks, tests, workloads).
+# ---------------------------------------------------------------------------
+
+def make_star_query(fact_rows: int, dim_rows, *, selectivities=None,
+                    seed: int = 0, aggregate: tuple | None = ("count",),
+                    dim_tables=None) -> Query:
+    """A star query: fact table F with one FK per dimension D0..Dk-1.
+
+    Each dimension has a unique ``id`` key plus an ``a`` attribute in
+    [0, 1000); ``selectivities[i]`` (None = no filter) adds a
+    selectivity-annotated range filter on ``Di.a``.  ``dim_tables`` lets a
+    caller (the workload generator's hot pool) supply recurring dimension
+    tables so build-side caching pays across queries.
+    """
+    rng = np.random.default_rng(seed)
+    dim_rows = list(dim_rows)
+    selectivities = list(selectivities or [None] * len(dim_rows))
+    dims = list(dim_tables or [])
+    for i in range(len(dims), len(dim_rows)):
+        n = dim_rows[i]
+        dims.append(Table(f"D{i}", {
+            "id": rng.permutation(n).astype(np.int32),
+            "a": rng.integers(0, 1000, size=n, dtype=np.int32)}))
+    tables = {}
+    fact_cols = {"m": rng.integers(0, 100, size=fact_rows, dtype=np.int32)}
+    joins = []
+    for i, d in enumerate(dims):
+        sel = selectivities[i]
+        if sel is not None:
+            d = d.with_filters(Filter("a", 0, max(1, int(round(1000 * sel))),
+                                      selectivity=sel))
+        tables[d.name] = d
+        fact_cols[f"fk{i}"] = rng.integers(0, dim_rows[i], size=fact_rows,
+                                           dtype=np.int32)
+        joins.append(Join("F", f"fk{i}", d.name, "id"))
+    tables["F"] = Table("F", fact_cols)
+    return Query(tables=tables, joins=tuple(joins), aggregate=aggregate)
+
+
+def make_chain_query(sizes, *, seed: int = 0,
+                     aggregate: tuple | None = ("count",)) -> Query:
+    """A chain query T0 -> T1 -> ... : each table FK-references the next."""
+    rng = np.random.default_rng(seed)
+    sizes = list(sizes)
+    tables = {}
+    joins = []
+    for i, n in enumerate(sizes):
+        cols = {"id": rng.permutation(n).astype(np.int32),
+                "v": rng.integers(0, 50, size=n, dtype=np.int32)}
+        if i + 1 < len(sizes):
+            cols["nxt"] = rng.integers(0, sizes[i + 1], size=n,
+                                       dtype=np.int32)
+            joins.append(Join(f"T{i}", "nxt", f"T{i+1}", "id"))
+        tables[f"T{i}"] = Table(f"T{i}", cols)
+    return Query(tables=tables, joins=tuple(joins), aggregate=aggregate)

@@ -191,6 +191,162 @@ def test_outcome_and_timing_to_dict(cp):
     d = out.to_dict()
     json.dumps(d)                               # fully serializable
     assert d["timing"]["phase_s"] and d["matches"] >= 0
+    # Bench rollups segment latency by plan type straight off the dict.
+    assert d["algorithm"] in ("shj", "phj")
+    for key in ("scheme", "cache_hit", "partition_cache_hit", "priority",
+                "schedule", "table_mode"):
+        assert key in d
+
+
+# ---------------------------------------------------------------------------
+# Priority admission (aged; starvation-free).
+# ---------------------------------------------------------------------------
+
+def test_priority_queue_orders_by_priority_then_fifo():
+    from repro.engine import PriorityAgingQueue
+    now = [0.0]
+    pq = PriorityAgingQueue(maxsize=8, aging_s=1000.0, clock=lambda: now[0])
+    pq.put("low", priority=0)
+    pq.put("hi-a", priority=5)
+    pq.put("hi-b", priority=5)
+    pq.put("mid", priority=2)
+    # Highest priority first; FIFO inside the level; lowest last.
+    assert [pq.get() for _ in range(4)] == ["hi-a", "hi-b", "mid", "low"]
+
+
+def test_priority_queue_aging_prevents_starvation():
+    from repro.engine import PriorityAgingQueue
+    now = [0.0]
+    pq = PriorityAgingQueue(maxsize=64, aging_s=1.0, clock=lambda: now[0])
+    pq.put("starved", priority=0)
+    # A steady stream of fresh high-priority arrivals keeps winning...
+    for i in range(3):
+        now[0] = float(i)
+        pq.put(f"hi-{i}", priority=3)
+        assert pq.get() == f"hi-{i}"
+    # ...until the old query has aged past the priority gap: effective
+    # priority 0 + 4.0/1.0 = 4 beats a fresh 3 + 0.5/1.0 = 3.5.
+    now[0] = 3.5
+    pq.put("hi-late", priority=3)
+    now[0] = 4.0
+    assert pq.get() == "starved"
+    assert pq.get() == "hi-late"
+
+
+def test_priority_queue_full_and_empty():
+    import queue as _q
+    from repro.engine import PriorityAgingQueue
+    pq = PriorityAgingQueue(maxsize=1)
+    pq.put("a")
+    with pytest.raises(_q.Full):
+        pq.put("b", block=False)
+    assert pq.get() == "a"
+    with pytest.raises(_q.Empty):
+        pq.get(timeout=0.01)
+
+
+def test_service_runs_priorities(cp):
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=2)
+    b = unique_relation(512, seed=1)
+    s = uniform_relation(512, key_range=512, seed=2)
+    outs = svc.run([JoinQuery(build=b, probe=s, query_id=i, priority=p)
+                    for i, p in enumerate((0, 3, 1))])
+    assert [o.priority for o in outs] == [0, 3, 1]
+    assert all((o.result.valid_pairs() == join_oracle(b, s)).all()
+               for o in outs)
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Partition-layout cache (PHJ build-side reuse).
+# ---------------------------------------------------------------------------
+
+def _phj_planner():
+    # Tiny cache + harsh random-access penalty: PHJ wins even at 4k tuples.
+    pl = QueryPlanner(delta=0.25, cache_bytes=1 << 10, rand_penalty=8.0,
+                      phj_overhead_s=0.0)
+    assert pl.choose(4096, 4096, max_out=8192).algorithm == "phj"
+    return pl
+
+
+def test_partition_cache_entries_and_stats():
+    from repro.engine import BuildTableCache, partition_layout_key
+    layout = uniform_relation(256, seed=1)
+    cache = BuildTableCache(budget_bytes=1 << 20)
+    key = partition_layout_key("fp", (3, 2))
+    assert key != partition_layout_key("fp", (2, 3))
+    assert cache.get_partition(key) is None     # counted separately
+    cache.put_partition(key, layout)
+    assert cache.get_partition(key) is layout
+    st = cache.stats()
+    assert st["partition_hits"] == 1 and st["partition_misses"] == 1
+    assert st["partition_puts"] == 1 and st["partition_hit_rate"] == 0.5
+    assert st["hits"] == 0 and st["misses"] == 0    # table counters untouched
+
+
+def test_service_phj_partition_reuse(cp):
+    svc = JoinQueryService(cp=cp, planner=_phj_planner(), num_workers=0)
+    b = uniform_relation(4096, seed=3)
+    exp = {}
+    outs = []
+    for i, seed in enumerate((4, 5)):
+        s = uniform_relation(4096, key_range=4096, seed=seed)
+        exp[i] = join_oracle(b, s)
+        outs.append(svc.execute(JoinQuery(build=b, probe=s, query_id=i,
+                                          max_out=4 * 4096 + 1024)))
+    assert outs[0].plan.algorithm == "phj"
+    assert not outs[0].partition_cache_hit and outs[1].partition_cache_hit
+    assert outs[1].timing.notes.get("build_parts_reused")
+    for i, o in enumerate(outs):
+        assert (o.result.valid_pairs() == exp[i]).all()
+    st = svc.cache.stats()
+    assert st["partition_hits"] == 1 and st["partition_misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Deferred submission (pipeline stages with dependencies).
+# ---------------------------------------------------------------------------
+
+def test_submit_deferred_chains_queries(cp):
+    import jax.numpy as jnp
+    from repro.core import Relation
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=2)
+    b = unique_relation(1024, seed=1)
+    s = uniform_relation(1024, key_range=1024, seed=2)
+    h1 = svc.submit(JoinQuery(build=b, probe=s, query_id=1))
+    seen = {}
+
+    def make_second(outcomes):
+        (o1,) = outcomes
+        c = int(o1.result.count)
+        # Probe the first stage's matched build rids (gather convention).
+        probe = Relation(jnp.arange(c, dtype=jnp.int32),
+                         jnp.asarray(o1.result.build_rid[:c]))
+        return JoinQuery(build=b, probe=probe, query_id=2,
+                         max_out=2 * c + 64)
+
+    h2 = svc.submit_deferred(make_second, deps=[h1],
+                             finalize=lambda o: seen.update(done=o.query_id),
+                             priority=2)
+    out2 = h2()
+    assert seen["done"] == 2 and out2.priority == 2
+    assert int(out2.result.count) == int(h1().result.count)
+    svc.close()
+
+
+def test_submit_deferred_propagates_dep_failure(cp):
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=2)
+
+    def failing_wait(timeout=None):
+        raise RuntimeError("upstream stage failed")
+
+    h = svc.submit_deferred(lambda outs: None, deps=[failing_wait])
+    with pytest.raises(RuntimeError, match="upstream stage failed"):
+        h()
+    svc.close()
 
 
 # ---------------------------------------------------------------------------
