@@ -1,0 +1,115 @@
+"""Group-by + join-variant benchmark for the ops subsystem.
+
+Two measured figures:
+
+  1. **group-by schemes** — both co-processed plans (DD_SEPARATE: row
+     split + partial-aggregate merge; DD_PARTITIONED: planner-chosen radix
+     schedule, ownership-split reduce) vs the same aggregation pinned
+     CPU_ONLY / GPU_ONLY, per input size, each verified against the NumPy
+     oracle.  The acceptance bar is the paper's: a co-processed scheme
+     must beat the *worse* single group (co-processing never loses to the
+     bad placement, even when one group dominates).
+  2. **semi vs inner probe** — the same probe relation against the same
+     build table under both kinds: semi emits match flags (no p4 payload
+     gather), so its probe must not be slower than inner's.
+
+Smoke mode (CI) shrinks sizes so the whole thing runs in tens of seconds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import csv_row, report, time_call
+
+
+def groupby_bench(smoke: bool = False):
+    import jax.numpy as jnp
+
+    from repro.core import CoProcessor
+    from repro.core.hash_table import build_hash_table, default_num_buckets
+    from repro.core.relation import Relation, uniform_relation
+    from repro.engine import QueryPlanner
+    from repro.ops import groupby_ref, probe_table_variant
+
+    sizes = [1 << 16] if smoke else [1 << 18, 1 << 19]
+    reps = 3
+    cp = CoProcessor()
+    planner = QueryPlanner(delta=0.25)
+    out: dict = {"smoke": smoke, "sizes": sizes, "groupby": []}
+
+    rng = np.random.default_rng(7)
+    for n in sizes:
+        keys = rng.integers(0, max(64, n // 64), n).astype(np.int32)
+        vals = rng.integers(0, 100, n).astype(np.int32)
+        rel = Relation(jnp.arange(n, dtype=jnp.int32), jnp.asarray(keys))
+        sep = planner._groupby_separate(n)
+        part = planner._groupby_coproc(n)
+
+        variants = {
+            "CPU_ONLY": dict(schedule=None, partition_ratio=1.0,
+                             agg_ratio=1.0),
+            "GPU_ONLY": dict(schedule=None, partition_ratio=0.0,
+                             agg_ratio=0.0),
+            # Row-split partial aggregation + merge at a mid ratio (the
+            # calibrated planner lands near here on this host) and at the
+            # analytic planner's ratio, plus the partitioned reduce.
+            "DD_SEPARATE": dict(schedule=None, partition_ratio=0.25,
+                                agg_ratio=0.25),
+            "DD_SEPARATE_PLANNED": dict(schedule=None,
+                                        partition_ratio=sep.partition_ratio,
+                                        agg_ratio=sep.join_ratio),
+            "DD_PARTITIONED": dict(schedule=part.schedule,
+                                   partition_ratio=part.partition_ratio,
+                                   agg_ratio=part.join_ratio),
+        }
+        ref = groupby_ref(keys, vals)
+        times = {}
+        for name, kw in variants.items():
+            res, _ = cp.groupby(rel, vals, **kw)     # warm + verify
+            s = res.sorted()
+            assert (s.keys == ref.keys).all() and \
+                (s.sums == ref.sums).all() and \
+                (s.counts == ref.counts).all(), f"{name} diverges"
+            times[name] = time_call(lambda kw=kw: cp.groupby(rel, vals,
+                                                             **kw)[0],
+                                    reps=reps, warmup=1)
+            csv_row(f"groupby/{name.lower()}_n{n}", times[name] * 1e6,
+                    f"groups={ref.num_groups}")
+        worse_single = max(times["CPU_ONLY"], times["GPU_ONLY"])
+        best_single = min(times["CPU_ONLY"], times["GPU_ONLY"])
+        coproc = min(times[k] for k in times
+                     if k not in ("CPU_ONLY", "GPU_ONLY"))
+        row = {"n": n, "num_groups": ref.num_groups,
+               "schedule": list(part.schedule), **times,
+               "best_coproc_s": coproc,
+               "coproc_vs_worse_single": worse_single / coproc,
+               "coproc_beats_worse_single": bool(coproc < worse_single),
+               "coproc_vs_best_single": best_single / coproc}
+        out["groupby"].append(row)
+        csv_row(f"groupby/coproc_gain_n{n}", coproc * 1e6,
+                f"vs_worse={row['coproc_vs_worse_single']:.2f}x;"
+                f"vs_best={row['coproc_vs_best_single']:.2f}x")
+
+    # -- 2. semi vs inner probe cost over the same table ------------------
+    n = sizes[-1]
+    b = uniform_relation(n // 4, seed=11)
+    p = uniform_relation(n, key_range=n // 2, seed=12)   # ~half match
+    table = build_hash_table(b, default_num_buckets(n // 4))
+    probe_times = {}
+    for kind, cap in (("inner", 4 * n + 1024), ("semi", n + 64)):
+        res, _ = probe_table_variant(cp, p, table, kind=kind, max_out=cap,
+                                     ratios=(0.5,) * 4)      # warm
+        probe_times[kind] = time_call(
+            lambda kind=kind, cap=cap: probe_table_variant(
+                cp, p, table, kind=kind, max_out=cap,
+                ratios=(0.5,) * 4)[0].probe_rid,
+            reps=reps, warmup=1)
+    out["probe_kinds"] = {
+        "probe_n": n, **probe_times,
+        "semi_speedup_vs_inner": probe_times["inner"] / probe_times["semi"]}
+    csv_row("groupby/probe_inner", probe_times["inner"] * 1e6, "")
+    csv_row("groupby/probe_semi", probe_times["semi"] * 1e6,
+            f"speedup={out['probe_kinds']['semi_speedup_vs_inner']:.2f}x")
+
+    report("groupby_bench", out)
+    return out

@@ -33,8 +33,8 @@ import traceback
 def registry(smoke: bool = False):
     from functools import partial
 
-    from . import (alloc_figs, engine_bench, paper_figs, query_bench,
-                   roofline, scale_figs)
+    from . import (alloc_figs, engine_bench, groupby_bench, paper_figs,
+                   query_bench, roofline, scale_figs)
     return {
         "fig3": paper_figs.fig3_time_breakdown,
         "fig4": paper_figs.fig4_step_unit_costs,
@@ -58,6 +58,7 @@ def registry(smoke: bool = False):
         "engine_throughput": partial(engine_bench.engine_throughput,
                                      smoke=smoke),
         "query_pipeline": partial(query_bench.query_pipeline, smoke=smoke),
+        "groupby": partial(groupby_bench.groupby_bench, smoke=smoke),
     }
 
 

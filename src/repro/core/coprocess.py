@@ -296,13 +296,20 @@ class CoProcessor:
 
     def probe_table(self, probe_rel: Relation, table: ht.HashTable, *,
                     max_out: int, ratios,
-                    timing: Timing | None = None
+                    timing: Timing | None = None,
+                    probe_fn=None, tag: str = "probe"
                     ) -> tuple[ht.JoinResult, Timing]:
-        """Probe phase against an existing (possibly cached) table."""
+        """Probe phase against an existing (possibly cached) table.
+
+        ``probe_fn(max_out)`` overrides the per-group probe kernel (the
+        join-variant emissions in ``repro.ops.join_variants`` route
+        through here); ``tag`` keys the jit cache per kernel family.
+        """
         timing = timing or Timing()
         probe_rel = self.pad_relation(probe_rel, self.PROBE_PAD_KEY)
         t0 = time.perf_counter()
-        result = self._probe(probe_rel, table, max_out, ratios, timing)
+        result = self._probe(probe_rel, table, max_out, ratios, timing,
+                             probe_fn=probe_fn, tag=tag)
         jax.block_until_ready(result.probe_rid)
         timing.phase_s["probe"] = time.perf_counter() - t0
         if not timing.wall_s:
@@ -384,7 +391,8 @@ class CoProcessor:
         return table
 
     def _probe(self, rel: Relation, table: ht.HashTable, max_out: int,
-               ratios, timing: Timing) -> ht.JoinResult:
+               ratios, timing: Timing, *, probe_fn=None,
+               tag: str = "probe") -> ht.JoinResult:
         n = rel.size
         cut = self._cut(n, ratios[0])
         # Replicate the table to both groups (coupled: zero-copy; discrete:
@@ -401,15 +409,16 @@ class CoProcessor:
         max_c = max(1, _round_up(int(max_out * (cut / max(n, 1))), 8) + slack)
         max_g = max(1, max_out - max_c + 2 * slack)
 
-        def probe_fn(mo):
-            return lambda r, t: ht.probe_hash_table(r, t, mo)
+        if probe_fn is None:
+            def probe_fn(mo):
+                return lambda r, t: ht.probe_hash_table(r, t, mo)
 
         res = []
         if cut > 0:
-            fp = self.c.jit(("probe", cut, max_c, "c"), probe_fn(max_c))
+            fp = self.c.jit((tag, cut, max_c, "c"), probe_fn(max_c))
             res.append(fp(self.c.put_items(rel.take(0, cut)), tbl_c))
         if cut < n:
-            fp = self.g.jit(("probe", n - cut, max_g, "g"), probe_fn(max_g))
+            fp = self.g.jit((tag, n - cut, max_g, "g"), probe_fn(max_g))
             res.append(fp(self.g.put_items(rel.take(cut, n)), tbl_g))
         if len(res) == 1:
             out = res[0]
@@ -426,8 +435,9 @@ class CoProcessor:
         res_host = [jax.tree.map(jax.device_get, r) for r in res]
         if self.discrete:
             self._bus_delay(int(res_host[1].count) * 8, timing)
-        fcat = self.c.jit(("concat", tuple(r.probe_rid.shape[0]
-                                           for r in res_host), max_out),
+        fcat = self.c.jit(("concat", tag,
+                           tuple(r.probe_rid.shape[0] for r in res_host),
+                           max_out),
                           partial(concat_results, max_out=max_out))
         return fcat([self.c.put_shared(r) for r in res_host])
 
@@ -467,6 +477,7 @@ class PhjCoProcessorMixin:
             shj_bits: int, max_out: int,
             partition_ratio: float, join_ratio: float,
             build_parts: Relation | None = None,
+            probe_parts: Relation | None = None,
             parts_out: dict | None = None) -> tuple[ht.JoinResult, "Timing"]:
         """PHJ co-processing: ratio-split partitioning, then partition-pair
         ownership split for the join phase (paper PHJ-DD/PL skeleton).
@@ -481,9 +492,14 @@ class PhjCoProcessorMixin:
                               under the SAME schedule): R skips the n1–n3
                               partition passes entirely.  This is what the
                               engine's partition-layout cache feeds back.
-        ``parts_out``       — when a dict is passed, its ``"R"`` slot
-                              receives the partitioned build layout for the
-                              caller to cache.
+        ``probe_parts``     — same for the probe side: a replayed pipeline
+                              re-probes with an identical relation, and its
+                              partition passes are the larger half of the
+                              cost at star-query shapes.
+        ``parts_out``       — when a dict is passed, its ``"R"`` / ``"S"``
+                              slots receive the freshly partitioned layouts
+                              for the caller to cache (only the sides that
+                              were actually partitioned this call).
         """
         from .partition import radix_partition_scheduled
         from .phj import resolve_schedule
@@ -506,8 +522,12 @@ class PhjCoProcessorMixin:
         if build_parts is not None:
             parts["R"] = build_parts
             timing.notes["build_parts_reused"] = True
-        todo = ([("S", probe_rel)] if build_parts is not None
-                else [("R", build_rel), ("S", probe_rel)])
+        if probe_parts is not None:
+            parts["S"] = probe_parts
+            timing.notes["probe_parts_reused"] = True
+        todo = [(tag, rel) for tag, rel in (("R", build_rel),
+                                            ("S", probe_rel))
+                if tag not in parts]
         for tag, rel in todo:
             n = rel.size
             cut = self._cut(n, partition_ratio)
@@ -525,7 +545,8 @@ class PhjCoProcessorMixin:
                 jnp.concatenate([x.rid for x in pieces]),
                 jnp.concatenate([x.key for x in pieces]))
         if parts_out is not None:
-            parts_out["R"] = parts["R"]
+            for tag, _ in todo:
+                parts_out[tag] = parts[tag]
         t1 = time.perf_counter()
         timing.phase_s["partition"] = t1 - t0
 

@@ -12,8 +12,8 @@ resident build tables across queries.
   * ``WorkloadGenerator`` / ``make_workload`` — scenario mixes
 """
 from .planner import (EXECUTABLE_SCHEMES, SCHEMES, QueryPlan, QueryPlanner)
-from .service import (JoinQuery, JoinQueryService, PriorityAgingQueue,
-                      QueryOutcome, QueueFull)
+from .service import (GroupByQuery, JoinQuery, JoinQueryService,
+                      PriorityAgingQueue, QueryOutcome, QueueFull)
 from .table_cache import (BuildTableCache, partition_layout_key,
                           relation_fingerprint, table_nbytes)
 from .workload import MIXES, WorkloadGenerator, make_workload, zipf_keys

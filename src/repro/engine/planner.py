@@ -68,7 +68,7 @@ TABLE_BYTES_PER_TUPLE = 32
 class QueryPlan:
     """Everything the executor needs, plus the estimates behind the choice."""
 
-    algorithm: str                  # "shj" | "phj"
+    algorithm: str                  # "shj" | "phj" | "groupby"
     scheme: str                     # one of SCHEMES
     build_ratios: tuple             # len-4 per-step CPU shares
     probe_ratios: tuple
@@ -79,16 +79,21 @@ class QueryPlan:
     est_s: float = 0.0
     est_build_s: float = 0.0        # phj: partition-phase estimate
     est_probe_s: float = 0.0        # phj: join-phase estimate
-    # phj-only knobs (planner-chosen)
+    # phj-only knobs (planner-chosen); groupby reuses schedule +
+    # partition_ratio and carries its aggregate-phase split in join_ratio.
     schedule: tuple | None = None
     shj_bits: int = 0
     partition_ratio: float = 0.5
     join_ratio: float = 0.5
+    # Join-variant semantics ("inner" | "semi" | "anti" | "left_outer"):
+    # semi/anti probes skip the p4 payload gather, so they are priced on
+    # the p1–p3 series only.
+    kind: str = "inner"
 
     @property
     def c_share(self) -> float:
         """Mean CPU-side ratio — drives load-aware admission."""
-        if self.algorithm == "phj":
+        if self.algorithm in ("phj", "groupby"):
             return 0.5 * (self.partition_ratio + self.join_ratio)
         rs = list(self.probe_ratios) + ([] if self.cached
                                         else list(self.build_ratios))
@@ -247,10 +252,20 @@ class QueryPlanner:
         return out
 
     # -- candidate estimates -------------------------------------------------
-    def _shj_candidates(self, build_n: int, probe_n: int, cached: bool):
+    def _shj_candidates(self, build_n: int, probe_n: int, cached: bool,
+                        kind: str = "inner"):
         rs = self.table_rand_scale(build_n)
-        probe = self._sweep("shj_probe", PROBE_SERIES.steps, [probe_n] * 4,
-                            rand_scale=rs)
+        # Semi/anti emit match flags instead of expanding matches: the p4
+        # payload gather (2 random accesses/tuple) drops out of the series,
+        # which is what makes those probes cheaper than inner at equal
+        # sizes.  Left-outer keeps the full expansion (plus the unmatched
+        # emission riding the same scan).
+        probe_steps = (PROBE_SERIES.steps[:3] if kind in ("semi", "anti")
+                       else PROBE_SERIES.steps)
+        probe_tag = ("shj_probe" if kind == "inner"
+                     else f"shj_probe[{kind}]")
+        probe = self._sweep(probe_tag, probe_steps,
+                            [probe_n] * len(probe_steps), rand_scale=rs)
         if cached:
             build = None
         else:
@@ -261,14 +276,15 @@ class QueryPlanner:
             rb, tb = build[scheme] if build else (rp, 0.0)
             # Per-scheme online scales: a PL plan's boundary shuffles and a
             # DD plan's flat split calibrate independently.
-            tp = tp * self.online.scale_for(f"shj_probe:{scheme}")
+            tp = tp * self.online.scale_for(f"{probe_tag}:{scheme}")
             tb = tb * self.online.scale_for(f"shj_build:{scheme}")
             yield QueryPlan(
                 algorithm="shj", scheme=scheme,
                 build_ratios=tuple(float(r) for r in rb),
                 probe_ratios=tuple(float(r) for r in rp),
                 num_buckets=default_num_buckets(build_n), max_out=0,
-                cached=cached, est_s=tb + tp, est_build_s=tb, est_probe_s=tp)
+                cached=cached, est_s=tb + tp, est_build_s=tb,
+                est_probe_s=tp, kind=kind)
 
     def _phj_candidate(self, build_n: int, probe_n: int) -> QueryPlan | None:
         plan = self.pass_planner.plan(build_n)
@@ -308,9 +324,14 @@ class QueryPlanner:
     # -- the decision --------------------------------------------------------
     def choose(self, build_n: int, probe_n: int, *, max_out: int,
                cached: bool = False, expect_reuse: bool = False,
-               c_load: float = 0.0, g_load: float = 0.0) -> QueryPlan:
+               c_load: float = 0.0, g_load: float = 0.0,
+               kind: str = "inner") -> QueryPlan:
         """Plan one query.
 
+        ``kind``         — join-variant semantics; non-inner kinds run over
+                           the SHJ probe path only (PHJ's partition-pair
+                           ownership split has no variant emission), with
+                           semi/anti priced without the p4 payload gather.
         ``cached``       — the build table is resident: probe-only SHJ.
         ``expect_reuse`` — this fingerprint has been seen before, so an SHJ
                            build is an investment the cache will amortize
@@ -326,31 +347,21 @@ class QueryPlanner:
         Load bias applies at (re)planning moments, not on every repeat of
         a hot signature.
         """
-        # Coarse load-imbalance bucket: plans stay sticky under balanced
-        # load, but a strongly lopsided group gets its own (sticky) variant
-        # — bounded to three compiled variants per shape.  The dead zone is
-        # wide on purpose: each extra variant is an extra compilation.
-        if abs(c_load - g_load) <= max(0.5 * max(c_load, g_load), 0.2):
-            load_bucket = 0
-        else:
-            load_bucket = 1 if c_load > g_load else -1
-        sig = (build_n, probe_n, cached, expect_reuse, load_bucket)
-        with self._lock:
-            hit = self._plan_cache.get(sig)
-        if hit is not None and hit[0] == self.online.version:
-            plan = dataclasses.replace(hit[1], max_out=int(max_out))
-            with self._lock:
-                k = (plan.algorithm, "cached" if cached else plan.scheme)
-                self.plan_counts[k] = self.plan_counts.get(k, 0) + 1
-            return plan
-        # A resident table does not *force* probe-only: at sizes where the
-        # un-partitioned table is cache-hostile, re-running PHJ can beat
-        # probing it — the sweep arbitrates (plan.cached marks the winner).
-        candidates = list(self._shj_candidates(build_n, probe_n, cached))
-        if self.allow_phj:
-            phj = self._phj_candidate(build_n, probe_n)
-            if phj is not None:
-                candidates.append(phj)
+        sig = (build_n, probe_n, cached, expect_reuse,
+               self._load_bucket(c_load, g_load), kind)
+
+        def make_candidates():
+            # A resident table does not *force* probe-only: at sizes
+            # where the un-partitioned table is cache-hostile, re-running
+            # PHJ can beat probing it — the sweep arbitrates (plan.cached
+            # marks the winner).
+            cands = list(self._shj_candidates(build_n, probe_n, cached,
+                                              kind))
+            if self.allow_phj and kind == "inner":
+                phj = self._phj_candidate(build_n, probe_n)
+                if phj is not None:
+                    cands.append(phj)
+            return cands
 
         def effective(p: QueryPlan) -> float:
             est = p.est_s
@@ -362,32 +373,172 @@ class QueryPlanner:
             c = p.c_share
             return est + c * c_load + (1.0 - c) * g_load
 
+        plan, from_cache = self._sticky_choose(
+            sig, make_candidates, effective,
+            keep_key=lambda p: (p.algorithm, p.scheme, p.cached),
+            count_key=lambda p: (p.algorithm,
+                                 "cached" if cached else p.scheme))
+        if from_cache:
+            return dataclasses.replace(plan, max_out=int(max_out))
+        plan.max_out = int(max_out)
+        return plan
+
+    @staticmethod
+    def _load_bucket(c_load: float, g_load: float) -> int:
+        """Coarse load-imbalance bucket: plans stay sticky under balanced
+        load, but a strongly lopsided group gets its own (sticky) variant
+        — bounded to three compiled variants per shape.  The dead zone is
+        wide on purpose: each extra variant is an extra compilation."""
+        if abs(c_load - g_load) <= max(0.5 * max(c_load, g_load), 0.2):
+            return 0
+        return 1 if c_load > g_load else -1
+
+    def _sticky_choose(self, sig, make_candidates, effective, *,
+                       keep_key, count_key):
+        """Sticky cost-model choice shared by join and group-by planning.
+
+        A cached plan for ``sig`` is reused until the online calibration
+        version moves; on a re-price, the incumbent (matched by
+        ``keep_key``) keeps its compiled executables unless the challenger
+        beats it by ``replan_margin`` (near-tie flips trade compiled code
+        for XLA recompiles).  Returns ``(plan, from_cache)``.
+        """
+        with self._lock:
+            hit = self._plan_cache.get(sig)
+        if hit is not None and hit[0] == self.online.version:
+            plan = hit[1]
+            with self._lock:
+                k = count_key(plan)
+                self.plan_counts[k] = self.plan_counts.get(k, 0) + 1
+            return plan, True
+        candidates = make_candidates()
         best = min(candidates, key=effective)
         if hit is not None:
-            # Re-priced after a calibration tick: keep the incumbent's
-            # scheme (and its compiled executables) unless the challenger
-            # is a material improvement, not a near-tie flip.
             prev = hit[1]
-            keep = [p for p in candidates
-                    if (p.algorithm, p.scheme, p.cached)
-                    == (prev.algorithm, prev.scheme, prev.cached)]
+            keep = [p for p in candidates if keep_key(p) == keep_key(prev)]
             if keep and effective(best) >= self.replan_margin * \
                     effective(keep[0]):
                 best = keep[0]
-        best.max_out = int(max_out)
         with self._lock:
             if len(self._plan_cache) > 512:
                 self._plan_cache.clear()
             self._plan_cache[sig] = (self.online.version, best)
-            k = (best.algorithm, "cached" if cached else best.scheme)
+            k = count_key(best)
             self.plan_counts[k] = self.plan_counts.get(k, 0) + 1
-        return best
+        return best, False
+
+    # -- group-by aggregation (ops subsystem) --------------------------------
+    def _groupby_sweep(self, n: int):
+        return self._sweep("groupby_agg", BUILD_SERIES.steps, [n] * 4,
+                           rand_scale=self.table_rand_scale(n))
+
+    def _groupby_single(self, n: int, scheme: str,
+                        sweep=None) -> QueryPlan:
+        """Unpartitioned group-by on one group: the sort is the hash table,
+        priced as the build series (same sort + boundary + reduce shape)
+        with the full-relation random-access penalty."""
+        _, t = (sweep or self._groupby_sweep(n))[scheme]
+        t = t * self.online.scale_for(f"groupby_agg:{scheme}")
+        r = 1.0 if scheme == "CPU_ONLY" else 0.0
+        return QueryPlan(
+            algorithm="groupby", scheme=scheme, build_ratios=(r,) * 4,
+            probe_ratios=(r,) * 4, num_buckets=0, max_out=0, est_s=t,
+            est_build_s=0.0, est_probe_s=t, schedule=None,
+            partition_ratio=r, join_ratio=r)
+
+    def _groupby_separate(self, n: int) -> QueryPlan:
+        """Row-split DD group-by, separate partials + host merge (the
+        paper's Fig. 3 separate-tables mode applied to aggregation): each
+        group aggregates its row share concurrently, partial group lists
+        merge on the host.  The merge is O(groups) — priced as the same
+        fixed overhead as PHJ's ownership exchange."""
+        m = self._series_model(BUILD_SERIES.steps, [n] * 4,
+                               rand_scale=self.table_rand_scale(n))
+        r, t = m.optimize_dd(delta=self.delta)
+        t = t * self.online.scale_for("groupby_agg:DD")
+        return QueryPlan(
+            algorithm="groupby", scheme="DD", table_mode="separate",
+            build_ratios=(float(r),) * 4, probe_ratios=(float(r),) * 4,
+            num_buckets=0, max_out=0, est_s=t + self.phj_overhead_s,
+            est_build_s=0.0, est_probe_s=t, schedule=None,
+            partition_ratio=float(r), join_ratio=float(r))
+
+    def _groupby_coproc(self, n: int) -> QueryPlan:
+        """Partitioned DD group-by: the PHJ skeleton priced for one
+        relation — planner-chosen radix schedule, then a cache-resident
+        per-partition reduce split at one ownership ratio."""
+        plan = self.pass_planner.plan(n)
+        part_scale = self.online.scale_for("groupby_partition")
+        est_part, part_ratio = 0.0, 0.5
+        for i, bits in enumerate(plan.schedule):
+            m = self.pass_planner.pass_model(
+                n, bits, device_g=self.partition_device_g, link=self.link)
+            r, t = m.optimize_dd(delta=self.delta)
+            est_part += t * part_scale
+            if i == 0:
+                part_ratio = float(r)
+        m_agg = self._series_model(BUILD_SERIES.steps, [n] * 4,
+                                   rand_scale=1.0)
+        agg_ratio, est_agg = m_agg.optimize_dd(delta=self.delta)
+        est_agg = est_agg * self.online.scale_for("groupby_agg:DD_part")
+        return QueryPlan(
+            algorithm="groupby", scheme="DD",
+            build_ratios=(part_ratio,) * 4,
+            probe_ratios=(float(agg_ratio),) * 4, num_buckets=0, max_out=0,
+            est_s=est_part + est_agg + self.phj_overhead_s,
+            est_build_s=est_part, est_probe_s=est_agg,
+            schedule=plan.schedule, partition_ratio=part_ratio,
+            join_ratio=float(agg_ratio))
+
+    def choose_groupby(self, n: int, *, c_load: float = 0.0,
+                       g_load: float = 0.0) -> QueryPlan:
+        """Plan one group-by aggregation over ``n`` tuples.
+
+        Candidates follow ``allowed_schemes``: whole-relation aggregation
+        on either single group (CPU_ONLY / GPU_ONLY), the row-split
+        separate-partials DD, and the radix-partitioned DD split under the
+        same ``PassPlanner`` schedule and ``coproc_margin`` handicap as
+        PHJ.  Plans are sticky per (n, load bucket) like join plans.
+        """
+        sig = ("groupby", n, self._load_bucket(c_load, g_load))
+
+        def make_candidates():
+            sweep = self._groupby_sweep(n)
+            cands = [self._groupby_single(n, s, sweep)
+                     for s in ("CPU_ONLY", "GPU_ONLY")
+                     if s in self.allowed_schemes]
+            if "DD" in self.allowed_schemes:
+                cands.append(self._groupby_separate(n))
+            if self.allow_phj:
+                cands.append(self._groupby_coproc(n))
+            # Degenerate scheme catalog (e.g. OL/PL-only): nothing above
+            # is realizable for group-by, fall back to the larger group.
+            return cands or [self._groupby_single(n, "GPU_ONLY", sweep)]
+
+        def effective(p: QueryPlan) -> float:
+            est = p.est_s * (self.coproc_margin if p.scheme == "DD" else 1.0)
+            c = p.c_share
+            return est + c * c_load + (1.0 - c) * g_load
+
+        plan, _ = self._sticky_choose(
+            sig, make_candidates, effective,
+            keep_key=lambda p: (p.scheme, bool(p.schedule)),
+            count_key=lambda p: ("groupby", p.scheme))
+        return plan
 
     # -- feedback (satellite: close the calibration loop online) -----------
     def observe(self, plan: QueryPlan, timing) -> None:
         """Fold one executed query's measured phase times back in."""
         phases = timing.phase_s
-        if plan.algorithm == "phj":
+        if plan.algorithm == "groupby":
+            if plan.schedule:
+                self.online.observe("groupby_partition", plan.est_build_s,
+                                    phases.get("partition", 0.0))
+            tag = ("groupby_agg:DD_part" if plan.schedule
+                   else f"groupby_agg:{plan.scheme}")
+            self.online.observe(tag, plan.est_probe_s,
+                                phases.get("agg", 0.0))
+        elif plan.algorithm == "phj":
             self.online.observe("phj_partition", plan.est_build_s,
                                 phases.get("partition", 0.0))
             self.online.observe("phj_join", plan.est_probe_s,
@@ -397,7 +548,9 @@ class QueryPlanner:
                 self.online.observe(f"shj_build:{plan.scheme}",
                                     plan.est_build_s,
                                     phases.get("build", 0.0))
-            self.online.observe(f"shj_probe:{plan.scheme}",
+            probe_tag = ("shj_probe" if plan.kind == "inner"
+                         else f"shj_probe[{plan.kind}]")
+            self.online.observe(f"{probe_tag}:{plan.scheme}",
                                 plan.est_probe_s,
                                 phases.get("probe", 0.0))
 

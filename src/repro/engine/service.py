@@ -44,6 +44,26 @@ class JoinQuery:
     max_out: int | None = None    # result capacity; defaulted from |S|
     query_id: int = -1
     priority: int = 0             # higher runs earlier (aged, so no starving)
+    # Join-variant semantics: "inner" | "semi" | "anti" | "left_outer".
+    # Non-inner kinds probe the same (cacheable) build table but emit
+    # match flags / unmatched rows instead of the full expansion.
+    kind: str = "inner"
+
+
+@dataclasses.dataclass
+class GroupByQuery:
+    """One group-by aggregation request (the ops subsystem's operator).
+
+    ``keys.rid`` must index rows of ``values`` (the arange gather
+    convention); the service plans it like a join (scheme choice, group
+    locks, calibration feedback) and runs ``CoProcessor.groupby``.
+    """
+
+    keys: object                  # Relation: key = group key, rid = row id
+    values: object                # (n,) int32 value column
+    tag: str = "groupby"
+    query_id: int = -1
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -55,26 +75,32 @@ class QueryOutcome:
     cache_hit: bool
     queued_s: float
     wall_s: float                 # plan + execute (excludes queue wait)
-    result: JoinResult
+    result: object                # JoinResult | GroupByResult
     partition_cache_hit: bool = False
     priority: int = 0
+    probe_partition_cache_hit: bool = False
 
     def to_dict(self) -> dict:
         """Everything a bench rollup needs to segment latency by plan type
-        — algorithm/scheme, both cache-hit flags, and the PHJ schedule —
-        without re-deriving any of it from the plan object."""
+        — algorithm/scheme/kind, the cache-hit flags, and the PHJ schedule
+        — without re-deriving any of it from the plan object."""
+        matches = (int(self.result.count)
+                   if isinstance(self.result, JoinResult)
+                   else int(self.result.num_groups))
         return {"query_id": self.query_id, "tag": self.tag,
                 "priority": self.priority,
                 "algorithm": self.plan.algorithm,
                 "scheme": self.plan.scheme,
+                "kind": self.plan.kind,
                 "table_mode": self.plan.table_mode,
                 "cache_hit": self.cache_hit,
                 "partition_cache_hit": self.partition_cache_hit,
+                "probe_partition_cache_hit": self.probe_partition_cache_hit,
                 "schedule": (list(self.plan.schedule)
                              if self.plan.schedule else None),
                 "est_s": self.plan.est_s,
                 "queued_s": self.queued_s, "wall_s": self.wall_s,
-                "matches": int(self.result.count),
+                "matches": matches,
                 "timing": self.timing.to_dict()}
 
 
@@ -165,7 +191,7 @@ def _plan_groups(plan: QueryPlan) -> set[str]:
     Conservative: any CPU-side share > 0 uses C, any share < 1 uses G;
     split phases additionally merge/concat on C.
     """
-    if plan.algorithm == "phj":
+    if plan.algorithm in ("phj", "groupby"):
         rats = [plan.partition_ratio, plan.join_ratio]
     else:
         rats = list(plan.probe_ratios)
@@ -227,7 +253,12 @@ class JoinQueryService:
         return fp
 
     # -- synchronous execution path (also what workers run) -----------------
-    def execute(self, q: JoinQuery) -> QueryOutcome:
+    def execute(self, q) -> QueryOutcome:
+        if isinstance(q, GroupByQuery):
+            return self._execute_groupby(q)
+        return self._execute_join(q)
+
+    def _execute_join(self, q: JoinQuery) -> QueryOutcome:
         t0 = time.perf_counter()
         build_n, probe_n = q.build.size, q.probe.size
         max_out = q.max_out or (4 * probe_n + 1024)
@@ -241,7 +272,8 @@ class JoinQueryService:
         plan = self.planner.choose(build_n, probe_n, max_out=max_out,
                                    cached=table is not None,
                                    expect_reuse=seen and table is None,
-                                   c_load=c_load, g_load=g_load)
+                                   c_load=c_load, g_load=g_load,
+                                   kind=q.kind)
         share = plan.c_share
         with self._lock:
             self._loads["C"] += plan.est_s * share
@@ -260,35 +292,51 @@ class JoinQueryService:
         for lock in held:
             lock.acquire()
         partition_hit = False
+        probe_partition_hit = False
         try:
+            from repro.ops.join_variants import probe_table_variant
             cache_hit = table is not None and plan.cached
             if cache_hit:
                 self.cache.get(key)   # record the hit + LRU touch
                 timing = Timing()
                 timing.phase_s["build"] = 0.0
-                result, timing = self.cp.probe_table(
-                    q.probe, table, max_out=max_out,
+                result, timing = probe_table_variant(
+                    self.cp, q.probe, table, kind=q.kind, max_out=max_out,
                     ratios=plan.probe_ratios, timing=timing)
             elif plan.algorithm == "phj":
-                # Partition-layout cache: a repeated PHJ build side skips
-                # its n1–n3 passes off the resident partitioned layout
-                # (keyed by content + schedule; hits counted separately).
+                # Partition-layout cache: a repeated PHJ build OR probe
+                # side skips its n1–n3 passes off the resident partitioned
+                # layout (keyed by content + schedule + side; hits counted
+                # separately per side).
                 pkey = partition_layout_key(key, plan.schedule)
                 layout = self.cache.peek_partition(pkey)
+                # Probe layouts depend only on content + schedule — NOT on
+                # the build table's bucket count — so the same probe
+                # relation re-probed against differently-sized build
+                # tables still hits (fingerprinted at num_buckets=0).
+                skey = partition_layout_key(
+                    self._fingerprint(q.probe, 0), plan.schedule, side="S")
+                probe_layout = self.cache.peek_partition(skey)
                 parts_out: dict = {}
                 result, timing = self.cp.phj(
                     q.build, q.probe, schedule=plan.schedule,
                     shj_bits=plan.shj_bits, max_out=max_out,
                     partition_ratio=plan.partition_ratio,
                     join_ratio=plan.join_ratio,
-                    build_parts=layout,
-                    parts_out=None if layout is not None else parts_out)
+                    build_parts=layout, probe_parts=probe_layout,
+                    parts_out=parts_out)
                 if layout is not None:
                     self.cache.get_partition(pkey)  # hit + LRU touch
                     partition_hit = True
                 else:
                     self.cache.record_partition_miss()
                     self.cache.put_partition(pkey, parts_out["R"])
+                if probe_layout is not None:
+                    self.cache.get_probe_partition(skey)
+                    probe_partition_hit = True
+                else:
+                    self.cache.record_probe_partition_miss()
+                    self.cache.put_probe_partition(skey, parts_out["S"])
             else:
                 # Miss accounting mirrors hit accounting: only a plan that
                 # would have *used* a resident table counts as a miss (a
@@ -297,8 +345,8 @@ class JoinQueryService:
                 table, timing = self.cp.build_table(
                     q.build, num_buckets=plan.num_buckets,
                     ratios=plan.build_ratios, table_mode=plan.table_mode)
-                result, timing = self.cp.probe_table(
-                    q.probe, table, max_out=max_out,
+                result, timing = probe_table_variant(
+                    self.cp, q.probe, table, kind=q.kind, max_out=max_out,
                     ratios=plan.probe_ratios, timing=timing)
                 self.cache.put(key, table)
         finally:
@@ -323,18 +371,19 @@ class JoinQueryService:
         # unscaled sweep, so they are a function of it already.)
         # max_out is part of the signature: it reaches jit static args, so
         # a different value recompiles even at identical relation shapes.
-        sig = (plan.algorithm, plan.scheme, plan.cached, build_n, probe_n,
-               max_out)
+        sig = (plan.algorithm, plan.scheme, plan.cached, plan.kind,
+               build_n, probe_n, max_out)
         with self._lock:
             warmed = sig in self._observed_sigs
             self._observed_sigs.add(sig)
-        # A partition-cache hit skipped the build-side passes, so its
-        # partition phase time is not a clean sample of the estimate; a
-        # tiny query measures dispatch overhead, not per-item cost (see
+        # A partition-cache hit (either side) skipped partition passes, so
+        # its partition phase time is not a clean sample of the estimate;
+        # a tiny query measures dispatch overhead, not per-item cost (see
         # QueryPlanner.min_feedback_items).
         big_enough = (build_n + probe_n
                       >= getattr(self.planner, "min_feedback_items", 0))
-        if warmed and solo and not partition_hit and big_enough:
+        if (warmed and solo and not partition_hit
+                and not probe_partition_hit and big_enough):
             self.planner.observe(plan, timing)
         wall = time.perf_counter() - t0
         with self._lock:
@@ -342,7 +391,56 @@ class JoinQueryService:
         return QueryOutcome(q.query_id, q.tag, plan, timing, cache_hit,
                             0.0, wall, result,
                             partition_cache_hit=partition_hit,
+                            probe_partition_cache_hit=probe_partition_hit,
                             priority=q.priority)
+
+    # -- group-by aggregation (ops subsystem) --------------------------------
+    def _execute_groupby(self, q: GroupByQuery) -> QueryOutcome:
+        """Plan + run one group-by under the same locks/feedback regime."""
+        from repro.ops.groupby import groupby_coprocessed
+        t0 = time.perf_counter()
+        n = q.keys.size
+        with self._lock:
+            c_load, g_load = self._loads["C"], self._loads["G"]
+        plan = self.planner.choose_groupby(n, c_load=c_load, g_load=g_load)
+        share = plan.c_share
+        with self._lock:
+            self._loads["C"] += plan.est_s * share
+            self._loads["G"] += plan.est_s * (1.0 - share)
+            self._inflight += 1
+            inflight_at_start = self._inflight
+            start_epoch = self._exec_epoch
+            self._exec_epoch += 1
+        held = [self.cp.group_locks[g] for g in ("C", "G")
+                if g in _plan_groups(plan)]
+        for lock in held:
+            lock.acquire()
+        try:
+            result, timing = groupby_coprocessed(
+                self.cp, q.keys, q.values, schedule=plan.schedule,
+                partition_ratio=plan.partition_ratio,
+                agg_ratio=plan.join_ratio)
+        finally:
+            for lock in reversed(held):
+                lock.release()
+            with self._lock:
+                self._loads["C"] -= plan.est_s * share
+                self._loads["G"] -= plan.est_s * (1.0 - share)
+                self._inflight -= 1
+                solo = (inflight_at_start == 1
+                        and self._exec_epoch == start_epoch + 1)
+        sig = ("groupby", plan.scheme, n)
+        with self._lock:
+            warmed = sig in self._observed_sigs
+            self._observed_sigs.add(sig)
+        big_enough = n >= getattr(self.planner, "min_feedback_items", 0)
+        if warmed and solo and big_enough:
+            self.planner.observe(plan, timing)
+        wall = time.perf_counter() - t0
+        with self._lock:
+            self.completed += 1
+        return QueryOutcome(q.query_id, q.tag, plan, timing, False,
+                            0.0, wall, result, priority=q.priority)
 
     # -- admission + workers -------------------------------------------------
     def _ensure_workers(self):

@@ -42,12 +42,18 @@ def table_nbytes(table) -> int:
     return int(sum(x.nbytes for x in jax.tree.leaves(table)))
 
 
-def partition_layout_key(fingerprint: str, schedule) -> str:
+def partition_layout_key(fingerprint: str, schedule, side: str = "R") -> str:
     """Cache key for a PHJ partitioned layout: content + pass schedule.
 
     Layouts produced under different radix schedules assign different
-    partition ids, so they are not interchangeable."""
-    return f"part:{fingerprint}|sched={tuple(int(b) for b in schedule)}"
+    partition ids, so they are not interchangeable.  ``side`` separates
+    build ("R") from probe ("S") layouts: both are cached since the
+    probe-side satellite, and the pad sentinels baked into a padded layout
+    differ per side.
+    """
+    sched = tuple(int(b) for b in schedule)
+    tag = "" if side == "R" else f"|side={side}"
+    return f"part:{fingerprint}|sched={sched}{tag}"
 
 
 class BuildTableCache:
@@ -77,6 +83,9 @@ class BuildTableCache:
         self.partition_hits = 0
         self.partition_misses = 0
         self.partition_puts = 0
+        self.probe_partition_hits = 0
+        self.probe_partition_misses = 0
+        self.probe_partition_puts = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -133,6 +142,24 @@ class BuildTableCache:
     def put_partition(self, key: str, layout) -> bool:
         return self._put(key, layout, "partition")
 
+    # -- probe-side partitioned layouts (satellite: probe reuse) ------------
+    def get_probe_partition(self, key: str):
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                self.probe_partition_misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.probe_partition_hits += 1
+            return ent[0]
+
+    def record_probe_partition_miss(self):
+        with self._lock:
+            self.probe_partition_misses += 1
+
+    def put_probe_partition(self, key: str, layout) -> bool:
+        return self._put(key, layout, "probe_partition")
+
     def _put(self, key: str, obj, kind: str) -> bool:
         nbytes = table_nbytes(obj)
         if nbytes > self.budget_bytes:
@@ -145,6 +172,8 @@ class BuildTableCache:
             self.bytes += nbytes
             if kind == "partition":
                 self.partition_puts += 1
+            elif kind == "probe_partition":
+                self.probe_partition_puts += 1
             else:
                 self.puts += 1
             while self.bytes > self.budget_bytes:
@@ -178,4 +207,7 @@ class BuildTableCache:
                     "partition_hits": self.partition_hits,
                     "partition_misses": self.partition_misses,
                     "partition_puts": self.partition_puts,
-                    "partition_hit_rate": self.partition_hit_rate}
+                    "partition_hit_rate": self.partition_hit_rate,
+                    "probe_partition_hits": self.probe_partition_hits,
+                    "probe_partition_misses": self.probe_partition_misses,
+                    "probe_partition_puts": self.probe_partition_puts}

@@ -17,6 +17,10 @@ sizes, skew, and selectivity — the axes the paper sweeps in §5):
                       hot pool) for ``repro.queries.PipelineExecutor`` —
                       the engine sees its stages as ordinary join queries,
                       so dimension reuse hits the build-side caches.
+  * ``analytic``    — the ops-subsystem mix: star-shaped logical queries
+                      whose edges cycle through semi/anti/outer variants
+                      and whose sink cycles through group-by aggregates
+                      (count/sum/min/max/avg over the fact measure).
 
 ``make_workload`` assembles a weighted mix; ``MIXES`` names the standard
 mixes the benchmarks and tests use.  ``star`` produces ``queries.Query``
@@ -78,6 +82,13 @@ class WorkloadGenerator:
         self._star_pool: list = []
         self._star_sels = (None, 0.1, 0.4)
         self._star_i = 0
+        # Analytic scenario: cycle variants and grouped aggregates so a
+        # replayed stream exercises every operator the ops subsystem adds.
+        self._variant_cycle = (("inner", "semi"), ("inner", "anti"),
+                               ("left_outer", "inner"), ("semi", "inner"))
+        self._agg_cycle = (("count",), ("sum", "F.m"), ("min", "F.m"),
+                           ("max", "F.m"), ("avg", "F.m"))
+        self._analytic_i = 0
         self._qid = 0
 
     # -- scenarios ----------------------------------------------------------
@@ -123,14 +134,7 @@ class WorkloadGenerator:
         build sides — the cross-operator reuse the caches exist for.
         """
         from repro.queries import make_star_query
-        if not self._star_pool:
-            rng = np.random.default_rng(int(self.rng.integers(1 << 30)))
-            from repro.queries import Table
-            for i in range(len(self._hot_pool)):
-                n = _size(rng, max(1024, self.base // 2))
-                self._star_pool.append(Table(f"D{i}", {
-                    "id": rng.permutation(n).astype(np.int32),
-                    "a": rng.integers(0, 1000, size=n, dtype=np.int32)}))
+        self._ensure_star_pool()
         idx = sorted(self.rng.choice(len(self._star_pool),
                                      size=min(num_dims,
                                               len(self._star_pool)),
@@ -144,6 +148,45 @@ class WorkloadGenerator:
             _size(self.rng, 2 * self.base), [d.size for d in dims],
             selectivities=sels, seed=int(self.rng.integers(1 << 30)),
             aggregate=("count",), dim_tables=dims)
+
+    def _ensure_star_pool(self):
+        if self._star_pool:
+            return
+        from repro.queries import Table
+        rng = np.random.default_rng(int(self.rng.integers(1 << 30)))
+        for i in range(len(self._hot_pool)):
+            n = _size(rng, max(1024, self.base // 2))
+            self._star_pool.append(Table(f"D{i}", {
+                "id": rng.permutation(n).astype(np.int32),
+                "a": rng.integers(0, 1000, size=n, dtype=np.int32)}))
+
+    def analytic(self, num_dims: int = 2):
+        """A star query with join variants and a group-by sink.
+
+        Two dimensions from the recurring pool, edge kinds and the grouped
+        aggregate cycling deterministically; grouped on the fact table's
+        low-cardinality ``g`` attribute so results stay small however the
+        joins land.  Replayed through ``PipelineExecutor`` like ``star``.
+        """
+        from repro.queries import make_star_query
+        self._ensure_star_pool()
+        i = self._analytic_i
+        self._analytic_i += 1
+        idx = sorted(self.rng.choice(len(self._star_pool),
+                                     size=min(num_dims,
+                                              len(self._star_pool)),
+                                     replace=False))
+        dims = [self._star_pool[k] for k in idx]
+        kinds = list(self._variant_cycle[i % len(self._variant_cycle)])
+        kinds = (kinds * num_dims)[:len(dims)]
+        sels = [self._star_sels[(i + k) % len(self._star_sels)]
+                for k in range(len(dims))]
+        self._qid += 1
+        return make_star_query(
+            _size(self.rng, 2 * self.base), [d.size for d in dims],
+            selectivities=sels, seed=int(self.rng.integers(1 << 30)),
+            aggregate=self._agg_cycle[i % len(self._agg_cycle)],
+            dim_tables=dims, join_kinds=kinds, group_by=("F.g",))
 
     def _query(self, b, s, tag, *, max_out) -> JoinQuery:
         self._qid += 1

@@ -1,0 +1,2 @@
+"""Segmented-aggregation kernels (hash group-by's inner loop)."""
+from .ops import segmented_aggregate  # noqa: F401

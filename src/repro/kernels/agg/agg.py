@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: segmented aggregation (group-by's a2 step).
+
+After the fused radix passes cluster group keys and a stable sort assigns
+each tuple a dense group slot id, the remaining work is one streaming
+reduction: per slot, accumulate count / sum / min / max of the value
+column.  This kernel does all four in a single VMEM pass over the tuples —
+the aggregation analogue of the fused n1+n2 histogram kernel: every grid
+step adds its tile's one-hot contributions into the shared per-slot output
+blocks (same output block for every step -> sequential accumulation, the
+TPU-idiomatic replacement for atomic aggregation buckets).
+
+Tuples with ``gid == -1`` (pad sentinels) match no slot and contribute
+nothing.  The one-hot expansion is O(tile * num_slots) per tile, so this
+kernel targets the VMEM-resident per-partition working sets the planner
+produces; ``ops.py`` gates dispatch by size and falls back to the masked
+``jax.ops.segment_*`` path otherwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Plain Python ints: jnp scalars would be captured as traced constants
+# inside the Pallas kernel body, which pallas_call rejects.
+INT32_MAX = 2**31 - 1
+INT32_MIN = -(2**31)
+
+
+def _seg_agg_kernel(gid_ref, val_ref, cnt_ref, sum_ref, mn_ref, mx_ref, *,
+                    num_slots: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        mn_ref[...] = jnp.full_like(mn_ref, INT32_MAX)
+        mx_ref[...] = jnp.full_like(mx_ref, INT32_MIN)
+
+    gid = gid_ref[...].reshape(-1)                         # (tile,)
+    val = val_ref[...].reshape(-1)
+    onehot = (gid[:, None] == jnp.arange(num_slots,
+                                         dtype=jnp.int32)[None, :])
+    oh32 = onehot.astype(jnp.int32)                        # (tile, S)
+    cnt_ref[...] += oh32.sum(axis=0)[None, :]
+    sum_ref[...] += (val[:, None] * oh32).sum(axis=0)[None, :]
+    mn_ref[...] = jnp.minimum(
+        mn_ref[...],
+        jnp.where(onehot, val[:, None], INT32_MAX).min(axis=0)[None, :])
+    mx_ref[...] = jnp.maximum(
+        mx_ref[...],
+        jnp.where(onehot, val[:, None], INT32_MIN).max(axis=0)[None, :])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_slots", "block_rows", "interpret"))
+def seg_agg_pallas(gid: jax.Array, val: jax.Array, *, num_slots: int,
+                   block_rows: int = 8, interpret: bool = False):
+    """gid/val: (n,) int32, n % (block_rows*128) == 0; gid in [-1, num_slots).
+
+    Returns ``(count, sum, min, max)``, each ``(num_slots,)`` int32.  Empty
+    slots report count 0, sum 0, min INT32_MAX, max INT32_MIN (neutral
+    elements); sums wrap in int32 like the device accumulation they mirror.
+    """
+    n = gid.shape[0]
+    lanes = 128
+    rows = n // lanes
+    assert rows % block_rows == 0 and n == rows * lanes, (n, block_rows)
+    grid = (rows // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_seg_agg_kernel, num_slots=num_slots),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, num_slots), lambda i: (0, 0))
+                   for _ in range(4)],
+        out_shape=[jax.ShapeDtypeStruct((1, num_slots), jnp.int32)
+                   for _ in range(4)],
+        interpret=interpret,
+    )(gid.reshape(rows, lanes), val.reshape(rows, lanes))
+    cnt, sm, mn, mx = (x[0] for x in out)
+    return cnt, sm, mn, mx

@@ -1,0 +1,31 @@
+"""Dispatcher for the segmented-aggregation kernel.
+
+``segmented_aggregate`` is the data path behind group-by's reduce step
+(``repro.ops.groupby`` routes through it): the one-pass Pallas kernel on
+TPU-shaped inputs, the masked ``segment_*`` jnp path elsewhere.
+"""
+import jax
+
+from .agg import seg_agg_pallas
+from .ref import seg_agg_ref
+
+# The one-hot accumulation holds a (tile, num_slots) expansion in VMEM;
+# beyond this many slots the jnp path wins (and always off-TPU).
+_AGG_VMEM_SLOTS = 1 << 14
+
+
+def segmented_aggregate(gid, val, *, num_slots: int,
+                        use_pallas: bool | None = None,
+                        interpret: bool = False):
+    """Per-slot (count, sum, min, max) of ``val`` grouped by ``gid``.
+
+    ``gid == -1`` marks pad tuples (contribute nothing).  Sums wrap in
+    int32; empty slots report (0, 0, INT32_MAX, INT32_MIN).
+    """
+    if use_pallas is None:
+        use_pallas = (jax.default_backend() == "tpu"
+                      and num_slots <= _AGG_VMEM_SLOTS)
+    if (use_pallas or interpret) and gid.shape[0] % 1024 == 0:
+        return seg_agg_pallas(gid, val, num_slots=num_slots,
+                              interpret=interpret)
+    return seg_agg_ref(gid, val, num_slots=num_slots)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the segmented-aggregation kernel."""
+import jax.numpy as jnp
+
+from .agg import INT32_MAX, INT32_MIN
+
+
+def seg_agg_ref(gid, val, *, num_slots: int):
+    """(count, sum, min, max) per slot; ``gid == -1`` tuples are ignored.
+
+    Invalid tuples are redirected to slot 0 with neutral contributions
+    (0 for count/sum, INT32_MAX/MIN for min/max), so every slot they touch
+    is unchanged — identical semantics to the kernel's no-match one-hot.
+    """
+    import jax
+    valid = gid >= 0
+    g = jnp.where(valid, gid, 0)
+    ones = valid.astype(jnp.int32)
+    cnt = jax.ops.segment_sum(ones, g, num_segments=num_slots)
+    sm = jax.ops.segment_sum(val * ones, g, num_segments=num_slots)
+    mn = jax.ops.segment_min(jnp.where(valid, val, INT32_MAX), g,
+                             num_segments=num_slots)
+    mx = jax.ops.segment_max(jnp.where(valid, val, INT32_MIN), g,
+                             num_segments=num_slots)
+    # Untouched segments: segment_min/max report dtype-dependent identity;
+    # normalize to the kernel's neutral elements.
+    touched = jax.ops.segment_sum(jnp.ones_like(ones), g,
+                                  num_segments=num_slots) > 0
+    mn = jnp.where(touched, mn, INT32_MAX)
+    mx = jnp.where(touched, mx, INT32_MIN)
+    return (cnt.astype(jnp.int32), sm.astype(jnp.int32),
+            mn.astype(jnp.int32), mx.astype(jnp.int32))

@@ -1,0 +1,20 @@
+"""Co-processed relational operators beyond the inner equi-join.
+
+The paper's fine-grained C/G work splits apply to every partitioned hash
+operator; this package generalizes the join-only execution path:
+
+  * ``groupby`` — hash group-by aggregation over the fused radix-partition
+    data path (count/sum/min/max/avg), C/G ratio-split like PHJ.
+  * ``join_variants`` — semi / anti / left-outer joins over the existing
+    probe series via match-flag semantics plus an unmatched-row emission
+    pass.
+
+Importing this package attaches ``CoProcessor.groupby`` and
+``CoProcessor.probe_table_variant``.
+"""
+from .groupby import (GroupByResult, grouped_agg, groupby_coprocessed,
+                      groupby_ref)
+from .join_variants import (JOIN_KINDS, join_variant_oracle,
+                            probe_hash_table_variant, probe_table_variant)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

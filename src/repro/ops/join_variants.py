@@ -1,0 +1,144 @@
+"""Semi / anti / left-outer joins over the existing probe series.
+
+The probe steps p1–p3 already compute, per probe tuple, its matching key
+entry and match count; the variants differ only in what p4 emits:
+
+  * ``semi``       — probe rows with ≥ 1 match, emitted once each.  No
+    payload gather at all: the p4 expansion (2 random accesses/tuple in
+    the cost model) is replaced by a flag compaction — which is why the
+    planner prices semi/anti probes cheaper than inner.
+  * ``anti``       — probe rows with 0 matches (pad rows excluded).
+  * ``left_outer`` — the inner expansion plus an unmatched-row emission
+    pass: probe rows with 0 matches appear once with ``build_rid ==
+    NULL_RID`` (-1, the padded-result sentinel doubling as SQL NULL).
+
+All three run under the same C/G ratio splits as the inner probe
+(``CoProcessor.probe_table_variant`` mirrors ``probe_table``), against the
+same (possibly cached) build table.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hash_table as ht
+from repro.core.coprocess import CoProcessor, Timing
+from repro.core.relation import Relation
+
+JOIN_KINDS = ("inner", "semi", "anti", "left_outer")
+NULL_RID = int(ht.INVALID)   # -1: build side of an unmatched outer row
+
+
+def _emit_flagged(probe_rid: jax.Array, flags: jax.Array,
+                  max_out: int) -> ht.JoinResult:
+    """Compact flagged probe rows to the front (semi/anti emission)."""
+    n = probe_rid.shape[0]
+    total = flags.astype(jnp.int32).sum()
+    rank = jnp.arange(max_out, dtype=jnp.int32)
+    valid = rank < jnp.minimum(total, max_out)
+    if n == 0:
+        return ht.JoinResult(jnp.full((max_out,), ht.INVALID),
+                             jnp.full((max_out,), ht.INVALID),
+                             jnp.int32(0))
+    order = jnp.argsort(~flags, stable=True)
+    src = order[jnp.clip(rank, 0, n - 1)]
+    out_probe = jnp.where(valid, probe_rid[src], ht.INVALID)
+    return ht.JoinResult(out_probe, jnp.full((max_out,), ht.INVALID),
+                         jnp.minimum(total, max_out).astype(jnp.int32))
+
+
+def _probe_p4_outer(table: ht.HashTable, probe_rid: jax.Array,
+                    entry: jax.Array, nmatch: jax.Array, valid_row,
+                    max_out: int) -> ht.JoinResult:
+    """p4 with unmatched-row emission: fanout ``max(nmatch, 1)`` per row."""
+    n = probe_rid.shape[0]
+    nm_eff = jnp.where(valid_row, jnp.maximum(nmatch, 1), 0)
+    offs = jnp.cumsum(nm_eff)
+    total = offs[-1] if n > 0 else jnp.int32(0)
+    starts = offs - nm_eff
+    out_idx = jnp.arange(max_out, dtype=jnp.int32)
+    src = jnp.searchsorted(offs, out_idx, side="right").astype(jnp.int32)
+    valid = out_idx < jnp.minimum(total, max_out)
+    src_c = jnp.clip(src, 0, max(n - 1, 0))
+    j = out_idx - starts[src_c]
+    cap = table.rids.shape[0]
+    bpos = jnp.clip(
+        table.key_rid_start[jnp.clip(entry[src_c], 0, cap - 1)] + j,
+        0, cap - 1)
+    matched = nmatch[src_c] > 0
+    out_build = jnp.where(valid & matched, table.rids[bpos], ht.INVALID)
+    out_probe = jnp.where(valid, probe_rid[src_c], ht.INVALID)
+    return ht.JoinResult(out_probe, out_build,
+                         jnp.minimum(total, max_out).astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("max_out", "kind"))
+def probe_hash_table_variant(rel: Relation, table: ht.HashTable,
+                             max_out: int, kind: str) -> ht.JoinResult:
+    """Full probe phase under variant semantics (p1 -> p2 -> p3 -> emit).
+
+    Pad tuples (``rid == INVALID``) are never emitted — in particular they
+    do not count as "unmatched" for anti/left_outer.
+    """
+    assert kind in JOIN_KINDS, kind
+    if kind == "inner":
+        return ht.probe_hash_table(rel, table, max_out)
+    bkt = ht.probe_p1(rel.key, table.num_buckets)
+    kstart, kcount = ht.probe_p2(table, bkt)
+    entry, nmatch = ht.probe_p3(table, rel.key, kstart, kcount)
+    valid_row = rel.rid != ht.INVALID
+    if kind == "semi":
+        return _emit_flagged(rel.rid, (nmatch > 0) & valid_row, max_out)
+    if kind == "anti":
+        return _emit_flagged(rel.rid, (nmatch == 0) & valid_row, max_out)
+    return _probe_p4_outer(table, rel.rid, entry, nmatch, valid_row,
+                           max_out)
+
+
+def probe_table_variant(cp: CoProcessor, probe_rel: Relation,
+                        table: ht.HashTable, *, kind: str, max_out: int,
+                        ratios, timing: Timing | None = None
+                        ) -> tuple[ht.JoinResult, Timing]:
+    """Variant probe against an existing (possibly cached) table.
+
+    Delegates to ``CoProcessor.probe_table`` — same ratio cut, table
+    replication, per-group capacity slack, and concat — with the variant
+    emission kernel swapped in per group.
+    """
+    if kind == "inner":
+        return cp.probe_table(probe_rel, table, max_out=max_out,
+                              ratios=ratios, timing=timing)
+
+    def fn(mo):
+        return lambda r, t: probe_hash_table_variant(r, t, mo, kind)
+
+    return cp.probe_table(probe_rel, table, max_out=max_out, ratios=ratios,
+                          timing=timing, probe_fn=fn,
+                          tag=f"probe_v:{kind}")
+
+
+# ---------------------------------------------------------------------------
+# NumPy oracle (testing/verification only).
+# ---------------------------------------------------------------------------
+
+def join_variant_oracle(build: Relation, probe: Relation,
+                        kind: str) -> np.ndarray:
+    """Sorted (probe_rid, build_rid) pairs under variant semantics."""
+    inner = ht.join_oracle(build, probe)
+    if kind == "inner":
+        return inner
+    pr = np.asarray(probe.rid)
+    matched = np.unique(inner[:, 0])
+    if kind == "semi":
+        out = np.stack([np.sort(matched),
+                        np.full(matched.size, NULL_RID)], axis=1)
+        return out.astype(np.int64)
+    unmatched = np.setdiff1d(pr, matched)
+    miss = np.stack([unmatched, np.full(unmatched.size, NULL_RID)], axis=1)
+    if kind == "anti":
+        return miss.astype(np.int64)
+    out = np.concatenate([inner, miss.astype(np.int64)])
+    return out[np.lexsort((out[:, 1], out[:, 0]))]

@@ -16,7 +16,8 @@ admission, intermediate materialization, and build-side cache reuse
 """
 from .executor import PipelineExecutor, PipelineResult
 from .optimize import JoinOrderOptimizer, PhysicalPlan, PipelineStage
-from .plan import (Filter, Join, Query, Table, apply_aggregate,
+from .plan import (JOIN_KINDS, NULL_VALUE, Filter, Join, Query, Table,
+                   agg_output_name, apply_aggregate, apply_group_by,
                    make_chain_query, make_star_query, reference_execute,
                    reference_rows, rows_array)
 

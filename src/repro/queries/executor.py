@@ -10,10 +10,22 @@ match indices are materialized into qualified payload columns with the
 pipelining intermediates between operators, not re-scanning, is the
 dominant win).
 
+Scan fusion: filtered base tables are NOT materialized before their first
+join.  A ``_ScanView`` computes the filter's surviving row index once and
+composes it directly into whatever gather consumes the table — the stage's
+key column, or the stage output's payload gather — so a 2%-selective
+dimension never copies its full column set through the mask on the host.
+
+Join variants ride the same pipeline: a semi/anti stage builds on its
+filter table and emits only probe-side rows; a left-outer stage NULL-fills
+(``NULL_VALUE``) the build columns of unmatched rows.  A ``group_by``
+query ends in one more engine submission — a ``GroupByQuery`` through the
+same admission queue — whose result becomes the pipeline's output rows.
+
 Reuse falls out of the engine untouched: a stage's build side is
 fingerprinted like any other query, so a dimension table shared by many
-queries hits the build-table cache (SHJ) or the partition-layout cache
-(PHJ) after its first use.
+queries hits the build-table cache (SHJ) or the partition-layout caches
+(PHJ, both sides) after its first use.
 
 Capacity planning: a stage's result buffer is sized from an exact
 host-side match count (two ``searchsorted`` passes over the build keys) —
@@ -31,10 +43,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.relation import Relation, next_pow2
-from repro.engine.service import JoinQuery, JoinQueryService
+from repro.engine.service import GroupByQuery, JoinQuery, JoinQueryService
 
 from .optimize import JoinOrderOptimizer, PhysicalPlan
-from .plan import Query, apply_aggregate, rows_array
+from .plan import (NULL_VALUE, Query, agg_output_name, apply_aggregate,
+                   rows_array)
 
 # Filler keys for padding tiny/empty stage inputs up to a minimum size.
 # Distinct negative values per side: they match neither real keys (>= 0)
@@ -42,6 +55,87 @@ from .plan import Query, apply_aggregate, rows_array
 BUILD_FILL_KEY = -6
 PROBE_FILL_KEY = -7
 MIN_STAGE_ROWS = 64
+
+
+class _ScanView:
+    """Lazy filtered scan of a base table (fused filter pushdown).
+
+    Holds the raw columns plus the surviving row index; columns are
+    gathered on demand, and ``take`` composes the scan index with a
+    consumer's row selection so the filtered table is never materialized
+    as a whole intermediate.
+    """
+
+    def __init__(self, table):
+        self._name = table.name
+        self._cols = table.columns          # raw, unfiltered
+        self._idx = table.scan_indices()    # None = no filters
+        self._memo: dict = {}
+
+    @property
+    def n(self) -> int:
+        if self._idx is not None:
+            return int(self._idx.shape[0])
+        return next(iter(self._cols.values())).shape[0] if self._cols else 0
+
+    def names(self):
+        return [f"{self._name}.{c}" for c in self._cols]
+
+    def _raw(self, q: str) -> np.ndarray:
+        return self._cols[q.partition(".")[2]]
+
+    def col(self, q: str) -> np.ndarray:
+        """One filtered column (memoized — typically just the join key)."""
+        if q not in self._memo:
+            raw = self._raw(q)
+            self._memo[q] = raw if self._idx is None else raw[self._idx]
+        return self._memo[q]
+
+    def take(self, rows: np.ndarray) -> dict:
+        """All columns at the given (filtered-space) row positions.
+
+        The scan index composes into the gather: one indexed read of each
+        raw column instead of filter-materialize + gather.
+        """
+        if self._idx is not None:
+            rows = self._idx[rows]
+        return {f"{self._name}.{c}": v[rows] for c, v in self._cols.items()}
+
+    def materialize(self) -> dict:
+        return self.take(np.arange(self.n)) if self._idx is not None else \
+            {f"{self._name}.{c}": v for c, v in self._cols.items()}
+
+    def narrow(self, keep: np.ndarray) -> None:
+        """Restrict to a boolean mask over current (filtered) rows —
+        residual cycle-edge filters applied at scan time."""
+        cur = (self._idx if self._idx is not None
+               else np.arange(self.n))
+        self._idx = cur[keep]
+        self._memo.clear()
+
+
+def _src_n(src) -> int:
+    if isinstance(src, _ScanView):
+        return src.n
+    return next(iter(src.values())).shape[0] if src else 0
+
+
+def _src_names(src) -> list:
+    return src.names() if isinstance(src, _ScanView) else list(src)
+
+
+def _src_col(src, q: str) -> np.ndarray:
+    return src.col(q) if isinstance(src, _ScanView) else src[q]
+
+
+def _src_take(src, rows: np.ndarray) -> dict:
+    if isinstance(src, _ScanView):
+        return src.take(rows)
+    return {q: v[rows] for q, v in src.items()}
+
+
+def _src_cols(src) -> dict:
+    return src.materialize() if isinstance(src, _ScanView) else src
 
 
 def _as_relation(col: np.ndarray, fill_key: int) -> Relation:
@@ -66,12 +160,20 @@ def _apply_residual(cols: dict, left_q: str, right_q: str) -> dict:
     return {q: v[mask] for q, v in cols.items()}
 
 
-def _match_count(build_keys: np.ndarray, probe_keys: np.ndarray) -> int:
-    """Exact join cardinality (host-side sort + two searchsorted passes)."""
+def _match_count(build_keys: np.ndarray, probe_keys: np.ndarray,
+                 kind: str = "inner") -> int:
+    """Exact stage output cardinality (host-side searchsorted passes)."""
     bk = np.sort(build_keys.astype(np.int64), kind="stable")
     pk = probe_keys.astype(np.int64)
-    return int((np.searchsorted(bk, pk, side="right")
-                - np.searchsorted(bk, pk, side="left")).sum())
+    counts = (np.searchsorted(bk, pk, side="right")
+              - np.searchsorted(bk, pk, side="left"))
+    if kind == "semi":
+        return int((counts > 0).sum())
+    if kind == "anti":
+        return int((counts == 0).sum())
+    if kind == "left_outer":
+        return int(np.maximum(counts, 1).sum())
+    return int(counts.sum())
 
 
 @dataclasses.dataclass
@@ -80,8 +182,8 @@ class PipelineResult:
 
     columns: dict                 # final qualified columns (NumPy)
     rows: int
-    aggregate: object             # None | int
-    outcomes: list                # QueryOutcome per stage, stage order
+    aggregate: object             # None | int | float
+    outcomes: list                # QueryOutcome per stage (+ group-by sink)
     wall_s: float
     physical: PhysicalPlan
 
@@ -119,29 +221,25 @@ class PipelineExecutor:
         """Execute ``query`` under ``physical`` (optimized when omitted)."""
         if physical is None:
             physical = self.optimizer.optimize(query)
-        base = {name: t.qualified() for name, t in query.tables.items()}
+        base = {name: _ScanView(t) for name, t in query.tables.items()}
         # Residual (cycle-edge) filters on base tables apply at scan time;
         # the rest are grouped by the stage whose output they filter.
         stage_residuals: dict[int, list] = {}
         for ref, lq, rq in physical.residuals:
             if isinstance(ref, str):
-                base[ref] = _apply_residual(base[ref], lq, rq)
+                base[ref].narrow(base[ref].col(lq) == base[ref].col(rq))
             else:
                 stage_residuals.setdefault(ref, []).append((lq, rq))
+        t0 = time.perf_counter()
         if not physical.stages:
             if len(base) != 1:
                 raise ValueError("plan has no stages but several tables")
-            cols = next(iter(base.values()))
-            return PipelineResult(
-                columns=cols,
-                rows=next(iter(cols.values())).shape[0] if cols else 0,
-                aggregate=apply_aggregate(cols, query.aggregate),
-                outcomes=[], wall_s=0.0, physical=physical)
+            cols = next(iter(base.values())).materialize()
+            return self._finish(query, physical, cols, [], t0)
 
         inter: dict[int, dict] = {}        # stage id -> qualified columns
         depth: dict[int, int] = {}
         handles: dict[int, object] = {}
-        t0 = time.perf_counter()
         for stage in physical.stages:
             depth[stage.stage_id] = 1 + max(
                 [depth[d] for d in stage.deps], default=0)
@@ -153,25 +251,115 @@ class PipelineExecutor:
                     stage_residuals.get(stage.stage_id, ())),
                 priority=depth[stage.stage_id])
         outcomes = [handles[s.stage_id]() for s in physical.stages]
-        wall = time.perf_counter() - t0
         final = inter[physical.stages[-1].stage_id]
+        return self._finish(query, physical, final, outcomes, t0)
+
+    def _finish(self, query, physical, cols, outcomes, t0) -> PipelineResult:
+        """Apply the sink (group-by through the engine, or a host scalar)."""
+        if query.group_by:
+            cols, sink_outcome = self._run_group_by(query, cols)
+            outcomes = outcomes + [sink_outcome]
+            agg = None
+        else:
+            agg = apply_aggregate(cols, query.aggregate)
+        wall = time.perf_counter() - t0
         return PipelineResult(
-            columns=final,
-            rows=next(iter(final.values())).shape[0] if final else 0,
-            aggregate=apply_aggregate(final, query.aggregate),
-            outcomes=outcomes, wall_s=wall, physical=physical)
+            columns=cols,
+            rows=next(iter(cols.values())).shape[0] if cols else 0,
+            aggregate=agg, outcomes=outcomes, wall_s=wall,
+            physical=physical)
+
+    # -- group-by sink -------------------------------------------------------
+    def _run_group_by(self, query: Query, cols: dict):
+        """One ``GroupByQuery`` through the service's admission queue."""
+        aggregate = query.aggregate or ("count",)
+        keys, decode = self._encode_group_keys(cols, query.group_by)
+        n = keys.shape[0]
+        if aggregate[0] == "count":
+            values = np.ones(n, np.int32)
+        else:
+            values = np.asarray(cols[aggregate[1]], dtype=np.int32)
+        rid = np.arange(n, dtype=np.int32)
+        if n < MIN_STAGE_ROWS:                  # empty/tiny final pipelines
+            pad = MIN_STAGE_ROWS - n
+            keys = np.concatenate([keys,
+                                   np.full(pad, -4, np.int32)])
+            rid = np.concatenate([rid, np.full(pad, -1, np.int32)])
+        gq = GroupByQuery(keys=Relation(jnp.asarray(rid),
+                                        jnp.asarray(keys, dtype=jnp.int32)),
+                          values=values, tag="groupby-sink",
+                          query_id=next(self._qid))
+        if self.service.num_workers <= 0:
+            outcome = self.service.execute(gq)
+        else:
+            outcome = self.service.submit(gq)()
+        res = outcome.result
+        out = decode(res.keys)
+        name = agg_output_name(aggregate)
+        kind = aggregate[0]
+        if kind == "count":
+            out[name] = res.counts.astype(np.int32)
+        elif kind == "sum":
+            out[name] = res.sums.astype(np.int32)
+        elif kind == "min":
+            out[name] = res.mins.astype(np.int32)
+        elif kind == "max":
+            out[name] = res.maxs.astype(np.int32)
+        else:                                   # avg: wrapped sum / count
+            out[name] = res.sums.astype(np.float64) / \
+                np.maximum(res.counts, 1)
+        return out, outcome
+
+    def _encode_group_keys(self, cols: dict, group_by: tuple):
+        """int32 key vector + a decoder back to the original key columns.
+
+        A single group-by column passes through raw (any int32 values —
+        the operator's pad handling tolerates negatives, including outer-
+        join NULLs).  Multiple columns mixed-radix pack their per-column
+        dictionary codes; the group-by itself still runs on the device,
+        the host only builds the per-column dictionaries.
+        """
+        if len(group_by) == 1:
+            q = group_by[0]
+            return np.asarray(cols[q], dtype=np.int32), \
+                lambda k: {q: k.astype(np.int32)}
+        dicts, codes, radix = [], [], 1
+        for q in group_by:
+            uniq, inv = np.unique(np.asarray(cols[q]), return_inverse=True)
+            dicts.append(uniq)
+            codes.append(inv.astype(np.int64))
+        packed = np.zeros(codes[0].shape[0] if codes else 0, np.int64)
+        for uniq, inv in zip(dicts, codes):
+            packed = packed * max(1, uniq.shape[0]) + inv
+            radix *= max(1, uniq.shape[0])
+        if radix >= 2**31:
+            raise ValueError(
+                f"group_by key space too large to pack into int32 "
+                f"({radix} combinations)")
+
+        def decode(k: np.ndarray) -> dict:
+            k = k.astype(np.int64)
+            out = {}
+            for q, uniq in zip(reversed(group_by), reversed(dicts)):
+                r = max(1, uniq.shape[0])
+                out[q] = uniq[(k % r)].astype(np.int32) if uniq.size else \
+                    np.zeros(k.shape[0], np.int32)
+                k = k // r
+            return out
+
+        return packed.astype(np.int32), decode
 
     # -- per-stage plumbing --------------------------------------------------
-    def _input_cols(self, ref, base, inter) -> dict:
+    def _input(self, ref, base, inter):
         return base[ref] if isinstance(ref, str) else inter[ref]
 
     def _stage_query_fn(self, stage, base, inter):
         def make_query(_dep_outcomes) -> JoinQuery:
-            bcols = self._input_cols(stage.build_input, base, inter)
-            pcols = self._input_cols(stage.probe_input, base, inter)
-            bkey = bcols[stage.build_col]
-            pkey = pcols[stage.probe_col]
-            matches = _match_count(bkey, pkey)
+            bsrc = self._input(stage.build_input, base, inter)
+            psrc = self._input(stage.probe_input, base, inter)
+            bkey = _src_col(bsrc, stage.build_col)
+            pkey = _src_col(psrc, stage.probe_col)
+            matches = _match_count(bkey, pkey, stage.kind)
             # Power-of-two capacity: stable across repeats of the same
             # pipeline (compile-cache friendly) with headroom for the
             # executor's per-group split slack.
@@ -181,18 +369,35 @@ class PipelineExecutor:
                 build=_as_relation(bkey, BUILD_FILL_KEY),
                 probe=_as_relation(pkey, PROBE_FILL_KEY),
                 tag=f"stage{stage.stage_id}:{stage.join}",
-                max_out=max_out, query_id=next(self._qid))
+                max_out=max_out, query_id=next(self._qid),
+                kind=stage.kind)
         return make_query
 
     def _stage_finalize_fn(self, stage, base, inter, residuals=()):
         def finalize(outcome) -> None:
-            bcols = self._input_cols(stage.build_input, base, inter)
-            pcols = self._input_cols(stage.probe_input, base, inter)
+            bsrc = self._input(stage.build_input, base, inter)
+            psrc = self._input(stage.probe_input, base, inter)
             c = int(outcome.result.count)
             pr = np.asarray(outcome.result.probe_rid[:c])
             br = np.asarray(outcome.result.build_rid[:c])
-            cols = {q: v[pr] for q, v in pcols.items()}
-            cols.update({q: v[br] for q, v in bcols.items()})
+            cols = _src_take(psrc, pr)
+            if stage.kind in ("semi", "anti"):
+                pass          # filter table consumed: probe columns only
+            elif stage.kind == "left_outer":
+                # Unmatched rows carry NULL_VALUE on the build side.  An
+                # empty build side (filtered to nothing) has no rows to
+                # gather at all — everything is NULL.
+                matched = br >= 0
+                if _src_n(bsrc) == 0:
+                    for q in _src_names(bsrc):
+                        cols[q] = np.full(c, NULL_VALUE, np.int32)
+                else:
+                    bcols = _src_take(bsrc, np.where(matched, br, 0))
+                    for q, v in bcols.items():
+                        cols[q] = np.where(matched, v,
+                                           v.dtype.type(NULL_VALUE))
+            else:
+                cols.update(_src_take(bsrc, br))
             for lq, rq in residuals:
                 cols = _apply_residual(cols, lq, rq)
             inter[stage.stage_id] = cols

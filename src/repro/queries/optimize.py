@@ -56,8 +56,13 @@ class PipelineStage:
     plan: QueryPlan               # scheme + SHJ-vs-PHJ annotation
     deps: tuple
 
+    @property
+    def kind(self) -> str:
+        return self.join.kind
+
     def to_dict(self) -> dict:
         return {"stage_id": self.stage_id, "join": str(self.join),
+                "kind": self.kind,
                 "build_input": self.build_input,
                 "probe_input": self.probe_input,
                 "est_build": self.est_build, "est_probe": self.est_probe,
@@ -76,6 +81,10 @@ class PhysicalPlan:
     # residual equality filter, applied to that component's output —
     # (ref, left_q, right_q) where ref is a table name or stage id.
     residuals: tuple = ()
+    # Group-by sink (when the query has one): the planner's scheme choice
+    # for the aggregation stage, priced into est_total_s.
+    group_by: tuple = ()
+    agg_plan: QueryPlan | None = None
 
     def describe(self) -> str:
         lines = [f"physical plan — est {self.est_total_s * 1e3:.2f} ms"]
@@ -88,12 +97,20 @@ class PhysicalPlan:
                 f"est {s.est_build}x{s.est_probe} -> {s.est_out}, "
                 f"{s.plan.est_s * 1e3:.2f} ms"
                 + (f" (after {list(s.deps)})" if s.deps else ""))
+        if self.agg_plan is not None:
+            lines.append(
+                f"  sink: group by {list(self.group_by)} "
+                f"[groupby/{self.agg_plan.scheme}] "
+                f"{self.agg_plan.est_s * 1e3:.2f} ms")
         return "\n".join(lines)
 
     def to_dict(self) -> dict:
         return {"est_total_s": self.est_total_s,
                 "order": [str(j) for j in self.order],
                 "residuals": [[str(x) for x in r] for r in self.residuals],
+                "group_by": list(self.group_by),
+                "agg_scheme": (self.agg_plan.scheme
+                               if self.agg_plan else None),
                 "stages": [s.to_dict() for s in self.stages]}
 
 
@@ -133,8 +150,74 @@ class JoinOrderOptimizer:
         stages: list[PipelineStage] = []
         residuals: list = []
         total = 0.0
+        final = next(iter(comps.values()))
         for join in order:
             left, right = comps[join.left], comps[join.right]
+            if join.kind in ("semi", "anti"):
+                # Filter edge: the right table builds, the left component
+                # probes for match flags.  Output rows shrink to the
+                # left's matching (or non-matching) fraction — this is
+                # the cardinality reduction that makes the optimizer
+                # schedule semi filters early.
+                sel = 1.0 / max(left.col_ndv(join.left_q),
+                                right.col_ndv(join.right_q))
+                p_match = min(1.0, right.rows * sel)
+                frac = p_match if join.kind == "semi" else 1.0 - p_match
+                out_rows = max(1.0, left.rows * frac)
+                plan = self.planner.choose(
+                    int(round(right.rows)), int(round(left.rows)),
+                    max_out=max(64, int(out_rows * EST_OUT_SLACK) + 64),
+                    kind=join.kind)
+                deps = tuple(sorted(
+                    {r for r in (left.ref,) if isinstance(r, int)}))
+                stage = PipelineStage(
+                    stage_id=len(stages), join=join,
+                    build_input=right.ref, probe_input=left.ref,
+                    build_col=join.right_q, probe_col=join.left_q,
+                    est_build=int(round(right.rows)),
+                    est_probe=int(round(left.rows)),
+                    est_out=int(round(out_rows)), plan=plan, deps=deps)
+                stages.append(stage)
+                total += plan.est_s
+                merged = _Component(stage.stage_id, out_rows,
+                                    {q: min(n, out_rows)
+                                     for q, n in left.ndv.items()})
+                for name, c in comps.items():
+                    if c is left or c is right:
+                        comps[name] = merged
+                final = merged
+                continue
+            if join.kind == "left_outer" and left is not right:
+                # Preserved side probes; every left row survives.
+                sel = 1.0 / max(right.col_ndv(join.right_q),
+                                left.col_ndv(join.left_q))
+                inner_out = left.rows * right.rows * sel
+                out_rows = max(left.rows, inner_out)
+                plan = self.planner.choose(
+                    int(round(right.rows)), int(round(left.rows)),
+                    max_out=max(64, int(out_rows * EST_OUT_SLACK) + 64),
+                    kind=join.kind)
+                deps = tuple(sorted(
+                    {r for r in (right.ref, left.ref)
+                     if isinstance(r, int)}))
+                stage = PipelineStage(
+                    stage_id=len(stages), join=join,
+                    build_input=right.ref, probe_input=left.ref,
+                    build_col=join.right_q, probe_col=join.left_q,
+                    est_build=int(round(right.rows)),
+                    est_probe=int(round(left.rows)),
+                    est_out=int(round(out_rows)), plan=plan, deps=deps)
+                stages.append(stage)
+                total += plan.est_s
+                merged = _Component(stage.stage_id, out_rows,
+                                    {q: min(n, out_rows)
+                                     for q, n in {**right.ndv,
+                                                  **left.ndv}.items()})
+                for name, c in comps.items():
+                    if c is left or c is right:
+                        comps[name] = merged
+                final = merged
+                continue
             if left is right:
                 # Cycle edge: both sides already joined — an equality
                 # filter on the component, not a stage.
@@ -148,6 +231,7 @@ class JoinOrderOptimizer:
                 for name, c in comps.items():
                     if c is left:
                         comps[name] = shrunk
+                final = shrunk
                 continue
             # Build side = smaller estimated input (ties go right: dims
             # typically appear on the right of a star query's edges).
@@ -181,13 +265,34 @@ class JoinOrderOptimizer:
             for name, c in comps.items():
                 if c is left or c is right:
                     comps[name] = merged
+            final = merged
+        agg_plan = None
+        if query.group_by:
+            # The aggregation sink, priced like any other operator: the
+            # planner's scheme choice over the pipeline's estimated final
+            # cardinality (group-by cost does not depend on join order
+            # beyond that cardinality, so it cannot flip the ordering —
+            # but it belongs in est_total_s for plan-vs-measured honesty).
+            agg_plan = self.planner.choose_groupby(
+                max(1, int(round(final.rows))))
+            total += agg_plan.est_s
         return PhysicalPlan(stages=stages, order=tuple(order),
                             est_total_s=total, aggregate=query.aggregate,
-                            residuals=tuple(residuals))
+                            residuals=tuple(residuals),
+                            group_by=query.group_by, agg_plan=agg_plan)
 
     # -- search --------------------------------------------------------------
     def enumerate_orders(self, query: Query):
-        """Every executable edge order (any permutation is a bushy plan)."""
+        """Every executable edge order (any permutation is a bushy plan).
+
+        Inner joins commute, and semi/anti edges are per-row filters on
+        their left component (duplication-insensitive), so they permute
+        freely.  Left-outer joins do NOT commute with joins/filters that
+        shrink the preserved side — a query containing one executes in
+        textual order only, which is the order the reference defines.
+        """
+        if any(j.kind == "left_outer" for j in query.joins):
+            return [tuple(query.joins)]
         return [tuple(p) for p in itertools.permutations(query.joins)]
 
     def _greedy_order(self, query: Query):
@@ -213,7 +318,9 @@ class JoinOrderOptimizer:
 
     def optimize(self, query: Query) -> PhysicalPlan:
         """The cheapest priced order (exhaustive when small, else greedy)."""
-        if len(query.joins) <= self.exhaustive_joins:
+        if any(j.kind == "left_outer" for j in query.joins):
+            candidates = [tuple(query.joins)]       # not reorderable
+        elif len(query.joins) <= self.exhaustive_joins:
             candidates = self.enumerate_orders(query)
         else:
             candidates = [self._greedy_order(query)]
