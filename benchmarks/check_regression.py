@@ -1,0 +1,73 @@
+"""Tiny perf regression gate over the BENCH_*.json rollup artifact.
+
+Reads the newest ``reports/bench/BENCH_*.json``, extracts the smoke
+query-pipeline figures, and fails (exit 1) when:
+
+  * the fused path moved any intermediate bytes through the host
+    (``host_bytes_moved`` must be 0 — the device-resident invariant), or
+  * the smoke 3-join star end-to-end time regressed more than
+    ``TOLERANCE`` (25%) past the committed baseline value.
+
+The baseline lives in ``benchmarks/baseline.json``; refresh it (with a
+note in the commit) whenever an intentional change moves the number.
+
+    PYTHONPATH=src python -m benchmarks.check_regression
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+TOLERANCE = 1.25
+
+HERE = os.path.dirname(__file__)
+BASELINE_PATH = os.path.join(HERE, "baseline.json")
+BENCH_GLOB = os.path.join(HERE, "..", "reports", "bench", "BENCH_*.json")
+
+
+def main() -> int:
+    rollups = sorted(glob.glob(BENCH_GLOB))
+    if not rollups:
+        print("check_regression: no BENCH_*.json rollup found", flush=True)
+        return 1
+    with open(rollups[-1]) as f:
+        rollup = json.load(f)
+    entry = rollup.get("benchmarks", {}).get("query_pipeline")
+    if not entry or not entry.get("ok") or not entry.get("payload"):
+        print(f"check_regression: no successful query_pipeline payload in "
+              f"{rollups[-1]}", flush=True)
+        return 1
+    payload = entry["payload"]
+    if not payload.get("smoke"):
+        print("check_regression: rollup is not a smoke run; gate applies "
+              "to CI smoke figures only — skipping", flush=True)
+        return 0
+    with open(BASELINE_PATH) as f:
+        baseline = json.load(f)["query_pipeline"]
+
+    failures = []
+    fused_bytes = payload["handoff"]["host_bytes_moved_fused"]
+    if fused_bytes != 0:
+        failures.append(f"fused hand-off moved {fused_bytes} intermediate "
+                        f"bytes through the host (want 0)")
+    measured = payload["join_order"]["chosen_s"]
+    allowed = baseline["smoke_star_chosen_s"] * TOLERANCE
+    verdict = "OK" if measured <= allowed else "REGRESSED"
+    print(f"check_regression: smoke star chosen order {measured:.3f}s "
+          f"(baseline {baseline['smoke_star_chosen_s']:.3f}s, "
+          f"allowed {allowed:.3f}s) -> {verdict}", flush=True)
+    if measured > allowed:
+        failures.append(f"smoke star end-to-end {measured:.3f}s exceeds "
+                        f"{TOLERANCE:.2f}x baseline "
+                        f"{baseline['smoke_star_chosen_s']:.3f}s")
+    print(f"check_regression: fused intermediate host bytes = "
+          f"{fused_bytes}", flush=True)
+    for msg in failures:
+        print(f"check_regression: FAIL — {msg}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

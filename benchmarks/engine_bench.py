@@ -21,7 +21,7 @@ import time
 
 import numpy as np
 
-from .common import N_TUPLES, csv_row, report, time_call
+from .common import N_TUPLES, bench_seed, csv_row, report, time_call
 
 
 def _verify(queries, outcomes):
@@ -51,7 +51,7 @@ def engine_throughput(smoke: bool = False):
     planner = QueryPlanner.calibrated(cp, n=cal_n, reps=2, delta=delta)
     svc = JoinQueryService(cp=cp, planner=planner, num_workers=2)
     workload = make_workload("mixed", num_queries=n_queries,
-                             base_tuples=base, seed=7)
+                             base_tuples=base, seed=bench_seed(7))
     warm = svc.run(workload)          # compile + warm the table cache
     _verify(workload, warm)
     svc.run(workload)                 # adaptation pass (clean observations)
@@ -77,8 +77,8 @@ def engine_throughput(smoke: bool = False):
     # The paper's reuse shape: a large hot build relation (dimension
     # table), repeated small probe batches — cold pays the build every
     # time, hot amortizes it away entirely.
-    gen = WorkloadGenerator(base, seed=11)
-    hot_build = unique_relation(4 * base, seed=101)
+    gen = WorkloadGenerator(base, seed=bench_seed(11))
+    hot_build = unique_relation(4 * base, seed=bench_seed(101))
     hot_probe = gen.zipf().probe.take(0, max(256, base // 4))
     hot_q = JoinQuery(build=hot_build, probe=hot_probe, tag="hot",
                       max_out=hot_probe.size + 64, query_id=10_001)
@@ -110,7 +110,7 @@ def engine_throughput(smoke: bool = False):
     # the timed pass measures the *converged* plans for every config.
     static_n = max(8, n_queries // 2)
     mix = make_workload("mixed", num_queries=static_n, base_tuples=base,
-                        seed=23)
+                        seed=bench_seed(23))
     results = {}
     adaptive_plans = None
 

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import csv_row, report, time_call
+from .common import bench_seed, csv_row, report, time_call
 
 
 def groupby_bench(smoke: bool = False):
@@ -37,7 +37,7 @@ def groupby_bench(smoke: bool = False):
     planner = QueryPlanner(delta=0.25)
     out: dict = {"smoke": smoke, "sizes": sizes, "groupby": []}
 
-    rng = np.random.default_rng(7)
+    rng = np.random.default_rng(bench_seed(7))
     for n in sizes:
         keys = rng.integers(0, max(64, n // 64), n).astype(np.int32)
         vals = rng.integers(0, 100, n).astype(np.int32)
@@ -92,8 +92,8 @@ def groupby_bench(smoke: bool = False):
 
     # -- 2. semi vs inner probe cost over the same table ------------------
     n = sizes[-1]
-    b = uniform_relation(n // 4, seed=11)
-    p = uniform_relation(n, key_range=n // 2, seed=12)   # ~half match
+    b = uniform_relation(n // 4, seed=bench_seed(11))
+    p = uniform_relation(n, key_range=n // 2, seed=bench_seed(12))   # ~half match
     table = build_hash_table(b, default_num_buckets(n // 4))
     probe_times = {}
     for kind, cap in (("inner", 4 * n + 1024), ("semi", n + 64)):

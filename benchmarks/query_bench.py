@@ -1,19 +1,27 @@
-"""Query-pipeline benchmark: join ordering, co-processing, and reuse.
+"""Query-pipeline benchmark: join ordering, data-path fusion, and reuse.
 
-Three measured figures for the multi-join subsystem on a 3-join star
+Four measured figures for the multi-join subsystem on a 3-join star
 query (fact ⋈ D0 ⋈ D1 ⋈ D2, one highly selective dimension filter):
 
   1. **join order** — the cost-model-chosen order vs the worst enumerated
      order vs the textual left-deep baseline, all verified against the
      NumPy reference; the chosen order must beat the worst (the optimizer's
      reason to exist).
-  2. **single device** — the chosen order re-run with planning pinned to
+  2. **stage hand-off** — the same chosen plan under the fused
+     device-resident hand-off (``StageView`` rid-chains, the default) vs
+     the host-materialize baseline; the fused path must win end-to-end and
+     report ``host_bytes_moved == 0`` for its intermediates.
+  3. **single device** — the chosen order re-run with planning pinned to
      GPU_ONLY: what pipelined co-processing over both groups adds.
-  3. **star replay** — a ``WorkloadGenerator.star()`` stream through one
+  4. **star replay** — a ``WorkloadGenerator.star()`` stream through one
      shared executor: multi-join traffic with recurring dimensions,
      reporting pipelines/sec and both build-side cache hit kinds.
 
-Smoke mode (CI) shrinks sizes so the whole thing runs in tens of seconds.
+Smoke mode (CI) shrinks sizes so the whole thing runs in tens of seconds;
+it additionally hard-asserts the fused path's zero-intermediate-bytes
+invariant (the regression gate in ``check_regression.py`` then bounds the
+end-to-end time against the committed baseline).  ``REPRO_SEED`` offsets
+every generator seed for reproducible-yet-refreshable rollups.
 """
 from __future__ import annotations
 
@@ -21,7 +29,7 @@ import time
 
 import numpy as np
 
-from .common import N_TUPLES, csv_row, report, time_call
+from .common import N_TUPLES, bench_seed, csv_row, report, time_call
 
 
 def _run_verified(executor, query, physical, ref):
@@ -57,7 +65,7 @@ def query_pipeline(smoke: bool = False):
     # One selective dimension: the chosen order shrinks the pipeline's
     # intermediates immediately, the worst order drags full-size ones.
     query = make_star_query(fact, [dim] * 3, selectivities=[0.02, None, 0.5],
-                            seed=17, aggregate=("count",))
+                            seed=bench_seed(17), aggregate=("count",))
     ref = reference_execute(query)
     chosen = optimizer.optimize(query)
     worst = optimizer.worst_order(query)
@@ -65,28 +73,30 @@ def query_pipeline(smoke: bool = False):
     out["plans"] = {"chosen": chosen.to_dict(), "worst": worst.to_dict(),
                     "textual": textual.to_dict()}
 
-    def timed(physical, use_planner=None):
+    def timed(physical, use_planner=None, handoff="device"):
         pl = use_planner or planner
         svc = JoinQueryService(cp=cp, planner=pl, num_workers=2)
-        with PipelineExecutor(service=svc, optimizer=optimizer) as ex:
+        with PipelineExecutor(service=svc, optimizer=optimizer,
+                              handoff=handoff) as ex:
             # Warm passes: compile every stage variant and let the online
             # scales settle, then freeze adaptation so the timed passes
             # measure the converged plans (engine_bench's protocol).
             _run_verified(ex, query, physical, ref)
+            last = {}
             for _ in range(2):
-                ex.run(query, physical)
+                last["res"] = ex.run(query, physical)
             saved, pl.online.alpha = pl.online.alpha, 0.0
             try:
-                t = time_call(lambda: ex.run(query, physical), reps=reps,
-                              warmup=1)
+                t = time_call(lambda: last.update(
+                    res=ex.run(query, physical)), reps=reps, warmup=1)
             finally:
                 pl.online.alpha = saved
             stats = svc.stats()
-        return t, stats
+        return t, stats, last["res"]
 
-    t_chosen, st_chosen = timed(chosen)
-    t_worst, _ = timed(worst)
-    t_textual, _ = timed(textual)
+    t_chosen, st_chosen, res_chosen = timed(chosen)
+    t_worst, _, _ = timed(worst)
+    t_textual, _, _ = timed(textual)
     out["join_order"] = {
         "chosen_s": t_chosen, "worst_s": t_worst, "textual_s": t_textual,
         "chosen_est_s": chosen.est_total_s, "worst_est_s": worst.est_total_s,
@@ -99,20 +109,50 @@ def query_pipeline(smoke: bool = False):
             f"slowdown={t_worst/t_chosen:.2f}x")
     csv_row("query/order_textual", t_textual * 1e6, "")
 
-    # -- 2. pipelined co-processing vs a single device --------------------
+    # -- 2. fused device-resident hand-off vs host materialization --------
+    # The SAME chosen physical plan, executed under both data paths.  The
+    # fused path's intermediates never cross the host: its service-level
+    # host_bytes_moved counter must read 0 (hard invariant, asserted in
+    # smoke and at scale); the host path reports the actual gather +
+    # re-upload volume its stages moved.
+    t_host, st_host, res_host = timed(chosen, handoff="host")
+    fused_bytes = st_chosen["host_bytes_moved"]
+    host_bytes = st_host["host_bytes_moved"]
+    assert fused_bytes == 0, \
+        f"fused hand-off moved {fused_bytes} intermediate bytes (want 0)"
+    assert host_bytes > 0, "host path reported no intermediate traffic"
+    assert (res_host.rows_array() == ref[0]).all()
+    out["handoff"] = {
+        "fused_s": t_chosen, "host_s": t_host,
+        "fused_speedup": t_host / t_chosen,
+        "fused_beats_host": bool(t_chosen < t_host),
+        "host_bytes_moved_fused": fused_bytes,
+        "host_bytes_moved_host": host_bytes,
+        "host_bytes_per_pipeline": res_host.host_bytes_moved}
+    csv_row("query/handoff_fused", t_chosen * 1e6,
+            f"host_bytes={fused_bytes}")
+    csv_row("query/handoff_host", t_host * 1e6,
+            f"fused_speedup={t_host/t_chosen:.2f}x;"
+            f"host_bytes={host_bytes}")
+    if not smoke:
+        assert t_chosen < t_host, \
+            (f"fused hand-off ({t_chosen:.3f}s) did not beat host "
+             f"materialization ({t_host:.3f}s)")
+
+    # -- 3. pipelined co-processing vs a single device --------------------
     single_planner = QueryPlanner.calibrated(
         cp, n=cal_n, reps=1, delta=delta,
         allowed_schemes=("GPU_ONLY",), allow_phj=False)
     single_opt = JoinOrderOptimizer(single_planner)
-    t_single, _ = timed(single_opt.optimize(query),
-                        use_planner=single_planner)
+    t_single, _, _ = timed(single_opt.optimize(query),
+                           use_planner=single_planner)
     out["single_device"] = {"gpu_only_s": t_single,
                             "coproc_vs_single": t_single / t_chosen}
     csv_row("query/single_device", t_single * 1e6,
             f"coproc_speedup={t_single/t_chosen:.2f}x")
 
-    # -- 3. star replay: multi-join traffic with recurring dimensions -----
-    gen = WorkloadGenerator(max(1024, fact // 4), seed=29)
+    # -- 4. star replay: multi-join traffic with recurring dimensions -----
+    gen = WorkloadGenerator(max(1024, fact // 4), seed=bench_seed(29))
     stars = [gen.star() for _ in range(n_stars)]
     refs = [reference_execute(s) for s in stars]
     svc = JoinQueryService(cp=cp, planner=planner, num_workers=2)
@@ -123,11 +163,13 @@ def query_pipeline(smoke: bool = False):
         outcomes = [ex.run(s) for s in stars]
         elapsed = time.perf_counter() - t0
         stats = svc.stats()
+    assert stats["host_bytes_moved"] == 0       # fused replay stays fused
     pps = len(stars) / elapsed
     out["star_replay"] = {
         "pipelines_per_s": pps, "elapsed_s": elapsed,
         "stage_wall_s_mean": float(np.mean(
             [o.wall_s for r in outcomes for o in r.outcomes])),
+        "host_bytes_moved": stats["host_bytes_moved"],
         "cache": stats["cache"],
         "pipelines": [r.to_dict() for r in outcomes]}
     csv_row("query/star_replay", 1e6 / pps,

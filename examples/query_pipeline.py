@@ -69,6 +69,8 @@ def main():
     print(f"caches: {c['hits']} table hits, "
           f"{c['partition_hits']} partition-layout hits, "
           f"{c['bytes'] / 2**20:.1f} MiB resident")
+    print(f"stage hand-off: device-resident (StageView rid-chains), "
+          f"{st['host_bytes_moved']} intermediate bytes through the host")
 
 
 if __name__ == "__main__":

@@ -114,6 +114,83 @@ def probe_with_selectivity(build: Relation, n: int, *, selectivity: float,
 
 
 # ---------------------------------------------------------------------------
+# Composable row-index chains (device-resident stage hand-off).
+# ---------------------------------------------------------------------------
+
+# Beyond this many links a chain is eagerly flattened to one device index
+# vector: evaluation cost stays O(1) gathers per column however deep the
+# pipeline gets, at the price of materializing one int32 index array.
+CHAIN_DEPTH_CAP = 4
+
+
+@jax.jit
+def _compose_idx(outer: jax.Array, inner: jax.Array) -> jax.Array:
+    """One fold step of a chain: ``outer[inner]`` (out-of-range clips)."""
+    return jnp.take(outer, inner, axis=0)
+
+
+@jax.jit
+def _gather_col(col: jax.Array, idx: jax.Array) -> jax.Array:
+    return jnp.take(col, idx, axis=0)
+
+
+class IndexChain:
+    """A composition of row-index gathers, kept on device.
+
+    ``IndexChain((i0, i1, i2)).gather(col)`` computes
+    ``col[i0][i1][i2]`` — equivalently ``col[i0[i1][i2]]`` — without ever
+    materializing the intermediate gathers of ``col``: the chain folds its
+    *indices* (``flat``) once, then every column of the same source pays a
+    single device gather at the final cardinality.  This is how the query
+    pipeline hands intermediates between join stages without a host round
+    trip: a stage's output is its match-index vector composed onto its
+    inputs' chains (``take(take(col, rid1), rid2)``), all jitted.
+
+    Chains deeper than ``cap`` flatten eagerly on device (the depth cap's
+    fallback), so arbitrarily deep pipelines stay O(1) gathers per column.
+    An empty chain is the identity.
+    """
+
+    __slots__ = ("links", "_flat")
+
+    def __init__(self, links=()):
+        self.links = tuple(links)
+        self._flat = self.links[0] if len(self.links) == 1 else None
+
+    @property
+    def depth(self) -> int:
+        return len(self.links)
+
+    @property
+    def size(self) -> int | None:
+        """Rows of the chain's output space (None for the identity)."""
+        return int(self.links[-1].shape[0]) if self.links else None
+
+    def extend(self, idx, *, cap: int = CHAIN_DEPTH_CAP) -> "IndexChain":
+        """The chain followed by one more gather (flattens past ``cap``)."""
+        idx = jnp.asarray(idx)
+        child = IndexChain(self.links + (idx,))
+        if child.depth > cap:
+            return IndexChain((child.flat(),))
+        return child
+
+    def flat(self) -> jax.Array:
+        """The chain folded to one device index vector (memoized)."""
+        if self._flat is None:
+            f = self.links[0]
+            for link in self.links[1:]:
+                f = _compose_idx(f, link)
+            self._flat = f
+        return self._flat
+
+    def gather(self, col) -> jax.Array:
+        """``col`` gathered through the chain — one device gather."""
+        if not self.links:
+            return jnp.asarray(col)
+        return _gather_col(jnp.asarray(col), self.flat())
+
+
+# ---------------------------------------------------------------------------
 # Hash functions.
 # ---------------------------------------------------------------------------
 

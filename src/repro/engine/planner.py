@@ -124,6 +124,8 @@ class QueryPlanner:
                  coproc_margin: float = 1.1,
                  min_feedback_items: int = 2048,
                  replan_margin: float = 0.8,
+                 handoff_latency_s: float = 2e-4,
+                 handoff_bw_bytes_per_s: float = 2e9,
                  u_overrides: dict | None = None,
                  pass_planner: PassPlanner | None = None,
                  partition_device_g: DeviceSpec | None = None,
@@ -161,6 +163,15 @@ class QueryPlanner:
         # trade compiled executables for a fresh XLA compile each time the
         # scales wiggle — far more expensive than any near-tie gain.
         self.replan_margin = float(replan_margin)
+        # Host hand-off pricing: what one D2H gather + H2D re-upload of a
+        # stage intermediate costs (latency + bytes/bandwidth).  Measured
+        # on the real devices by ``calibrated``; the analytic defaults are
+        # host-platform ballparks.  The join-order optimizer adds this
+        # term per host-materialized stage hand-off and ~0 for the fused
+        # device-resident hand-off, which is what lets it prefer orders
+        # keeping the large intermediate resident.
+        self.handoff_latency_s = float(handoff_latency_s)
+        self.handoff_bw_bytes_per_s = float(handoff_bw_bytes_per_s)
         self.u_overrides = dict(u_overrides or {})
         self.pass_planner = pass_planner or default_planner(device_c)
         # None -> the G-group mirrors the planner's (calibrated) C costs;
@@ -195,9 +206,50 @@ class QueryPlanner:
                            "num_buckets": nb},
             {"rid": probe.rid, "key": probe.key}, cp.c, cp.g, reps=reps))
         part_u = calibrate_partition_unit_costs(cp.c, n, reps=reps)
+        lat, bw = cls._measure_handoff(cp)
+        kw.setdefault("handoff_latency_s", lat)
+        kw.setdefault("handoff_bw_bytes_per_s", bw)
         return cls(u_overrides=u,
                    pass_planner=PassPlanner.from_measurements(part_u),
                    partition_device_g=None, **kw)
+
+    @staticmethod
+    def _measure_handoff(cp, reps: int = 3) -> tuple[float, float]:
+        """Measured H2D/D2H unit cost of a host stage hand-off.
+
+        Times a device_put + device_get round trip at two sizes: the small
+        buffer isolates the per-transfer latency, the large one the
+        bandwidth (both directions count — a host hand-off pays a gather
+        down and an upload back).
+        """
+        import time as _time
+
+        import jax as _jax
+        import numpy as _np
+
+        def round_trip(n):
+            buf = _np.zeros(n, _np.int32)
+            ts = []
+            for _ in range(reps + 1):   # first rep warms allocation paths
+                t0 = _time.perf_counter()
+                dev = _jax.device_put(buf, cp.g.devices[0])
+                _jax.block_until_ready(dev)
+                _np.asarray(_jax.device_get(dev))
+                ts.append(_time.perf_counter() - t0)
+            return float(_np.median(ts[1:]))
+
+        small, large = 256, 1 << 18                    # 1 KiB vs 1 MiB
+        t_small = round_trip(small)
+        t_large = round_trip(large)
+        lat = max(1e-6, t_small)
+        bw = (2 * 4 * (large - small)) / max(t_large - t_small, 1e-9)
+        return lat, max(bw, 1e8)
+
+    def host_handoff_s(self, nbytes: int) -> float:
+        """Cost of one host-materialized stage hand-off of ``nbytes``."""
+        if nbytes <= 0:
+            return 0.0
+        return self.handoff_latency_s + nbytes / self.handoff_bw_bytes_per_s
 
     # -- model construction --------------------------------------------------
     def table_rand_scale(self, build_n: int) -> float:

@@ -60,10 +60,13 @@ class GroupByQuery:
     """
 
     keys: object                  # Relation: key = group key, rid = row id
-    values: object                # (n,) int32 value column
+    values: object                # (n,) int32 value column (host or device)
     tag: str = "groupby"
     query_id: int = -1
     priority: int = 0
+    # Legacy int32-wrapping sum accumulator (oracle-parity tests); the
+    # default accumulates wide (exact int64 sums).
+    wrap32: bool = False
 
 
 @dataclasses.dataclass
@@ -79,6 +82,13 @@ class QueryOutcome:
     partition_cache_hit: bool = False
     priority: int = 0
     probe_partition_cache_hit: bool = False
+    # Host-boundary bytes the *caller* moved to hand this query its inputs
+    # and consume its outputs (H2D + D2H for query intermediates).  The
+    # query-pipeline executor fills this in per stage: ~0 on the fused
+    # device-resident path, the full gather/re-upload volume on the
+    # host-materialize path.  Engine-internal movement (group splits,
+    # concats) is tracked separately by Timing.transfer_bytes.
+    host_bytes_moved: int = 0
 
     def to_dict(self) -> dict:
         """Everything a bench rollup needs to segment latency by plan type
@@ -101,6 +111,7 @@ class QueryOutcome:
                 "est_s": self.plan.est_s,
                 "queued_s": self.queued_s, "wall_s": self.wall_s,
                 "matches": matches,
+                "host_bytes_moved": int(self.host_bytes_moved),
                 "timing": self.timing.to_dict()}
 
 
@@ -238,6 +249,15 @@ class JoinQueryService:
         self.rejected = 0
         self.completed = 0
         self.failed = 0
+        # H2D + D2H bytes callers moved for query intermediates (the
+        # pipeline executor reports its stage hand-offs here; ~0 when the
+        # fused device-resident path is in effect).
+        self.host_bytes_moved = 0
+
+    def note_host_bytes(self, nbytes: int) -> None:
+        """Record caller-side host-boundary traffic for intermediates."""
+        with self._lock:
+            self.host_bytes_moved += int(nbytes)
 
     def _fingerprint(self, rel, num_buckets: int) -> str:
         memo_key = (id(rel.rid), id(rel.key), num_buckets)
@@ -419,7 +439,7 @@ class JoinQueryService:
             result, timing = groupby_coprocessed(
                 self.cp, q.keys, q.values, schedule=plan.schedule,
                 partition_ratio=plan.partition_ratio,
-                agg_ratio=plan.join_ratio)
+                agg_ratio=plan.join_ratio, wrap32=q.wrap32)
         finally:
             for lock in reversed(held):
                 lock.release()
@@ -511,8 +531,11 @@ class JoinQueryService:
         must return the stage's ``JoinQuery`` (its inputs typically do not
         exist before its dependencies finish).  ``finalize(outcome)``, when
         given, runs before the returned handle resolves; the query-pipeline
-        executor materializes stage intermediates there so dependent
-        stages always find them.  Returns a ``wait()``-able like
+        executor publishes stage intermediates there so dependent stages
+        always find them — on the fused path those are *device handles*
+        (``StageView``: result rid vectors still resident on device), not
+        host rows, and the per-device-group locks already serialize any
+        group work the dependents dispatch.  Returns a ``wait()``-able like
         ``submit``.  Stages with disjoint dependency sets go through the
         normal admission queue concurrently — that is where independent
         subtrees of a join tree overlap on the two device groups.
@@ -586,6 +609,7 @@ class JoinQueryService:
     def stats(self) -> dict:
         with self._lock:
             counters = {"admitted": self.admitted, "rejected": self.rejected,
-                        "completed": self.completed, "failed": self.failed}
+                        "completed": self.completed, "failed": self.failed,
+                        "host_bytes_moved": self.host_bytes_moved}
         return {**counters, "cache": self.cache.stats(),
                 "planner": self.planner.stats()}

@@ -1,2 +1,2 @@
 """Segmented-aggregation kernels (hash group-by's inner loop)."""
-from .ops import segmented_aggregate  # noqa: F401
+from .ops import segmented_aggregate, wide_sums_to_int64  # noqa: F401

@@ -14,6 +14,18 @@ nothing.  The one-hot expansion is O(tile * num_slots) per tile, so this
 kernel targets the VMEM-resident per-partition working sets the planner
 produces; ``ops.py`` gates dispatch by size and falls back to the masked
 ``jax.ops.segment_*`` path otherwise.
+
+Sum width: by default sums accumulate *wide* — exact int64 semantics
+carried as several int32 channels, since the TPU VPU (and jax with x64
+disabled) has no native int64.  The value column is reinterpreted as
+uint32 and split into fixed-width bit chunks; each chunk's per-slot sum
+must fit int32, so the chunk width adapts to the (static) input size —
+8-bit chunks to ~8.4M tuples per call, 6-bit to ~34M, 4-bit to ~143M
+(``wide_chunk_bits``) — and the signed total is recovered as
+``sum_k chunk_k * 2**(bits*k) - negatives * 2**32``
+(``wide_sums_to_int64``, which infers the width from the channel
+count).  ``wrap32=True`` keeps the single wrapping-int32 accumulator —
+the legacy device semantics, still used by oracle-parity tests.
 """
 from __future__ import annotations
 
@@ -21,6 +33,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 # Plain Python ints: jnp scalars would be captured as traced constants
@@ -28,9 +41,45 @@ from jax.experimental import pallas as pl
 INT32_MAX = 2**31 - 1
 INT32_MIN = -(2**31)
 
+# Wide sums: a b-bit chunk's per-slot sum stays exact while
+# (2**b - 1) * tuples_per_slot < 2**31; narrower chunks trade more
+# channels for more headroom.  The per-call row count bounds any slot.
+WIDE_SUM_MAX_ROWS = (2**31 - 1) // 255        # 8-bit chunks
+
+
+def wide_chunk_bits(n: int) -> int:
+    """Chunk width whose per-slot sums cannot overflow at ``n`` rows."""
+    for bits in (8, 6, 4):
+        if n <= (2**31 - 1) // ((1 << bits) - 1):
+            return bits
+    raise ValueError(
+        f"wide segmented sums support up to {(2**31 - 1) // 15} tuples "
+        f"per call (got {n}); split the input or pass wrap32=True")
+
+
+def _num_chunks(bits: int) -> int:
+    return -(-32 // bits)
+
+
+def wide_sums_to_int64(sm: np.ndarray) -> np.ndarray:
+    """Fold the (chunks+1, slots) wide-sum channels into exact int64 sums.
+
+    Leading channels are per-slot sums of the value's uint32 bit chunks
+    (width inferred from the channel count), the last channel counts
+    negative values (each negative's uint32 image is its value + 2**32,
+    so the signed total subtracts that bias back out).
+    """
+    sm = np.asarray(sm).astype(np.int64)
+    chunks = sm.shape[0] - 1
+    bits = {4: 8, 6: 6, 8: 4}[chunks]
+    total = np.zeros(sm.shape[1], np.int64)
+    for k in range(chunks):
+        total += sm[k] << (bits * k)
+    return total - (sm[chunks] << 32)
+
 
 def _seg_agg_kernel(gid_ref, val_ref, cnt_ref, sum_ref, mn_ref, mx_ref, *,
-                    num_slots: int):
+                    num_slots: int, wrap32: bool, chunk_bits: int = 8):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -46,7 +95,17 @@ def _seg_agg_kernel(gid_ref, val_ref, cnt_ref, sum_ref, mn_ref, mx_ref, *,
                                          dtype=jnp.int32)[None, :])
     oh32 = onehot.astype(jnp.int32)                        # (tile, S)
     cnt_ref[...] += oh32.sum(axis=0)[None, :]
-    sum_ref[...] += (val[:, None] * oh32).sum(axis=0)[None, :]
+    if wrap32:
+        sum_ref[...] += (val[:, None] * oh32).sum(axis=0)[None, :]
+    else:
+        u = val.astype(jnp.uint32)
+        chunks = _num_chunks(chunk_bits)
+        for k in range(chunks):
+            chunk = ((u >> jnp.uint32(chunk_bits * k))
+                     & jnp.uint32((1 << chunk_bits) - 1)).astype(jnp.int32)
+            sum_ref[k, :] += (chunk[:, None] * oh32).sum(axis=0)
+        neg = (val < 0).astype(jnp.int32)
+        sum_ref[chunks, :] += (neg[:, None] * oh32).sum(axis=0)
     mn_ref[...] = jnp.minimum(
         mn_ref[...],
         jnp.where(onehot, val[:, None], INT32_MAX).min(axis=0)[None, :])
@@ -56,30 +115,42 @@ def _seg_agg_kernel(gid_ref, val_ref, cnt_ref, sum_ref, mn_ref, mx_ref, *,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("num_slots", "block_rows", "interpret"))
+                   static_argnames=("num_slots", "block_rows", "interpret",
+                                    "wrap32"))
 def seg_agg_pallas(gid: jax.Array, val: jax.Array, *, num_slots: int,
-                   block_rows: int = 8, interpret: bool = False):
+                   block_rows: int = 8, interpret: bool = False,
+                   wrap32: bool = False):
     """gid/val: (n,) int32, n % (block_rows*128) == 0; gid in [-1, num_slots).
 
-    Returns ``(count, sum, min, max)``, each ``(num_slots,)`` int32.  Empty
-    slots report count 0, sum 0, min INT32_MAX, max INT32_MIN (neutral
-    elements); sums wrap in int32 like the device accumulation they mirror.
+    Returns ``(count, sum, min, max)``: count/min/max are ``(num_slots,)``
+    int32; sum is ``(chunks+1, num_slots)`` wide channels by default
+    (chunk width adapted to ``n``; decode with ``wide_sums_to_int64``) or
+    ``(num_slots,)`` wrapping int32 under ``wrap32=True``.  Empty slots
+    report count 0, sum 0, min INT32_MAX, max INT32_MIN (neutral
+    elements).
     """
     n = gid.shape[0]
     lanes = 128
     rows = n // lanes
     assert rows % block_rows == 0 and n == rows * lanes, (n, block_rows)
     grid = (rows // block_rows,)
+    chunk_bits = 8 if wrap32 else wide_chunk_bits(n)
+    sum_rows = 1 if wrap32 else _num_chunks(chunk_bits) + 1
     out = pl.pallas_call(
-        functools.partial(_seg_agg_kernel, num_slots=num_slots),
+        functools.partial(_seg_agg_kernel, num_slots=num_slots,
+                          wrap32=wrap32, chunk_bits=chunk_bits),
         grid=grid,
         in_specs=[pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
                   pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))],
-        out_specs=[pl.BlockSpec((1, num_slots), lambda i: (0, 0))
-                   for _ in range(4)],
-        out_shape=[jax.ShapeDtypeStruct((1, num_slots), jnp.int32)
-                   for _ in range(4)],
+        out_specs=[pl.BlockSpec((1, num_slots), lambda i: (0, 0)),
+                   pl.BlockSpec((sum_rows, num_slots), lambda i: (0, 0)),
+                   pl.BlockSpec((1, num_slots), lambda i: (0, 0)),
+                   pl.BlockSpec((1, num_slots), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, num_slots), jnp.int32),
+                   jax.ShapeDtypeStruct((sum_rows, num_slots), jnp.int32),
+                   jax.ShapeDtypeStruct((1, num_slots), jnp.int32),
+                   jax.ShapeDtypeStruct((1, num_slots), jnp.int32)],
         interpret=interpret,
     )(gid.reshape(rows, lanes), val.reshape(rows, lanes))
-    cnt, sm, mn, mx = (x[0] for x in out)
-    return cnt, sm, mn, mx
+    cnt, sm, mn, mx = out
+    return cnt[0], (sm[0] if wrap32 else sm), mn[0], mx[0]

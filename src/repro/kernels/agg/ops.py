@@ -6,8 +6,10 @@ TPU-shaped inputs, the masked ``segment_*`` jnp path elsewhere.
 """
 import jax
 
-from .agg import seg_agg_pallas
+from .agg import seg_agg_pallas, wide_chunk_bits, wide_sums_to_int64
 from .ref import seg_agg_ref
+
+__all__ = ["segmented_aggregate", "wide_sums_to_int64"]
 
 # The one-hot accumulation holds a (tile, num_slots) expansion in VMEM;
 # beyond this many slots the jnp path wins (and always off-TPU).
@@ -16,16 +18,22 @@ _AGG_VMEM_SLOTS = 1 << 14
 
 def segmented_aggregate(gid, val, *, num_slots: int,
                         use_pallas: bool | None = None,
-                        interpret: bool = False):
+                        interpret: bool = False, wrap32: bool = False):
     """Per-slot (count, sum, min, max) of ``val`` grouped by ``gid``.
 
-    ``gid == -1`` marks pad tuples (contribute nothing).  Sums wrap in
-    int32; empty slots report (0, 0, INT32_MAX, INT32_MIN).
+    ``gid == -1`` marks pad tuples (contribute nothing).  Sums are wide by
+    default — a (chunks+1, num_slots) int32 chunk layout with exact int64
+    semantics, chunk width adapted to the input size (to ~143M rows per
+    call) and decoded by ``wide_sums_to_int64`` — or a single wrapping
+    int32 vector under ``wrap32=True`` (legacy accumulator, kept for
+    oracle parity).  Empty slots report (0, 0, INT32_MAX, INT32_MIN).
     """
+    if not wrap32:
+        wide_chunk_bits(gid.shape[0])    # raise early past the hard cap
     if use_pallas is None:
         use_pallas = (jax.default_backend() == "tpu"
                       and num_slots <= _AGG_VMEM_SLOTS)
     if (use_pallas or interpret) and gid.shape[0] % 1024 == 0:
         return seg_agg_pallas(gid, val, num_slots=num_slots,
-                              interpret=interpret)
-    return seg_agg_ref(gid, val, num_slots=num_slots)
+                              interpret=interpret, wrap32=wrap32)
+    return seg_agg_ref(gid, val, num_slots=num_slots, wrap32=wrap32)

@@ -1,22 +1,42 @@
 """Pure-jnp oracle for the segmented-aggregation kernel."""
 import jax.numpy as jnp
 
-from .agg import INT32_MAX, INT32_MIN
+from .agg import INT32_MAX, INT32_MIN, _num_chunks, wide_chunk_bits
 
 
-def seg_agg_ref(gid, val, *, num_slots: int):
+def seg_agg_ref(gid, val, *, num_slots: int, wrap32: bool = False):
     """(count, sum, min, max) per slot; ``gid == -1`` tuples are ignored.
 
     Invalid tuples are redirected to slot 0 with neutral contributions
     (0 for count/sum, INT32_MAX/MIN for min/max), so every slot they touch
     is unchanged — identical semantics to the kernel's no-match one-hot.
+
+    ``wrap32=False`` (the default) returns the kernel's wide-sum layout —
+    ``(chunks+1, num_slots)`` int32 bit-chunk channels (width adapted to
+    the input size), exact int64 semantics once decoded with
+    ``wide_sums_to_int64`` — built from one int32 ``segment_sum`` pass
+    per channel (jax with x64 disabled has no int64 path, so the
+    fallback widens exactly the way the kernel does).  ``wrap32=True``
+    keeps the single wrapping-int32 sum.
     """
     import jax
     valid = gid >= 0
     g = jnp.where(valid, gid, 0)
     ones = valid.astype(jnp.int32)
     cnt = jax.ops.segment_sum(ones, g, num_segments=num_slots)
-    sm = jax.ops.segment_sum(val * ones, g, num_segments=num_slots)
+    if wrap32:
+        sm = jax.ops.segment_sum(val * ones, g, num_segments=num_slots)
+    else:
+        bits = wide_chunk_bits(gid.shape[0])
+        u = val.astype(jnp.uint32)
+        chunks = [jax.ops.segment_sum(
+            (((u >> jnp.uint32(bits * k))
+              & jnp.uint32((1 << bits) - 1)).astype(jnp.int32)
+             * ones), g, num_segments=num_slots)
+            for k in range(_num_chunks(bits))]
+        neg = jax.ops.segment_sum((val < 0).astype(jnp.int32) * ones, g,
+                                  num_segments=num_slots)
+        sm = jnp.stack(chunks + [neg]).astype(jnp.int32)
     mn = jax.ops.segment_min(jnp.where(valid, val, INT32_MAX), g,
                              num_segments=num_slots)
     mx = jax.ops.segment_max(jnp.where(valid, val, INT32_MIN), g,

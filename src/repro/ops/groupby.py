@@ -27,8 +27,12 @@ applied to aggregation (local/global two-phase aggregation; the merge is
 O(groups), cheap whenever groups ≪ tuples).  The planner prices all three
 against the partitioned DD split.
 
-Semantics: sums (and avg numerators) wrap in int32 on the device path; the
-NumPy oracle (``groupby_ref``) reproduces that exactly.
+Semantics: sums (and avg numerators) accumulate *wide* by default — exact
+int64, carried through the device path as the segmented-agg kernel's
+five-channel int32 layout since TPUs (and jax with x64 disabled) have no
+native int64 — so large-value workloads no longer silently wrap.
+``wrap32=True`` restores the legacy wrapping-int32 accumulator; the NumPy
+oracle (``groupby_ref``) reproduces either mode exactly.
 """
 from __future__ import annotations
 
@@ -43,7 +47,7 @@ import numpy as np
 from repro.core.coprocess import CoProcessor, Timing, _round_up
 from repro.core.hash_table import INVALID
 from repro.core.relation import Relation, radix_of
-from repro.kernels.agg import segmented_aggregate
+from repro.kernels.agg import segmented_aggregate, wide_sums_to_int64
 
 # Pad sentinel for group-key relations: never collides with the join-side
 # sentinels (-2/-3) or the executor fill keys (-6/-7); pads carry
@@ -60,7 +64,7 @@ class GroupByResult:
 
     keys: np.ndarray       # (g,) int32 distinct group keys
     counts: np.ndarray     # (g,) int32 tuples per group
-    sums: np.ndarray       # (g,) int32 value sums (int32 wrap)
+    sums: np.ndarray       # (g,) int64 exact sums (int32 wrap under wrap32)
     mins: np.ndarray       # (g,) int32
     maxs: np.ndarray       # (g,) int32
 
@@ -75,20 +79,25 @@ class GroupByResult:
                              self.mins[o], self.maxs[o])
 
     def avgs(self) -> np.ndarray:
-        """float64 means from the (wrapped) sums — matches the oracle."""
+        """float64 means from the sums (exact by default, wrapped under
+        ``wrap32``) — matches the oracle's mode."""
         return self.sums.astype(np.float64) / np.maximum(self.counts, 1)
 
 
-@partial(jax.jit, static_argnames=("num_slots", "use_pallas", "interpret"))
+@partial(jax.jit, static_argnames=("num_slots", "use_pallas", "interpret",
+                                   "wrap32"))
 def grouped_agg(rel: Relation, values: jax.Array, *, num_slots: int,
-                use_pallas: bool | None = None, interpret: bool = False):
+                use_pallas: bool | None = None, interpret: bool = False,
+                wrap32: bool = False):
     """One group's aggregation: sort by key, flag boundaries, reduce.
 
     ``values[i]`` belongs to tuple ``i`` of ``rel``; pad tuples are marked
     by ``rid == INVALID`` and contribute nothing.  Returns padded
     ``(ukeys, count, sum, min, max, num_groups)`` — slot ``g`` holds the
     ``g``-th distinct key in (uint32) sorted order; slots past
-    ``num_groups`` report count 0.
+    ``num_groups`` report count 0.  ``sum`` is the kernel's (5, slots)
+    wide-channel layout by default (``wide_sums_to_int64`` decodes) or a
+    wrapping int32 vector under ``wrap32=True``.
     """
     n = rel.key.shape[0]
     order = jnp.argsort(rel.key.astype(jnp.uint32), stable=True)
@@ -103,13 +112,24 @@ def grouped_agg(rel: Relation, values: jax.Array, *, num_slots: int,
                      jnp.int32).at[jnp.clip(gid, 0, num_slots - 1)].set(skey)
     cnt, sm, mn, mx = segmented_aggregate(
         jnp.where(valid, gid, -1), svals, num_slots=num_slots,
-        use_pallas=use_pallas, interpret=interpret)
+        use_pallas=use_pallas, interpret=interpret, wrap32=wrap32)
     num_groups = (first & valid).astype(jnp.int32).sum()
     return ukeys, cnt, sm, mn, mx, num_groups
 
 
-def _gather_values(values: np.ndarray, rid: np.ndarray) -> np.ndarray:
-    """values[rid] with pad rows (rid == -1) mapped to 0."""
+def _gather_values(values, rid) -> np.ndarray:
+    """values[rid] with pad rows (rid == -1) mapped to 0.
+
+    ``values`` may be a device array (the query pipeline's fused hand-off
+    passes the sink's value column device-resident): the gather then runs
+    on device instead of forcing a host round trip.
+    """
+    if isinstance(values, jax.Array):
+        r = jnp.asarray(rid)
+        safe = jnp.clip(r, 0, max(values.shape[0] - 1, 0))
+        out = (jnp.take(values, safe, axis=0) if values.shape[0]
+               else jnp.zeros_like(r))
+        return jnp.where(r >= 0, out, 0).astype(jnp.int32)
     r = np.asarray(rid)
     safe = np.clip(r, 0, max(values.shape[0] - 1, 0))
     out = values[safe] if values.shape[0] else np.zeros_like(r)
@@ -119,9 +139,10 @@ def _gather_values(values: np.ndarray, rid: np.ndarray) -> np.ndarray:
 def _merge_partials(a: GroupByResult, b: GroupByResult) -> GroupByResult:
     """Global aggregation of two partial group lists (separate + merge).
 
-    Row-split partials may share keys; counts/sums add (sums in int32
-    modular arithmetic, associative with the per-group wrap), mins/maxs
-    fold.  O(total partial groups) on the host.
+    Row-split partials may share keys; counts/sums add (wide int64 sums
+    add exactly; wrap32 partials add in int32 modular arithmetic,
+    associative with the per-group wrap), mins/maxs fold.  O(total
+    partial groups) on the host.
     """
     keys = np.concatenate([a.keys, b.keys])
     uk, inv = np.unique(keys, return_inverse=True)
@@ -134,46 +155,62 @@ def _merge_partials(a: GroupByResult, b: GroupByResult) -> GroupByResult:
     np.minimum.at(mn, inv, np.concatenate([a.mins, b.mins]).astype(np.int64))
     mx = np.full(g, INT32_MIN, np.int64)
     np.maximum.at(mx, inv, np.concatenate([a.maxs, b.maxs]).astype(np.int64))
+    sum_dtype = (np.int64 if a.sums.dtype == np.int64
+                 or b.sums.dtype == np.int64 else np.int32)
     return GroupByResult(uk.astype(np.int32), cnt.astype(np.int32),
-                         sm.astype(np.int32), mn.astype(np.int32),
+                         sm.astype(sum_dtype), mn.astype(np.int32),
                          mx.astype(np.int32))
 
 
-def _collect(pieces) -> GroupByResult:
-    """Concatenate per-group device results, dropping empty slots."""
+def _collect(pieces, wrap32: bool = True) -> GroupByResult:
+    """Concatenate per-group device results, dropping empty slots.
+
+    Wide pieces carry sums as (5, slots) chunk channels; they decode to
+    exact int64 here (host side, O(groups)).
+    """
     keys, cnts, sms, mns, mxs = [], [], [], [], []
     for ukeys, cnt, sm, mn, mx, _ in pieces:
         cnt = np.asarray(cnt)
         live = cnt > 0
+        sm = np.asarray(sm)
+        sm = sm[live] if sm.ndim == 1 else wide_sums_to_int64(sm)[live]
         keys.append(np.asarray(ukeys)[live])
         cnts.append(cnt[live])
-        sms.append(np.asarray(sm)[live])
+        sms.append(sm)
         mns.append(np.asarray(mn)[live])
         mxs.append(np.asarray(mx)[live])
-    cat = lambda xs: (np.concatenate(xs) if xs
-                      else np.zeros(0, np.int32)).astype(np.int32)
-    return GroupByResult(cat(keys), cat(cnts), cat(sms), cat(mns), cat(mxs))
+    sum_dtype = np.int32 if wrap32 else np.int64
+    cat = lambda xs, dt=np.int32: (np.concatenate(xs) if xs
+                                   else np.zeros(0, dt)).astype(dt)
+    return GroupByResult(cat(keys), cat(cnts), cat(sms, sum_dtype),
+                         cat(mns), cat(mxs))
 
 
 def groupby_coprocessed(cp: CoProcessor, rel: Relation, values, *,
                         schedule: tuple[int, ...] | None = None,
                         partition_ratio: float = 1.0, agg_ratio: float = 1.0,
-                        interpret: bool = False
+                        interpret: bool = False, wrap32: bool = False
                         ) -> tuple[GroupByResult, Timing]:
     """Hash group-by of ``values`` by ``rel.key`` across the two groups.
 
     ``rel.rid`` must index rows of ``values`` (the arange gather
-    convention); rid ``INVALID`` marks pad tuples.  See module docstring
+    convention); rid ``INVALID`` marks pad tuples.  ``values`` may be a
+    host array or a device array (the fused pipeline hands the sink its
+    value column device-resident).  Sums are exact int64 unless
+    ``wrap32=True`` requests the legacy int32 wrap.  See module docstring
     for the phase structure.
     """
     from repro.core.partition import radix_partition_scheduled
 
     timing = Timing()
-    values = np.ascontiguousarray(np.asarray(values, dtype=np.int32))
+    if isinstance(values, jax.Array):
+        values = values.astype(jnp.int32)
+    else:
+        values = np.ascontiguousarray(np.asarray(values, dtype=np.int32))
     if rel.size == 0:
         timing.phase_s["partition"] = 0.0
         timing.phase_s["agg"] = 0.0
-        return _collect([]), timing
+        return _collect([], wrap32=wrap32), timing
     rel = cp.pad_relation(rel, GROUP_PAD_KEY)
     t0 = time.perf_counter()
     if schedule:
@@ -220,9 +257,9 @@ def groupby_coprocessed(cp: CoProcessor, rel: Relation, values, *,
             if cp.discrete:
                 cp._bus_delay(len(idx) * 8 // 2, timing)
             vals = _gather_values(values, rid)
-            f = grp.jit(("gb_agg", m, interpret),
+            f = grp.jit(("gb_agg", m, interpret, wrap32),
                         partial(grouped_agg, num_slots=m,
-                                interpret=interpret))
+                                interpret=interpret, wrap32=wrap32))
             outs.append(f(grp.put_items(Relation(jnp.asarray(rid),
                                                  jnp.asarray(key))),
                           grp.put_items(jnp.asarray(vals))))
@@ -240,9 +277,9 @@ def groupby_coprocessed(cp: CoProcessor, rel: Relation, values, *,
             vals = _gather_values(values, np.asarray(rel.rid))
             outs = []
             for grp, lo, hi in ((cp.c, 0, cut), (cp.g, cut, n)):
-                f = grp.jit(("gb_agg", hi - lo, interpret),
+                f = grp.jit(("gb_agg", hi - lo, interpret, wrap32),
                             partial(grouped_agg, num_slots=hi - lo,
-                                    interpret=interpret))
+                                    interpret=interpret, wrap32=wrap32))
                 outs.append(f(grp.put_items(rel.take(lo, hi)),
                               grp.put_items(jnp.asarray(vals[lo:hi]))))
         else:
@@ -250,17 +287,18 @@ def groupby_coprocessed(cp: CoProcessor, rel: Relation, values, *,
             if cp.discrete and grp is cp.g:
                 cp._bus_delay(n * 8, timing)
             vals = _gather_values(values, np.asarray(rel.rid))
-            f = grp.jit(("gb_agg", n, interpret),
+            f = grp.jit(("gb_agg", n, interpret, wrap32),
                         partial(grouped_agg, num_slots=n,
-                                interpret=interpret))
+                                interpret=interpret, wrap32=wrap32))
             outs = [f(grp.put_items(rel), grp.put_items(jnp.asarray(vals)))]
     outs = [jax.tree.map(jax.device_get, o) for o in outs]
     if not schedule and len(outs) == 2:
         tm = time.perf_counter()
-        result = _merge_partials(_collect(outs[:1]), _collect(outs[1:]))
+        result = _merge_partials(_collect(outs[:1], wrap32=wrap32),
+                                 _collect(outs[1:], wrap32=wrap32))
         timing.merge_s = time.perf_counter() - tm
     else:
-        result = _collect(outs)
+        result = _collect(outs, wrap32=wrap32)
     t2 = time.perf_counter()
     timing.phase_s["agg"] = t2 - t1
     timing.wall_s = t2 - t0
@@ -272,8 +310,12 @@ def groupby_coprocessed(cp: CoProcessor, rel: Relation, values, *,
 # NumPy oracle (testing/verification only).
 # ---------------------------------------------------------------------------
 
-def groupby_ref(keys, values) -> GroupByResult:
-    """Exact group-by oracle: key-sorted groups, int32-wrap sums."""
+def groupby_ref(keys, values, *, wrap32: bool = False) -> GroupByResult:
+    """Exact group-by oracle: key-sorted groups.
+
+    Sums are exact int64 by default; ``wrap32=True`` reproduces the legacy
+    int32-wrapping device accumulator exactly.
+    """
     keys = np.asarray(keys)
     values = np.asarray(values, dtype=np.int64)
     uk, inv = np.unique(keys, return_inverse=True)
@@ -285,8 +327,8 @@ def groupby_ref(keys, values) -> GroupByResult:
     np.minimum.at(mn, inv, values)
     mx = np.full(g, INT32_MIN, np.int64)
     np.maximum.at(mx, inv, values)
-    # int32 wrap on the sum matches the device accumulator exactly.
-    return GroupByResult(uk.astype(np.int32), cnt, sm.astype(np.int32),
+    return GroupByResult(uk.astype(np.int32), cnt,
+                         sm.astype(np.int32) if wrap32 else sm,
                          mn.astype(np.int32), mx.astype(np.int32))
 
 

@@ -3,9 +3,11 @@
 The paper frames hash joins as the core of query co-processing; this
 package adds the query half: a declarative multi-join IR (``plan``), a
 cost-model join-order optimizer that prices each candidate stage through
-the engine's ``QueryPlanner`` (``optimize``), and a pipelined executor
-that streams the stages through ``JoinQueryService`` with dependency-aware
-admission, intermediate materialization, and build-side cache reuse
+the engine's ``QueryPlanner`` — including a transfer-cost term per stage
+hand-off (``optimize``) — and a pipelined executor that streams the
+stages through ``JoinQueryService`` with dependency-aware admission,
+device-resident stage hand-off (``StageView`` rid-chains; the
+host-materialize path remains as a baseline), and build-side cache reuse
 (``executor``).
 
   * ``Table`` / ``Filter`` / ``Join`` / ``Query``      — logical plan IR
@@ -14,7 +16,7 @@ admission, intermediate materialization, and build-side cache reuse
   * ``make_star_query`` / ``make_chain_query``          — query generators
   * ``reference_execute`` / ``rows_array``              — NumPy oracle
 """
-from .executor import PipelineExecutor, PipelineResult
+from .executor import PipelineExecutor, PipelineResult, StageView
 from .optimize import JoinOrderOptimizer, PhysicalPlan, PipelineStage
 from .plan import (JOIN_KINDS, NULL_VALUE, Filter, Join, Query, Table,
                    agg_output_name, apply_aggregate, apply_group_by,

@@ -4,11 +4,23 @@ Each ``PipelineStage`` becomes one ``JoinQuery`` submitted through
 ``JoinQueryService.submit_deferred``: a stage waits only on the stages
 whose outputs it consumes, so independent subtrees of a bushy plan sit in
 the admission queue together and overlap on the two device groups exactly
-like unrelated queries do (C-only/G-only concurrency).  Between stages the
-match indices are materialized into qualified payload columns with the
-``rid = arange(n)`` gather convention (Ozawa et al.'s point that
-pipelining intermediates between operators, not re-scanning, is the
-dominant win).
+like unrelated queries do (C-only/G-only concurrency).
+
+Stage hand-off is **device-resident** by default (``handoff="device"``):
+a stage's output is a lazy ``StageView`` — the join result's probe/build
+rid vectors, still on device, plus back-pointers to the source views —
+generalizing the fused-scan composition from base-table filters to *all*
+intermediates.  A downstream stage's key (and, at the very end, payload)
+gathers compose rid chains (``take(take(col, rid1), rid2)``) jitted on
+device via ``core.relation.IndexChain``, so a 3-join star moves zero
+intermediate column data through the host: only the exact-cardinality
+match counts (and O(1) validation scalars) cross, because capacities must
+be planned host-side.  The paper's core lesson applied between operators
+— intermediates stop crossing the slow boundary (Ozawa et al.'s
+data-path fusion).  ``handoff="host"`` keeps the legacy materialize path
+(every stage gathers its qualified columns to NumPy and re-uploads the
+next stage's inputs) as a measurable baseline; either path reports the
+bytes it moved through ``host_bytes_moved``.
 
 Scan fusion: filtered base tables are NOT materialized before their first
 join.  A ``_ScanView`` computes the filter's surviving row index once and
@@ -17,32 +29,38 @@ key column, or the stage output's payload gather — so a 2%-selective
 dimension never copies its full column set through the mask on the host.
 
 Join variants ride the same pipeline: a semi/anti stage builds on its
-filter table and emits only probe-side rows; a left-outer stage NULL-fills
-(``NULL_VALUE``) the build columns of unmatched rows.  A ``group_by``
-query ends in one more engine submission — a ``GroupByQuery`` through the
-same admission queue — whose result becomes the pipeline's output rows.
+filter table and emits only probe-side rows — the flag path is gather-free
+and its rid vector composes directly into downstream chains; a left-outer
+stage NULL-fills (``NULL_VALUE``) the build columns of unmatched rows,
+carried as a device NULL mask that composes through later gathers.  A
+``group_by`` query ends in one more engine submission — a ``GroupByQuery``
+through the same admission queue — whose key/value inputs the fused path
+hands over as device arrays (the sink consumes the view).
 
 Reuse falls out of the engine untouched: a stage's build side is
 fingerprinted like any other query, so a dimension table shared by many
 queries hits the build-table cache (SHJ) or the partition-layout caches
 (PHJ, both sides) after its first use.
 
-Capacity planning: a stage's result buffer is sized from an exact
-host-side match count (two ``searchsorted`` passes over the build keys) —
-estimates drive *ordering*, but capacities must never truncate.  Deeper
-stages get higher admission priority so in-flight pipelines drain before
-fresh root stages are admitted.
+Capacity planning: a stage's result buffer is sized from an exact match
+count (two ``searchsorted`` passes over the build keys — on device for
+the fused path, host-side NumPy for the materialize path); estimates
+drive *ordering*, but capacities must never truncate.  Deeper stages get
+higher admission priority so in-flight pipelines drain before fresh root
+stages are admitted.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.relation import Relation, next_pow2
+from repro.core.relation import IndexChain, Relation, next_pow2
 from repro.engine.service import GroupByQuery, JoinQuery, JoinQueryService
 
 from .optimize import JoinOrderOptimizer, PhysicalPlan
@@ -56,6 +74,8 @@ BUILD_FILL_KEY = -6
 PROBE_FILL_KEY = -7
 MIN_STAGE_ROWS = 64
 
+HANDOFF_MODES = ("device", "host")
+
 
 class _ScanView:
     """Lazy filtered scan of a base table (fused filter pushdown).
@@ -63,7 +83,9 @@ class _ScanView:
     Holds the raw columns plus the surviving row index; columns are
     gathered on demand, and ``take`` composes the scan index with a
     consumer's row selection so the filtered table is never materialized
-    as a whole intermediate.
+    as a whole intermediate.  ``raw_chain``/``col_dev`` are the
+    device-resident face of the same idea: the scan index becomes the
+    root link of a downstream ``IndexChain``.
     """
 
     def __init__(self, table):
@@ -71,6 +93,8 @@ class _ScanView:
         self._cols = table.columns          # raw, unfiltered
         self._idx = table.scan_indices()    # None = no filters
         self._memo: dict = {}
+        self._dev_memo: dict = {}
+        self._chain: IndexChain | None = None
 
     @property
     def n(self) -> int:
@@ -90,6 +114,29 @@ class _ScanView:
             raw = self._raw(q)
             self._memo[q] = raw if self._idx is None else raw[self._idx]
         return self._memo[q]
+
+    # -- device-resident protocol -------------------------------------------
+    def raw_chain(self, q: str):
+        """(raw host column, IndexChain into it, NULL mask) for ``q``.
+
+        Base tables have no NULL mask; the chain is the scan index (or
+        the identity when unfiltered).  The chain object is cached either
+        way: downstream ``StageView._extend`` shares extensions per
+        source-chain identity, so every column of this table must see the
+        same object.
+        """
+        if self._chain is None:
+            self._chain = (IndexChain() if self._idx is None else
+                           IndexChain((jnp.asarray(self._idx,
+                                                   dtype=jnp.int32),)))
+        return self._raw(q), self._chain, None
+
+    def col_dev(self, q: str) -> jax.Array:
+        """One filtered column as a device array (memoized)."""
+        if q not in self._dev_memo:
+            raw, chain, _ = self.raw_chain(q)
+            self._dev_memo[q] = chain.gather(raw)
+        return self._dev_memo[q]
 
     def take(self, rows: np.ndarray) -> dict:
         """All columns at the given (filtered-space) row positions.
@@ -112,16 +159,168 @@ class _ScanView:
                else np.arange(self.n))
         self._idx = cur[keep]
         self._memo.clear()
+        self._dev_memo.clear()
+        self._chain = None
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _match_stats_jit(bkey: jax.Array, pkey: jax.Array, kind: str):
+    """Exact stage output cardinality, computed on device (two
+    searchsorted passes over the sorted build keys — the fused analogue
+    of the host-side NumPy count).  Only the build side is sorted —
+    ``method="scan"`` is a vectorized binary search, O(log b) gathers
+    over the probe column; the sort-based method would sort the large
+    probe side and lose to the host path at scale."""
+    bk = jnp.sort(bkey)
+    lo = jnp.searchsorted(bk, pkey, side="left", method="scan")
+    hi = jnp.searchsorted(bk, pkey, side="right", method="scan")
+    counts = hi - lo
+    if kind == "semi":
+        return (counts > 0).sum()
+    if kind == "anti":
+        return (counts == 0).sum()
+    if kind == "left_outer":
+        return jnp.maximum(counts, 1).sum()
+    return counts.sum()
+
+
+@jax.jit
+def _gather_mask(mask: jax.Array, idx: jax.Array) -> jax.Array:
+    return jnp.take(mask, idx, axis=0)
+
+
+@jax.jit
+def _null_fill(col: jax.Array, mask: jax.Array) -> jax.Array:
+    return jnp.where(mask, jnp.int32(NULL_VALUE), col)
+
+
+class StageView:
+    """Device-resident view of one join stage's output.
+
+    Holds the engine's match-index vectors (``probe_rid``/``build_rid``,
+    sliced to the valid count but still on device) plus back-pointers to
+    the stage's input views.  Column access composes the source's index
+    chain with the match vector — nothing is gathered until a key column
+    is needed for the next stage, and payload columns are only gathered
+    once, at final materialization, each via a single flattened-chain
+    device gather.  Left-outer NULLs ride along as a device mask that
+    composes through downstream gathers the same way.
+    """
+
+    def __init__(self, kind: str, psrc, bsrc, probe_rid, build_rid,
+                 count: int):
+        self.kind = kind
+        self._psrc, self._bsrc = psrc, bsrc
+        self._pr = probe_rid
+        self._br = build_rid
+        self.n = int(count)
+        self._pset = set(psrc.names())
+        self._rc_memo: dict = {}
+        self._col_memo: dict = {}
+        self._ext_memo: dict = {}
+
+    def names(self):
+        names = list(self._psrc.names())
+        if self.kind not in ("semi", "anti"):
+            names += self._bsrc.names()
+        return names
+
+    def _extend(self, chain: IndexChain, rid, tag: str) -> IndexChain:
+        """Chain extension memoized per (source chain, side): columns of
+        one table share the flattened index instead of re-folding it."""
+        key = (id(chain), tag)
+        ext = self._ext_memo.get(key)
+        if ext is None:
+            ext = chain.extend(rid)
+            self._ext_memo[key] = (chain, ext)   # hold chain: id stability
+        else:
+            ext = ext[1]
+        return ext
+
+    def raw_chain(self, q: str):
+        """(raw host column, IndexChain, NULL mask) — the composable form
+        downstream stages extend (memoized per column)."""
+        hit = self._rc_memo.get(q)
+        if hit is not None:
+            return hit
+        if q in self._pset:
+            raw, chain, mask = self._psrc.raw_chain(q)
+            chain = self._extend(chain, self._pr, "p")
+            if mask is not None:
+                mask = _gather_mask(mask, self._pr)
+            out = (raw, chain, mask)
+        elif self.kind == "left_outer":
+            if self._bsrc.n == 0:
+                # Filtered-to-nothing build side: every row is NULL; the
+                # chain gathers a 1-row zero stand-in nobody reads.
+                out = (np.zeros(1, np.int32),
+                       IndexChain((jnp.zeros(self.n, jnp.int32),)),
+                       jnp.ones(self.n, bool))
+            else:
+                raw, chain, mask = self._bsrc.raw_chain(q)
+                matched = self._br >= 0
+                chain = self._extend(chain, jnp.maximum(self._br, 0), "b")
+                null = ~matched
+                if mask is not None:
+                    null = null | _gather_mask(mask,
+                                               jnp.maximum(self._br, 0))
+                out = (raw, chain, null)
+        else:
+            raw, chain, mask = self._bsrc.raw_chain(q)
+            chain = self._extend(chain, self._br, "b")
+            if mask is not None:
+                mask = _gather_mask(mask, self._br)
+            out = (raw, chain, mask)
+        self._rc_memo[q] = out
+        return out
+
+    def col_dev(self, q: str) -> jax.Array:
+        """One output column as a device array (memoized): a single
+        flattened-chain gather, NULL-masked when an outer edge applies."""
+        if q not in self._col_memo:
+            raw, chain, mask = self.raw_chain(q)
+            col = chain.gather(raw)
+            if mask is not None:
+                col = _null_fill(col, mask)
+            self._col_memo[q] = col
+        return self._col_memo[q]
+
+    def materialize(self) -> dict:
+        """Host columns — final result delivery only (one D2H per
+        column; intermediates never take this path on the fused route)."""
+        return {q: np.asarray(self.col_dev(q)) for q in self.names()}
+
+    def narrow(self, keep_idx) -> None:
+        """Restrict to the given (device) row indices — residual
+        cycle-edge filters applied to this stage's output."""
+        self._pr = jnp.take(self._pr, keep_idx, axis=0)
+        if self._br is not None:
+            self._br = jnp.take(self._br, keep_idx, axis=0)
+        self.n = int(keep_idx.shape[0])
+        self._rc_memo.clear()
+        self._col_memo.clear()
+        self._ext_memo.clear()
+
+    def apply_residual(self, left_q: str, right_q: str) -> None:
+        """Equality filter between two output columns, on device: the
+        surviving index is computed with a sized nonzero (one scalar count
+        crosses to the host, never the mask itself)."""
+        mask = self.col_dev(left_q) == self.col_dev(right_q)
+        k = int(mask.sum())
+        self.narrow(jnp.nonzero(mask, size=k)[0] if k else
+                    jnp.zeros(0, jnp.int32))
 
 
 def _src_n(src) -> int:
-    if isinstance(src, _ScanView):
+    if isinstance(src, (_ScanView, StageView)):
         return src.n
     return next(iter(src.values())).shape[0] if src else 0
 
 
 def _src_names(src) -> list:
-    return src.names() if isinstance(src, _ScanView) else list(src)
+    if isinstance(src, (_ScanView, StageView)):
+        return src.names()
+    return list(src)
 
 
 def _src_col(src, q: str) -> np.ndarray:
@@ -134,12 +333,9 @@ def _src_take(src, rows: np.ndarray) -> dict:
     return {q: v[rows] for q, v in src.items()}
 
 
-def _src_cols(src) -> dict:
-    return src.materialize() if isinstance(src, _ScanView) else src
-
-
 def _as_relation(col: np.ndarray, fill_key: int) -> Relation:
-    """A core Relation over a column, rid = row index (gather convention)."""
+    """A core Relation over a host column, rid = row index (gather
+    convention) — the host-materialize path's H2D upload."""
     n = col.shape[0]
     if n and int(col.min()) < 0:
         raise ValueError(
@@ -152,6 +348,30 @@ def _as_relation(col: np.ndarray, fill_key: int) -> Relation:
                               np.full(pad, fill_key, np.int32)])
         rid = np.concatenate([rid, np.full(pad, -1, np.int32)])
     return Relation(jnp.asarray(rid), jnp.asarray(col, dtype=jnp.int32))
+
+
+def _as_relation_dev(col: jax.Array, fill_key: int) -> Relation:
+    """Device twin of ``_as_relation``: the column never leaves the
+    device (the caller has already validated keys non-negative)."""
+    n = int(col.shape[0])
+    rid = jnp.arange(n, dtype=jnp.int32)
+    col = col.astype(jnp.int32)
+    if n < MIN_STAGE_ROWS:
+        pad = MIN_STAGE_ROWS - n
+        col = jnp.concatenate([col, jnp.full(pad, fill_key, jnp.int32)])
+        rid = jnp.concatenate([rid, jnp.full(pad, -1, jnp.int32)])
+    return Relation(rid, col)
+
+
+def _check_keys_nonneg(*keys) -> None:
+    """Negative-key validation for the fused path: only O(1) scalars
+    (the mins) cross the host boundary."""
+    for k in keys:
+        if k.shape[0] and int(k.min()) < 0:
+            raise ValueError(
+                "negative join-key values are unsupported: they collide "
+                "with the executor's fill keys and the engine's pad "
+                "sentinels")
 
 
 def _apply_residual(cols: dict, left_q: str, right_q: str) -> dict:
@@ -178,14 +398,36 @@ def _match_count(build_keys: np.ndarray, probe_keys: np.ndarray,
 
 @dataclasses.dataclass
 class PipelineResult:
-    """Outcome of one pipelined query execution."""
+    """Outcome of one pipelined query execution.
 
-    columns: dict                 # final qualified columns (NumPy)
+    ``columns`` materializes lazily: the fused path delivers the final
+    intermediate as a device view, and a count-sink query never needs the
+    payload gathered at all.  Accessing ``columns``/``rows_array`` pulls
+    it to host once (result delivery — not counted as intermediate
+    traffic).
+    """
+
     rows: int
     aggregate: object             # None | int | float
     outcomes: list                # QueryOutcome per stage (+ group-by sink)
     wall_s: float
     physical: PhysicalPlan
+    _source: object = None        # dict | _ScanView | StageView
+    _columns: dict | None = None
+
+    @property
+    def columns(self) -> dict:
+        """Final qualified columns (NumPy), materialized on first use."""
+        if self._columns is None:
+            src = self._source
+            self._columns = src if isinstance(src, dict) else \
+                src.materialize()
+        return self._columns
+
+    @property
+    def host_bytes_moved(self) -> int:
+        """Intermediate hand-off bytes across all stages (+ sink)."""
+        return sum(o.host_bytes_moved for o in self.outcomes)
 
     def rows_array(self) -> np.ndarray:
         return rows_array(self.columns)
@@ -194,16 +436,28 @@ class PipelineResult:
         return {"rows": self.rows, "aggregate": self.aggregate,
                 "wall_s": self.wall_s,
                 "est_total_s": self.physical.est_total_s,
+                "host_bytes_moved": self.host_bytes_moved,
                 "stages": [o.to_dict() for o in self.outcomes]}
 
 
 class PipelineExecutor:
-    """Runs physical plans through a (possibly shared) JoinQueryService."""
+    """Runs physical plans through a (possibly shared) JoinQueryService.
+
+    ``handoff`` selects the stage hand-off data path: ``"device"`` (the
+    fused default — intermediates stay resident as ``StageView``s) or
+    ``"host"`` (materialize every stage's qualified columns to NumPy; the
+    pre-fusion baseline the benchmark compares against).
+    """
 
     def __init__(self, service: JoinQueryService | None = None,
-                 optimizer: JoinOrderOptimizer | None = None):
+                 optimizer: JoinOrderOptimizer | None = None,
+                 handoff: str = "device"):
+        if handoff not in HANDOFF_MODES:
+            raise ValueError(f"unknown handoff mode {handoff!r}")
         self.service = service or JoinQueryService(num_workers=2)
-        self.optimizer = optimizer or JoinOrderOptimizer(self.service.planner)
+        self.optimizer = optimizer or JoinOrderOptimizer(
+            self.service.planner, handoff=handoff)
+        self.handoff = handoff
         self._qid = itertools.count(1)
 
     def close(self):
@@ -234,65 +488,144 @@ class PipelineExecutor:
         if not physical.stages:
             if len(base) != 1:
                 raise ValueError("plan has no stages but several tables")
-            cols = next(iter(base.values())).materialize()
-            return self._finish(query, physical, cols, [], t0)
+            view = next(iter(base.values()))
+            return self._finish(query, physical, view, [], t0,
+                                from_stages=False)
 
-        inter: dict[int, dict] = {}        # stage id -> qualified columns
+        inter: dict[int, object] = {}     # stage id -> cols dict | StageView
         depth: dict[int, int] = {}
         handles: dict[int, object] = {}
+        handoff_bytes: dict[int, int] = {}   # host-path H2D per stage
+        fused = self.handoff == "device"
         for stage in physical.stages:
             depth[stage.stage_id] = 1 + max(
                 [depth[d] for d in stage.deps], default=0)
-            handles[stage.stage_id] = self.service.submit_deferred(
-                self._stage_query_fn(stage, base, inter),
-                deps=[handles[d] for d in stage.deps],
-                finalize=self._stage_finalize_fn(
+            make_query = (self._stage_query_dev(stage, base, inter)
+                          if fused else
+                          self._stage_query_host(stage, base, inter,
+                                                 handoff_bytes))
+            finalize = (self._stage_finalize_dev(
+                stage, base, inter,
+                stage_residuals.get(stage.stage_id, ()))
+                if fused else
+                self._stage_finalize_host(
                     stage, base, inter,
-                    stage_residuals.get(stage.stage_id, ())),
+                    stage_residuals.get(stage.stage_id, ()),
+                    handoff_bytes))
+            handles[stage.stage_id] = self.service.submit_deferred(
+                make_query,
+                deps=[handles[d] for d in stage.deps],
+                finalize=finalize,
                 priority=depth[stage.stage_id])
         outcomes = [handles[s.stage_id]() for s in physical.stages]
         final = inter[physical.stages[-1].stage_id]
         return self._finish(query, physical, final, outcomes, t0)
 
-    def _finish(self, query, physical, cols, outcomes, t0) -> PipelineResult:
+    def _finish(self, query, physical, cols, outcomes, t0, *,
+                from_stages: bool = True) -> PipelineResult:
         """Apply the sink (group-by through the engine, or a host scalar)."""
         if query.group_by:
-            cols, sink_outcome = self._run_group_by(query, cols)
+            cols, sink_outcome = self._run_group_by(
+                query, cols, count_handoff=from_stages)
             outcomes = outcomes + [sink_outcome]
             agg = None
+            rows = next(iter(cols.values())).shape[0] if cols else 0
+            source = cols
         else:
-            agg = apply_aggregate(cols, query.aggregate)
+            agg = self._apply_scalar_sink(query, cols)
+            rows = _src_n(cols) if not isinstance(cols, dict) else (
+                next(iter(cols.values())).shape[0] if cols else 0)
+            source = cols
         wall = time.perf_counter() - t0
         return PipelineResult(
-            columns=cols,
-            rows=next(iter(cols.values())).shape[0] if cols else 0,
-            aggregate=agg, outcomes=outcomes, wall_s=wall,
-            physical=physical)
+            rows=rows, aggregate=agg, outcomes=outcomes, wall_s=wall,
+            physical=physical, _source=source)
+
+    def _apply_scalar_sink(self, query: Query, cols):
+        """Scalar aggregate without forcing full materialization: count
+        needs only the (host-side) cardinality, sum/min/max/avg gather
+        exactly one column from a device view."""
+        if query.aggregate is None:
+            return None
+        if isinstance(cols, dict):
+            return apply_aggregate(cols, query.aggregate)
+        kind = query.aggregate[0]
+        if kind == "count":
+            return cols.n
+        q = query.aggregate[1]
+        return apply_aggregate({q: np.asarray(cols.col_dev(q))
+                                if isinstance(cols, StageView)
+                                else cols.col(q)}, query.aggregate)
 
     # -- group-by sink -------------------------------------------------------
-    def _run_group_by(self, query: Query, cols: dict):
-        """One ``GroupByQuery`` through the service's admission queue."""
+    def _run_group_by(self, query: Query, cols, *,
+                      count_handoff: bool = True):
+        """One ``GroupByQuery`` through the service's admission queue.
+
+        A device view hands the sink its key/value columns as device
+        arrays (zero intermediate host bytes for single-column keys);
+        multi-column keys still pack their dictionary host-side (the
+        device-side composite-key path is an open item), which is counted
+        as hand-off traffic honestly.
+        """
         aggregate = query.aggregate or ("count",)
-        keys, decode = self._encode_group_keys(cols, query.group_by)
-        n = keys.shape[0]
-        if aggregate[0] == "count":
-            values = np.ones(n, np.int32)
+        moved = 0
+        is_view = isinstance(cols, (StageView, _ScanView))
+        if is_view and len(query.group_by) == 1:
+            q = query.group_by[0]
+            keys = cols.col_dev(q).astype(jnp.int32)
+            decode = (lambda k: {q: k.astype(np.int32)})
+            n = cols.n
+            if aggregate[0] == "count":
+                values = jnp.ones(n, jnp.int32)
+            else:
+                values = cols.col_dev(aggregate[1]).astype(jnp.int32)
+            rid = jnp.arange(n, dtype=jnp.int32)
+            if n < MIN_STAGE_ROWS:
+                pad = MIN_STAGE_ROWS - n
+                keys = jnp.concatenate([keys,
+                                        jnp.full(pad, -4, jnp.int32)])
+                rid = jnp.concatenate([rid, jnp.full(pad, -1, jnp.int32)])
+            rel = Relation(rid, keys)
         else:
-            values = np.asarray(cols[aggregate[1]], dtype=np.int32)
-        rid = np.arange(n, dtype=np.int32)
-        if n < MIN_STAGE_ROWS:                  # empty/tiny final pipelines
-            pad = MIN_STAGE_ROWS - n
-            keys = np.concatenate([keys,
-                                   np.full(pad, -4, np.int32)])
-            rid = np.concatenate([rid, np.full(pad, -1, np.int32)])
-        gq = GroupByQuery(keys=Relation(jnp.asarray(rid),
-                                        jnp.asarray(keys, dtype=jnp.int32)),
-                          values=values, tag="groupby-sink",
-                          query_id=next(self._qid))
+            if is_view:
+                # Multi-column keys: host dictionary packing needs the key
+                # columns (plus the value column) on host — counted.
+                need = set(query.group_by)
+                if aggregate[0] != "count":
+                    need.add(aggregate[1])
+                host_cols = {q: np.asarray(cols.col_dev(q))
+                             if isinstance(cols, StageView)
+                             else cols.col(q) for q in need}
+                if isinstance(cols, StageView) and count_handoff:
+                    moved += sum(v.nbytes for v in host_cols.values())
+                cols = host_cols
+            keys, decode = self._encode_group_keys(cols, query.group_by)
+            n = keys.shape[0]
+            if aggregate[0] == "count":
+                values = np.ones(n, np.int32)
+            else:
+                values = np.asarray(cols[aggregate[1]], dtype=np.int32)
+            rid = np.arange(n, dtype=np.int32)
+            if n < MIN_STAGE_ROWS:                  # empty/tiny pipelines
+                pad = MIN_STAGE_ROWS - n
+                keys = np.concatenate([keys,
+                                       np.full(pad, -4, np.int32)])
+                rid = np.concatenate([rid, np.full(pad, -1, np.int32)])
+            if count_handoff:
+                # Host hand-off into the sink: keys + rid + values H2D.
+                moved += keys.nbytes + rid.nbytes + values.nbytes
+            rel = Relation(jnp.asarray(rid),
+                           jnp.asarray(keys, dtype=jnp.int32))
+        gq = GroupByQuery(keys=rel, values=values, tag="groupby-sink",
+                          query_id=next(self._qid), wrap32=query.wrap32)
         if self.service.num_workers <= 0:
             outcome = self.service.execute(gq)
         else:
             outcome = self.service.submit(gq)()
+        outcome.host_bytes_moved += moved
+        if moved:
+            self.service.note_host_bytes(moved)
         res = outcome.result
         out = decode(res.keys)
         name = agg_output_name(aggregate)
@@ -300,12 +633,13 @@ class PipelineExecutor:
         if kind == "count":
             out[name] = res.counts.astype(np.int32)
         elif kind == "sum":
-            out[name] = res.sums.astype(np.int32)
+            out[name] = res.sums.astype(np.int32 if query.wrap32
+                                        else np.int64)
         elif kind == "min":
             out[name] = res.mins.astype(np.int32)
         elif kind == "max":
             out[name] = res.maxs.astype(np.int32)
-        else:                                   # avg: wrapped sum / count
+        else:                                   # avg: sum / count, float64
             out[name] = res.sums.astype(np.float64) / \
                 np.maximum(res.counts, 1)
         return out, outcome
@@ -353,37 +687,86 @@ class PipelineExecutor:
     def _input(self, ref, base, inter):
         return base[ref] if isinstance(ref, str) else inter[ref]
 
-    def _stage_query_fn(self, stage, base, inter):
+    def _stage_capacity(self, matches: int) -> int:
+        # Power-of-two capacity: stable across repeats of the same
+        # pipeline (compile-cache friendly) with headroom for the
+        # executor's per-group split slack.
+        return next_pow2(max(4 * MIN_STAGE_ROWS,
+                             matches + matches // 4 + 256))
+
+    # -- fused (device-resident) hand-off ------------------------------------
+    def _stage_query_dev(self, stage, base, inter):
+        def make_query(_dep_outcomes) -> JoinQuery:
+            bsrc = self._input(stage.build_input, base, inter)
+            psrc = self._input(stage.probe_input, base, inter)
+            bkey = bsrc.col_dev(stage.build_col)
+            pkey = psrc.col_dev(stage.probe_col)
+            _check_keys_nonneg(bkey, pkey)
+            matches = int(_match_stats_jit(bkey, pkey, stage.kind))
+            return JoinQuery(
+                build=_as_relation_dev(bkey, BUILD_FILL_KEY),
+                probe=_as_relation_dev(pkey, PROBE_FILL_KEY),
+                tag=f"stage{stage.stage_id}:{stage.join}",
+                max_out=self._stage_capacity(matches),
+                query_id=next(self._qid), kind=stage.kind)
+        return make_query
+
+    def _stage_finalize_dev(self, stage, base, inter, residuals=()):
+        def finalize(outcome) -> None:
+            bsrc = self._input(stage.build_input, base, inter)
+            psrc = self._input(stage.probe_input, base, inter)
+            c = int(outcome.result.count)
+            view = StageView(
+                stage.kind, psrc, bsrc,
+                outcome.result.probe_rid[:c],
+                None if stage.kind in ("semi", "anti")
+                else outcome.result.build_rid[:c], c)
+            for lq, rq in residuals:
+                view.apply_residual(lq, rq)
+            inter[stage.stage_id] = view
+            outcome.host_bytes_moved = 0     # the fused path's invariant
+        return finalize
+
+    # -- host-materialize hand-off (the pre-fusion baseline) -----------------
+    def _stage_query_host(self, stage, base, inter, handoff_bytes):
         def make_query(_dep_outcomes) -> JoinQuery:
             bsrc = self._input(stage.build_input, base, inter)
             psrc = self._input(stage.probe_input, base, inter)
             bkey = _src_col(bsrc, stage.build_col)
             pkey = _src_col(psrc, stage.probe_col)
             matches = _match_count(bkey, pkey, stage.kind)
-            # Power-of-two capacity: stable across repeats of the same
-            # pipeline (compile-cache friendly) with headroom for the
-            # executor's per-group split slack.
-            max_out = next_pow2(max(4 * MIN_STAGE_ROWS,
-                                    matches + matches // 4 + 256))
+            # H2D re-upload of intermediate-derived inputs: rid + key per
+            # side whose source is a host-materialized stage output.
+            moved = sum(
+                2 * 4 * max(k.shape[0], MIN_STAGE_ROWS)
+                for src, k in ((bsrc, bkey), (psrc, pkey))
+                if isinstance(src, dict))
+            if moved:
+                handoff_bytes[stage.stage_id] = \
+                    handoff_bytes.get(stage.stage_id, 0) + moved
+                self.service.note_host_bytes(moved)
             return JoinQuery(
                 build=_as_relation(bkey, BUILD_FILL_KEY),
                 probe=_as_relation(pkey, PROBE_FILL_KEY),
                 tag=f"stage{stage.stage_id}:{stage.join}",
-                max_out=max_out, query_id=next(self._qid),
-                kind=stage.kind)
+                max_out=self._stage_capacity(matches),
+                query_id=next(self._qid), kind=stage.kind)
         return make_query
 
-    def _stage_finalize_fn(self, stage, base, inter, residuals=()):
+    def _stage_finalize_host(self, stage, base, inter, residuals=(),
+                             handoff_bytes=None):
         def finalize(outcome) -> None:
             bsrc = self._input(stage.build_input, base, inter)
             psrc = self._input(stage.probe_input, base, inter)
             c = int(outcome.result.count)
             pr = np.asarray(outcome.result.probe_rid[:c])
-            br = np.asarray(outcome.result.build_rid[:c])
+            moved = pr.nbytes                      # D2H: match indices
             cols = _src_take(psrc, pr)
             if stage.kind in ("semi", "anti"):
                 pass          # filter table consumed: probe columns only
             elif stage.kind == "left_outer":
+                br = np.asarray(outcome.result.build_rid[:c])
+                moved += br.nbytes
                 # Unmatched rows carry NULL_VALUE on the build side.  An
                 # empty build side (filtered to nothing) has no rows to
                 # gather at all — everything is NULL.
@@ -397,10 +780,15 @@ class PipelineExecutor:
                         cols[q] = np.where(matched, v,
                                            v.dtype.type(NULL_VALUE))
             else:
+                br = np.asarray(outcome.result.build_rid[:c])
+                moved += br.nbytes
                 cols.update(_src_take(bsrc, br))
             for lq, rq in residuals:
                 cols = _apply_residual(cols, lq, rq)
             inter[stage.stage_id] = cols
+            self.service.note_host_bytes(moved)
+            outcome.host_bytes_moved = moved + \
+                (handoff_bytes or {}).get(stage.stage_id, 0)
         return finalize
 
     # -- convenience ---------------------------------------------------------

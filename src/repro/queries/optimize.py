@@ -20,6 +20,16 @@ The emitted ``PhysicalPlan`` is a DAG of ``PipelineStage``s annotated with
 the chosen scheme and algorithm; stages whose dependency sets are disjoint
 (independent subtrees) run concurrently in the executor.  The estimate is
 therefore an upper bound on wall time — pricing sums stages serially.
+
+Stage hand-off pricing: every intermediate a later stage consumes pays a
+transfer term.  Under ``handoff="host"`` (the materialize path) that is
+``QueryPlanner.host_handoff_s`` over the result's rid pairs down and the
+next stage's key relation back up — measured H2D/D2H unit cost; under
+``handoff="device"`` (the fused path) intermediates never cross the host
+and the term is ~0.  Because the term scales with the intermediate's
+cardinality, a host-mode optimizer now sees what the serial left-to-right
+sum alone could not: orders that keep the *large* intermediate off the
+host boundary price ahead.
 """
 from __future__ import annotations
 
@@ -33,6 +43,13 @@ from .plan import Join, Query
 # Result-capacity headroom over the estimated output cardinality; actual
 # capacities are re-derived from realized input sizes at execution time.
 EST_OUT_SLACK = 1.25
+
+# Bytes one host-materialized hand-off moves per intermediate row: the
+# (probe_rid, build_rid) result pair gathered down (8 B) plus the next
+# stage's (rid, key) relation uploaded back (8 B).  Payload columns are
+# gathered host-side from host-resident sources, so they cross no device
+# boundary and are not priced here.
+HOST_HANDOFF_BYTES_PER_ROW = 16
 
 
 @dataclasses.dataclass
@@ -138,10 +155,17 @@ class JoinOrderOptimizer:
     """Enumerates and prices join orders; emits the cheapest pipeline."""
 
     def __init__(self, planner: QueryPlanner | None = None, *,
-                 exhaustive_joins: int = 4):
+                 exhaustive_joins: int = 4, handoff: str = "device"):
         self.planner = planner or QueryPlanner()
         # > exhaustive_joins edges (i.e. > ~4-5 relations): greedy search.
         self.exhaustive_joins = int(exhaustive_joins)
+        # How stage intermediates reach their consumers: "device" (fused
+        # hand-off, ~free) or "host" (materialized, priced per row via
+        # the planner's measured H2D/D2H unit cost).  Match the executor's
+        # ``handoff`` mode so estimates track what will actually run.
+        if handoff not in ("device", "host"):
+            raise ValueError(f"unknown handoff mode {handoff!r}")
+        self.handoff = handoff
 
     # -- pricing one order ---------------------------------------------------
     def price_order(self, query: Query, order) -> PhysicalPlan:
@@ -266,6 +290,15 @@ class JoinOrderOptimizer:
                 if c is left or c is right:
                     comps[name] = merged
             final = merged
+        # Hand-off term: every intermediate consumed by a later stage pays
+        # its transfer cost — the measured host round trip when stages
+        # materialize, ~0 when hand-off is device-resident.
+        if self.handoff == "host":
+            consumed = {d for s in stages for d in s.deps}
+            for s in stages:
+                if s.stage_id in consumed:
+                    total += self.planner.host_handoff_s(
+                        HOST_HANDOFF_BYTES_PER_ROW * s.est_out)
         agg_plan = None
         if query.group_by:
             # The aggregation sink, priced like any other operator: the

@@ -193,15 +193,18 @@ class Query:
     ``group_by`` names qualified key columns: the sink then aggregates per
     distinct key combination (default ``("count",)`` when no aggregate is
     given) and the query's result is one row per group.  Grouped sums
-    (and the avg numerator) wrap in int32 — the device accumulator's
-    semantics, reproduced exactly by the NumPy reference; scalar sinks
-    stay int64 host-side.
+    (and the avg numerator) accumulate wide — exact int64 via the
+    segmented-agg kernel's chunked channels — unless ``wrap32=True``
+    requests the legacy int32-wrapping device accumulator (kept for
+    oracle-parity tests); the NumPy reference reproduces either mode
+    exactly.  Scalar sinks stay int64 host-side.
     """
 
     tables: dict
     joins: tuple
     aggregate: tuple | None = None
     group_by: tuple = ()
+    wrap32: bool = False
 
     def _check_column_ref(self, ref: str, what: str):
         tbl, _, col = ref.partition(".")
@@ -442,13 +445,14 @@ def agg_output_name(aggregate: tuple) -> str:
 
 
 def apply_group_by(columns: dict, group_by: tuple,
-                   aggregate: tuple | None) -> dict:
+                   aggregate: tuple | None, wrap32: bool = False) -> dict:
     """Grouped aggregation over joined rows (the oracle's sink).
 
     Returns the group-key columns plus one aggregate column (named by
-    ``agg_output_name``).  Count/sum/min/max are int32 — sums wrap exactly
-    like the device accumulator — and avg is float64 of the wrapped sum
-    over the count.
+    ``agg_output_name``).  Count/min/max are int32; sums are exact int64
+    (the wide device accumulator's semantics) unless ``wrap32=True``
+    reproduces the legacy int32 wrap; avg is float64 of the (exact or
+    wrapped) sum over the count.
     """
     aggregate = aggregate or ("count",)
     kind = aggregate[0]
@@ -464,11 +468,12 @@ def apply_group_by(columns: dict, group_by: tuple,
     vals = columns[aggregate[1]].astype(np.int64)
     sm = np.zeros(g, np.int64)
     np.add.at(sm, inv, vals)
+    if wrap32:
+        sm = sm.astype(np.int32)
     if kind == "sum":
-        out[name] = sm.astype(np.int32)
+        out[name] = sm
     elif kind == "avg":
-        out[name] = sm.astype(np.int32).astype(np.float64) / \
-            np.maximum(cnt, 1)
+        out[name] = sm.astype(np.float64) / np.maximum(cnt, 1)
     else:
         ext = np.full(g, 2**31 - 1 if kind == "min" else -(2**31), np.int64)
         (np.minimum if kind == "min" else np.maximum).at(ext, inv, vals)
@@ -485,7 +490,8 @@ def reference_execute(query: Query):
     cols = reference_rows(query)
     if query.group_by:
         return rows_array(apply_group_by(cols, query.group_by,
-                                         query.aggregate)), None
+                                         query.aggregate,
+                                         wrap32=query.wrap32)), None
     return rows_array(cols), apply_aggregate(cols, query.aggregate)
 
 

@@ -63,11 +63,31 @@ def test_seg_agg_kernel_empty_slots(rng):
     from repro.kernels.agg.agg import INT32_MAX, INT32_MIN, seg_agg_pallas
     gid = jnp.asarray(np.zeros(1024, np.int32))          # everything slot 0
     val = jnp.asarray(rng.integers(0, 9, 1024).astype(np.int32))
-    cnt, sm, mn, mx = seg_agg_pallas(gid, val, num_slots=8, interpret=True)
+    cnt, sm, mn, mx = seg_agg_pallas(gid, val, num_slots=8, interpret=True,
+                                     wrap32=True)
     assert int(cnt[0]) == 1024 and (np.asarray(cnt[1:]) == 0).all()
     assert (np.asarray(mn[1:]) == INT32_MAX).all()
     assert (np.asarray(mx[1:]) == INT32_MIN).all()
     assert int(sm[0]) == int(np.asarray(val).sum())
+
+
+def test_seg_agg_kernel_wide_sums(rng):
+    """The default wide path is int64-exact where int32 would wrap."""
+    from repro.kernels.agg.agg import seg_agg_pallas, wide_sums_to_int64
+    gid = jnp.asarray((np.arange(2048) % 4).astype(np.int32))
+    base = rng.integers(-2**31, 2**31, 2048).astype(np.int32)
+    val = jnp.asarray(base)
+    cnt, sm, mn, mx = seg_agg_pallas(gid, val, num_slots=8, interpret=True)
+    assert sm.shape == (5, 8)
+    got = wide_sums_to_int64(np.asarray(sm))
+    exp = np.zeros(8, np.int64)
+    np.add.at(exp, np.arange(2048) % 4, base.astype(np.int64))
+    assert (got == exp).all()
+    # ... and the wrap32 channel reproduces the old modular accumulator.
+    _, sm32, _, _ = seg_agg_pallas(gid, val, num_slots=8, interpret=True,
+                                   wrap32=True)
+    wrapped = (got & 0xFFFFFFFF).astype(np.uint32).view(np.int32)
+    assert (np.asarray(sm32) == wrapped).all()
 
 
 def _check_groupby(result, keys, values):
@@ -86,13 +106,14 @@ def test_grouped_agg_matches_oracle(n, krange, rng):
     rel = Relation(jnp.arange(n, dtype=jnp.int32), jnp.asarray(keys))
     uk, cnt, sm, mn, mx, ng = grouped_agg(rel, jnp.asarray(vals),
                                           num_slots=n)
+    from repro.kernels.agg import wide_sums_to_int64
     ref = groupby_ref(keys, vals)
     ng = int(ng)
     assert ng == ref.num_groups
     o = np.argsort(np.asarray(uk[:ng]))
     assert (np.asarray(uk[:ng])[o] == ref.keys).all()
     assert (np.asarray(cnt[:ng])[o] == ref.counts).all()
-    assert (np.asarray(sm[:ng])[o] == ref.sums).all()
+    assert (wide_sums_to_int64(np.asarray(sm))[:ng][o] == ref.sums).all()
     assert (np.asarray(mn[:ng])[o] == ref.mins).all()
     assert (np.asarray(mx[:ng])[o] == ref.maxs).all()
 
@@ -135,14 +156,25 @@ def test_groupby_edge_cases(cp):
     _check_groupby(res, keys, vals)
 
 
-def test_groupby_sum_wraps_int32(cp):
-    # Device accumulation is int32; the oracle must reproduce the wrap.
+def test_groupby_sum_width_modes(cp):
+    # Values that overflow int32 by a wide margin: the default wide path
+    # must be int64-exact, and wrap32=True must reproduce the legacy
+    # modular accumulator exactly (oracle parity in both modes).
     n = 1024
     keys = np.zeros(n, np.int32)
     vals = np.full(n, 2**30, np.int32)       # overflows far past int32
     rel = Relation(jnp.arange(n, dtype=jnp.int32), jnp.asarray(keys))
     res, _ = cp.groupby(rel, vals)
+    assert res.sums.dtype == np.int64
+    assert int(res.sums[0]) == n * 2**30     # no silent wrap
     _check_groupby(res, keys, vals)
+    res32, _ = cp.groupby(rel, vals, wrap32=True)
+    assert res32.sums.dtype == np.int32
+    ref32 = groupby_ref(keys, vals, wrap32=True)
+    assert (res32.sorted().sums == ref32.sums).all()
+    # The separate-partials DD merge keeps wide sums exact too.
+    res_dd, _ = cp.groupby(rel, vals, agg_ratio=0.5)
+    assert int(res_dd.sorted().sums[0]) == n * 2**30
 
 
 # ---------------------------------------------------------------------------

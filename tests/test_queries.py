@@ -297,6 +297,157 @@ def test_property_based_optimizer_and_invariance(optimizer):
 
 
 # ---------------------------------------------------------------------------
+# Device-resident hand-off: view-chain correctness vs host vs reference.
+# ---------------------------------------------------------------------------
+
+def _run_handoff(query, physical, optimizer, handoff):
+    svc = JoinQueryService(planner=QueryPlanner(delta=0.25), num_workers=2)
+    with PipelineExecutor(service=svc, optimizer=optimizer,
+                          handoff=handoff) as ex:
+        res = ex.run(query, physical)
+        stats = svc.stats()
+    return res, stats
+
+
+def _dup_key_star(seed):
+    """A star whose build sides carry duplicate keys (fan-out > 1)."""
+    rng = np.random.default_rng(seed)
+    f = Table("F", {"fk0": rng.integers(0, 32, 512).astype(np.int32),
+                    "fk1": rng.integers(0, 16, 512).astype(np.int32),
+                    "m": rng.integers(0, 50, 512).astype(np.int32)})
+    d0 = Table("D0", {"id": rng.integers(0, 32, 96).astype(np.int32),
+                      "a": rng.integers(0, 1000, 96).astype(np.int32)})
+    d1 = Table("D1", {"id": rng.integers(0, 16, 48).astype(np.int32),
+                      "b": rng.integers(0, 9, 48).astype(np.int32)})
+    return Query(tables={"F": f, "D0": d0, "D1": d1},
+                 joins=(Join("F", "fk0", "D0", "id"),
+                        Join("F", "fk1", "D1", "id")),
+                 aggregate=("count",))
+
+
+def _check_handoff_parity(optimizer, query):
+    """Every enumerated order, both hand-off paths, vs the reference."""
+    ref_rows, ref_agg = reference_execute(query)
+    for order in optimizer.enumerate_orders(query):
+        physical = optimizer.price_order(query, order)
+        for mode in ("device", "host"):
+            res, stats = _run_handoff(query, physical, optimizer, mode)
+            assert res.aggregate == ref_agg, (order, mode)
+            got = res.rows_array()
+            assert got.shape == ref_rows.shape and (got == ref_rows).all(), \
+                (order, mode)
+            if mode == "device":
+                assert res.host_bytes_moved == 0
+                assert stats["host_bytes_moved"] == 0
+
+
+def test_handoff_parity_star_chain_properties(optimizer):
+    """Hypothesis-driven when available; a deterministic sweep over the
+    same domain otherwise.  Covers empty intermediates (a filter keeping
+    nothing), duplicate build keys, and selective/unselective mixes."""
+    def check(fact, dims, sel, seed):
+        q = make_star_query(fact, dims,
+                            selectivities=[sel] + [None] * (len(dims) - 1),
+                            seed=seed)
+        _check_handoff_parity(optimizer, q)
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        for fact, dims, sel, seed in ((256, [64, 64], None, 0),
+                                      (512, [64, 32], 0.1, 1),
+                                      (512, [128, 64], 0.5, 2)):
+            check(fact, dims, sel, seed)
+    else:
+        @settings(max_examples=6, deadline=None)
+        @given(fact=st.sampled_from([256, 512, 1024]),
+               dims=st.lists(st.sampled_from([32, 64, 128]), min_size=2,
+                             max_size=2),
+               sel=st.sampled_from([None, 0.1, 0.5]),
+               seed=st.integers(0, 99))
+        def check_prop(fact, dims, sel, seed):
+            check(fact, dims, sel, seed)
+
+        check_prop()
+
+    # Duplicate build keys: every order, both paths.
+    _check_handoff_parity(optimizer, _dup_key_star(5))
+    # Empty intermediate: a filter that keeps nothing.
+    q = make_star_query(256, [64, 64], selectivities=[None, None], seed=7)
+    q.tables["D0"] = q.tables["D0"].with_filters(Filter("a", 5000, 5001))
+    _check_handoff_parity(optimizer, q)
+    # Chain shape (the probe side threads through every stage).
+    _check_handoff_parity(optimizer, make_chain_query([256, 128, 64],
+                                                      seed=9))
+
+
+def test_deep_chain_triggers_depth_cap_flattening(optimizer):
+    """A 6-table chain drives rid chains past CHAIN_DEPTH_CAP: the
+    device path must flatten on device and stay row-identical."""
+    from repro.core.relation import CHAIN_DEPTH_CAP
+    q = make_chain_query([256, 192, 160, 128, 96, 64], seed=13,
+                         aggregate=None)
+    assert len(q.joins) > CHAIN_DEPTH_CAP
+    ref_rows, _ = reference_execute(q)
+    physical = optimizer.price_order(q, q.joins)
+    res, stats = _run_handoff(q, physical, optimizer, "device")
+    got = res.rows_array()
+    assert got.shape == ref_rows.shape and (got == ref_rows).all()
+    assert stats["host_bytes_moved"] == 0
+
+
+def test_index_chain_depth_cap():
+    import jax.numpy as jnp
+    from repro.core.relation import IndexChain
+    col = np.arange(100, dtype=np.int32) * 3
+    rng = np.random.default_rng(0)
+    chain = IndexChain()
+    expect = col
+    for _ in range(6):
+        idx = rng.integers(0, expect.shape[0], 24).astype(np.int32)
+        chain = chain.extend(jnp.asarray(idx), cap=2)
+        expect = expect[idx]
+        assert chain.depth <= 2        # cap flattens eagerly
+        assert (np.asarray(chain.gather(col)) == expect).all()
+
+
+def test_host_bytes_accounting_modes(optimizer):
+    """Fused: 0 intermediate bytes; host: the gather/re-upload volume,
+    surfaced through QueryOutcome.to_dict and service stats."""
+    q = make_star_query(512, [128, 128], selectivities=[0.3, None], seed=19,
+                        aggregate=("sum", "F.m"))
+    physical = optimizer.optimize(q)
+    dev, dev_stats = _run_handoff(q, physical, optimizer, "device")
+    host, host_stats = _run_handoff(q, physical, optimizer, "host")
+    assert dev.host_bytes_moved == 0 and dev_stats["host_bytes_moved"] == 0
+    assert host.host_bytes_moved > 0
+    assert host_stats["host_bytes_moved"] == host.host_bytes_moved
+    for o in host.outcomes:
+        assert o.to_dict()["host_bytes_moved"] == o.host_bytes_moved
+    assert host.to_dict()["host_bytes_moved"] == host.host_bytes_moved
+    assert dev.aggregate == host.aggregate
+
+
+def test_grouped_sink_consumes_view(optimizer):
+    """Group-by sink over the fused path: single-column keys hand over
+    device arrays (0 intermediate bytes); wide sums are exact; wrap32
+    reproduces the legacy wrap against the reference."""
+    q = make_star_query(1024, [128], selectivities=[0.5], seed=23,
+                        aggregate=("sum", "F.m"), group_by=("F.g",))
+    q.tables["F"].columns["m"][:] = 2**30        # would wrap int32
+    ref_rows, _ = reference_execute(q)
+    res, stats = _run_handoff(q, optimizer.optimize(q), optimizer, "device")
+    assert (res.rows_array() == ref_rows).all()
+    assert stats["host_bytes_moved"] == 0
+    qw = Query(tables=q.tables, joins=q.joins, aggregate=q.aggregate,
+               group_by=q.group_by, wrap32=True)
+    ref_w, _ = reference_execute(qw)
+    res_w, _ = _run_handoff(qw, optimizer.optimize(qw), optimizer, "device")
+    assert (res_w.rows_array() == ref_w).all()
+    assert not (ref_w == ref_rows).all()         # the wrap is real here
+
+
+# ---------------------------------------------------------------------------
 # Star workload generation.
 # ---------------------------------------------------------------------------
 
