@@ -1,15 +1,21 @@
 """Tiny perf regression gate over the BENCH_*.json rollup artifact.
 
 Reads the newest ``reports/bench/BENCH_*.json``, extracts the smoke
-query-pipeline figures, and fails (exit 1) when:
+query-pipeline and SLO figures, and fails (exit 1) when:
 
   * the fused path moved any intermediate bytes through the host
     (``host_bytes_moved`` must be 0 — the device-resident invariant), or
   * the smoke 3-join star end-to-end time regressed more than
-    ``TOLERANCE`` (25%) past the committed baseline value.
+    ``TOLERANCE`` (25%) past the committed baseline value, or
+  * the smoke ``slo_bench`` deadline hit rate (cost mode) fell below the
+    baseline floor, its shed rate rose above the baseline ceiling, or a
+    shed query escaped without a structured ``Backpressure``.
 
 The baseline lives in ``benchmarks/baseline.json``; refresh it (with a
 note in the commit) whenever an intentional change moves the number.
+The SLO bounds are deliberately loose — CI hosts are noisy and the smoke
+run is small; the gate catches the admission layer breaking outright
+(hit rate collapsing, shedding everything), not percentage drift.
 
     PYTHONPATH=src python -m benchmarks.check_regression
 """
@@ -64,6 +70,32 @@ def main() -> int:
                         f"{baseline['smoke_star_chosen_s']:.3f}s")
     print(f"check_regression: fused intermediate host bytes = "
           f"{fused_bytes}", flush=True)
+
+    slo = rollup.get("benchmarks", {}).get("slo_bench")
+    if slo and slo.get("ok") and slo.get("payload"):
+        with open(BASELINE_PATH) as f:
+            slo_base = json.load(f).get("slo_bench", {})
+        sp = slo["payload"]
+        hit, shed = sp["deadline_hit_rate"], sp["shed_rate"]
+        floor = slo_base.get("smoke_hit_rate_floor", 0.0)
+        ceil = slo_base.get("smoke_shed_rate_ceiling", 1.0)
+        print(f"check_regression: smoke slo hit_rate={hit:.2f} "
+              f"(floor {floor:.2f}), shed_rate={shed:.2f} "
+              f"(ceiling {ceil:.2f}), structured="
+              f"{sp['sheds_structured']}", flush=True)
+        if hit < floor:
+            failures.append(f"smoke slo deadline hit rate {hit:.2f} below "
+                            f"baseline floor {floor:.2f}")
+        if shed > ceil:
+            failures.append(f"smoke slo shed rate {shed:.2f} above "
+                            f"baseline ceiling {ceil:.2f}")
+        if not sp["sheds_structured"]:
+            failures.append("smoke slo shed queries missing structured "
+                            "Backpressure errors")
+    else:
+        print("check_regression: no successful slo_bench payload — "
+              "skipping SLO gate", flush=True)
+
     for msg in failures:
         print(f"check_regression: FAIL — {msg}", flush=True)
     return 1 if failures else 0

@@ -34,7 +34,7 @@ def registry(smoke: bool = False):
     from functools import partial
 
     from . import (alloc_figs, engine_bench, groupby_bench, paper_figs,
-                   query_bench, roofline, scale_figs)
+                   query_bench, roofline, scale_figs, slo_bench)
     return {
         "fig3": paper_figs.fig3_time_breakdown,
         "fig4": paper_figs.fig4_step_unit_costs,
@@ -59,6 +59,7 @@ def registry(smoke: bool = False):
                                      smoke=smoke),
         "query_pipeline": partial(query_bench.query_pipeline, smoke=smoke),
         "groupby": partial(groupby_bench.groupby_bench, smoke=smoke),
+        "slo_bench": partial(slo_bench.slo_bench, smoke=smoke),
     }
 
 

@@ -1,0 +1,184 @@
+"""SLO serving benchmark: cost-priced admission vs count-only FIFO.
+
+Replays one open-loop arrival schedule (bursty overload, three tenants,
+optional hot-tenant skew) against ``JoinQueryService`` twice — once with
+``admission_mode="cost"`` (the deadline-aware two-level scheduler) and
+once with ``admission_mode="fifo"`` (count-only baseline: global arrival
+order, no deadline decisions) — and reports, per mode and per tenant:
+
+  * p50 / p99 end-to-end latency (queued + execution),
+  * deadline hit rate over *all submitted* queries (a shed or rejected
+    query counts as a miss — shedding is only a win when the saved
+    capacity turns into on-time completions elsewhere),
+  * shed rate, and whether every shed carried a structured
+    ``Backpressure`` (reason + retry-after), never a timeout,
+  * Jain's fairness index over per-tenant completion ratios.
+
+Deadlines and the arrival rate are derived from the measured per-query
+service time on this host (a closed-loop warm pass), so the bench applies
+the same relative overload everywhere it runs.  Smoke mode shrinks sizes
+and counts for CI; its ``deadline_hit_rate``/``shed_rate`` figures are
+regression-gated by ``check_regression``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import N_TUPLES, bench_seed, csv_row, report
+
+TENANTS = ("gold", "silver", "bronze")
+# Deadline classes in multiples of the measured mean service time: gold is
+# tight, bronze is lax — the spread the EDF level exists to exploit.
+DEADLINE_X = {"gold": 6.0, "silver": 12.0, "bronze": 24.0}
+
+
+def _percentile(xs, p):
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), p)) \
+        if xs else 0.0
+
+
+def _replay(svc, events):
+    """Open-loop replay: submit each event at its scheduled offset
+    (non-blocking — arrivals never wait on completions), then drain."""
+    from repro.engine import Backpressure
+
+    for ev in events:                 # reset admission-time mutations
+        ev.query.deadline_at = None
+        ev.query.degraded = False
+    waiters, sheds, malformed = [], [], 0
+    t0 = time.perf_counter()
+    for ev in events:
+        lag = ev.at_s - (time.perf_counter() - t0)
+        if lag > 0:
+            time.sleep(lag)
+        try:
+            waiters.append((ev, svc.submit(ev.query, block=False)))
+        except Backpressure as e:
+            sheds.append((ev, e))
+        except Exception:
+            malformed += 1            # a shed that was NOT structured
+    done = []
+    for ev, w in waiters:
+        done.append((ev, w()))
+    return done, sheds, malformed
+
+
+def _metrics(events, done, sheds, malformed):
+    from repro.engine import jain_index
+
+    total = len(events)
+    sub = {t: 0 for t in TENANTS}
+    for ev in events:
+        sub[ev.tenant] += 1
+    per = {t: {"submitted": sub[t], "completed": 0, "hits": 0,
+               "shed": 0, "latencies": []} for t in TENANTS}
+    for ev, out in done:
+        p = per[ev.tenant]
+        p["completed"] += 1
+        p["latencies"].append(out.queued_s + out.wall_s)
+        if out.deadline_hit:
+            p["hits"] += 1
+    for ev, err in sheds:
+        per[ev.tenant]["shed"] += 1
+    structured = all(
+        err.reason in ("deadline", "queue_full")
+        and err.retry_after_s > 0.0 for _, err in sheds)
+    tenants = {}
+    for t, p in per.items():
+        n = max(p["submitted"], 1)
+        tenants[t] = {
+            "submitted": p["submitted"], "completed": p["completed"],
+            "shed": p["shed"], "hit_rate": p["hits"] / n,
+            "completion_ratio": p["completed"] / n,
+            "p50_s": _percentile(p["latencies"], 50),
+            "p99_s": _percentile(p["latencies"], 99)}
+    hits = sum(p["hits"] for p in per.values())
+    return {
+        "total": total,
+        "deadline_hit_rate": hits / max(total, 1),
+        "shed_rate": len(sheds) / max(total, 1),
+        "sheds_structured": bool(structured and malformed == 0),
+        "jain_completion": jain_index(
+            [tenants[t]["completion_ratio"] for t in TENANTS]),
+        "jain_hit_rate": jain_index(
+            [tenants[t]["hit_rate"] for t in TENANTS]),
+        "tenants": tenants}
+
+
+def slo_bench(smoke: bool = False):
+    from repro.core import CoProcessor
+    from repro.engine import (JoinQueryService, QueryPlanner, Tenant,
+                              open_loop)
+
+    if smoke:
+        base, n_queries, cal_n, delta = 4096, 24, 8192, 0.25
+        overload, burst_factor = 2.5, 4.0
+    else:
+        base = min(max(N_TUPLES // 32, 16384), 1 << 19)
+        n_queries, cal_n, delta = 120, 32768, 0.1
+        overload, burst_factor = 3.0, 6.0
+
+    cp = CoProcessor()
+    planner = QueryPlanner.calibrated(cp, n=cal_n, reps=2, delta=delta)
+    out: dict = {"smoke": smoke, "base_tuples": base,
+                 "num_queries": n_queries}
+
+    # -- closed-loop warm pass: compile executables, measure service time
+    warm_events = open_loop(n_queries, rate_qps=1.0, mix="mixed",
+                            tenant_mix=[(t, 1.0) for t in TENANTS],
+                            base_tuples=base, seed=bench_seed(31))
+    warm_svc = JoinQueryService(cp=cp, planner=planner, num_workers=0)
+    times = []
+    for ev in warm_events:
+        t0 = time.perf_counter()
+        warm_svc.execute(ev.query)
+        times.append(time.perf_counter() - t0)
+    warm_svc.close()
+    # Steady-state mean: drop the first half (compiles land there).
+    mean_s = float(np.mean(times[len(times) // 2:]))
+    planner.online.alpha = 0.0        # freeze adaptation: fair replays
+    out["mean_service_s"] = mean_s
+
+    # -- the measured schedule: bursty overload, hot tenant, per-class
+    #    deadlines, all derived from the measured service time
+    rate = overload / max(mean_s, 1e-6)
+    deadlines = {t: x * mean_s for t, x in DEADLINE_X.items()}
+    events = open_loop(
+        n_queries, rate_qps=rate, mix="mixed", arrivals="burst",
+        burst_factor=burst_factor, burst_fraction=0.3,
+        tenant_mix=[(t, 1.0) for t in TENANTS],
+        hot_tenant=None if smoke else "gold",
+        hot_skew=0.0 if smoke else 0.2,
+        deadlines=deadlines, base_tuples=base, seed=bench_seed(31))
+    out["rate_qps"] = rate
+    out["deadlines_s"] = deadlines
+
+    tenants = [Tenant(t, weight=1.0, deadline_s=deadlines[t])
+               for t in TENANTS]
+    results = {}
+    for mode in ("cost", "fifo"):
+        svc = JoinQueryService(cp=cp, planner=planner, num_workers=2,
+                               max_queue=max(4 * n_queries, 256),
+                               tenants=list(tenants), admission_mode=mode)
+        done, sheds, malformed = _replay(svc, events)
+        results[mode] = _metrics(events, done, sheds, malformed)
+        results[mode]["service_stats"] = {
+            k: svc.stats()[k]
+            for k in ("admitted", "rejected", "shed", "degraded",
+                      "completed", "failed")}
+        svc.close()
+        csv_row(f"slo/{mode}", 1e6 * mean_s,
+                f"hit_rate={results[mode]['deadline_hit_rate']:.2f};"
+                f"shed_rate={results[mode]['shed_rate']:.2f};"
+                f"jain={results[mode]['jain_completion']:.2f}")
+    out["modes"] = results
+    out["deadline_hit_rate"] = results["cost"]["deadline_hit_rate"]
+    out["shed_rate"] = results["cost"]["shed_rate"]
+    out["cost_beats_fifo"] = bool(
+        results["cost"]["deadline_hit_rate"]
+        >= results["fifo"]["deadline_hit_rate"])
+    out["sheds_structured"] = bool(results["cost"]["sheds_structured"])
+    report("slo_bench", out)
+    return out

@@ -10,12 +10,20 @@ resident build tables across queries.
   * ``QueryPlanner`` / ``QueryPlan``      — per-query cost-model planning
   * ``BuildTableCache``                   — LRU build-table reuse
   * ``WorkloadGenerator`` / ``make_workload`` — scenario mixes
+  * ``Tenant`` / ``TenantFairQueue`` / ``AdmissionController`` — the
+    multi-tenant SLO layer: weighted fair share across tenants, EDF
+    within, cost-priced shed/degrade with structured ``Backpressure``
+  * ``open_loop`` — open-loop traffic simulation (Poisson/burst arrivals,
+    tenant mixes, hot-tenant skew) for the ``slo_bench`` benchmark
 """
+from .admission import (AdmissionController, AdmissionDecision,
+                        Backpressure, Tenant, TenantFairQueue, jain_index)
 from .planner import (EXECUTABLE_SCHEMES, SCHEMES, QueryPlan, QueryPlanner)
 from .service import (GroupByQuery, JoinQuery, JoinQueryService,
                       PriorityAgingQueue, QueryOutcome, QueueFull)
 from .table_cache import (BuildTableCache, partition_layout_key,
                           relation_fingerprint, table_nbytes)
-from .workload import MIXES, WorkloadGenerator, make_workload, zipf_keys
+from .workload import (MIXES, TrafficEvent, WorkloadGenerator,
+                       make_workload, open_loop, zipf_keys)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -377,7 +377,7 @@ class QueryPlanner:
     def choose(self, build_n: int, probe_n: int, *, max_out: int,
                cached: bool = False, expect_reuse: bool = False,
                c_load: float = 0.0, g_load: float = 0.0,
-               kind: str = "inner") -> QueryPlan:
+               kind: str = "inner", record: bool = True) -> QueryPlan:
         """Plan one query.
 
         ``kind``         — join-variant semantics; non-inner kinds run over
@@ -429,7 +429,42 @@ class QueryPlanner:
             sig, make_candidates, effective,
             keep_key=lambda p: (p.algorithm, p.scheme, p.cached),
             count_key=lambda p: (p.algorithm,
-                                 "cached" if cached else p.scheme))
+                                 "cached" if cached else p.scheme),
+            record=record)
+        if from_cache:
+            return dataclasses.replace(plan, max_out=int(max_out))
+        plan.max_out = int(max_out)
+        return plan
+
+    def choose_degraded(self, build_n: int, probe_n: int, *, max_out: int,
+                        cached: bool = False, kind: str = "inner",
+                        record: bool = True) -> QueryPlan:
+        """The *cheapest* realizable plan — deadline-degraded execution.
+
+        Admission uses this when a query's preferred plan already misses
+        its deadline: raw minimum ``est_s`` over the same candidate set as
+        ``choose``, with no co-processing handicap and no load bias (a
+        degraded query wants out of the system as fast as possible, not a
+        balanced placement).  A resident build table makes the probe-only
+        variant the usual winner.  Sticky under its own signature, so
+        degraded traffic reuses compiled executables like any other.
+        """
+        sig = ("degraded", build_n, probe_n, cached, kind)
+
+        def make_candidates():
+            cands = list(self._shj_candidates(build_n, probe_n, cached,
+                                              kind))
+            if self.allow_phj and kind == "inner":
+                phj = self._phj_candidate(build_n, probe_n)
+                if phj is not None:
+                    cands.append(phj)
+            return cands
+
+        plan, from_cache = self._sticky_choose(
+            sig, make_candidates, lambda p: p.est_s,
+            keep_key=lambda p: (p.algorithm, p.scheme, p.cached),
+            count_key=lambda p: (p.algorithm, "degraded"),
+            record=record)
         if from_cache:
             return dataclasses.replace(plan, max_out=int(max_out))
         plan.max_out = int(max_out)
@@ -446,7 +481,7 @@ class QueryPlanner:
         return 1 if c_load > g_load else -1
 
     def _sticky_choose(self, sig, make_candidates, effective, *,
-                       keep_key, count_key):
+                       keep_key, count_key, record: bool = True):
         """Sticky cost-model choice shared by join and group-by planning.
 
         A cached plan for ``sig`` is reused until the online calibration
@@ -454,14 +489,17 @@ class QueryPlanner:
         ``keep_key``) keeps its compiled executables unless the challenger
         beats it by ``replan_margin`` (near-tie flips trade compiled code
         for XLA recompiles).  Returns ``(plan, from_cache)``.
+        ``record=False`` skips the plan-count bookkeeping — admission-time
+        pricing must not inflate the execution mix the benches report.
         """
         with self._lock:
             hit = self._plan_cache.get(sig)
         if hit is not None and hit[0] == self.online.version:
             plan = hit[1]
-            with self._lock:
-                k = count_key(plan)
-                self.plan_counts[k] = self.plan_counts.get(k, 0) + 1
+            if record:
+                with self._lock:
+                    k = count_key(plan)
+                    self.plan_counts[k] = self.plan_counts.get(k, 0) + 1
             return plan, True
         candidates = make_candidates()
         best = min(candidates, key=effective)
@@ -475,8 +513,9 @@ class QueryPlanner:
             if len(self._plan_cache) > 512:
                 self._plan_cache.clear()
             self._plan_cache[sig] = (self.online.version, best)
-            k = count_key(best)
-            self.plan_counts[k] = self.plan_counts.get(k, 0) + 1
+            if record:
+                k = count_key(best)
+                self.plan_counts[k] = self.plan_counts.get(k, 0) + 1
         return best, False
 
     # -- group-by aggregation (ops subsystem) --------------------------------
@@ -543,7 +582,8 @@ class QueryPlanner:
             join_ratio=float(agg_ratio))
 
     def choose_groupby(self, n: int, *, c_load: float = 0.0,
-                       g_load: float = 0.0) -> QueryPlan:
+                       g_load: float = 0.0,
+                       record: bool = True) -> QueryPlan:
         """Plan one group-by aggregation over ``n`` tuples.
 
         Candidates follow ``allowed_schemes``: whole-relation aggregation
@@ -575,7 +615,7 @@ class QueryPlanner:
         plan, _ = self._sticky_choose(
             sig, make_candidates, effective,
             keep_key=lambda p: (p.scheme, bool(p.schedule)),
-            count_key=lambda p: ("groupby", p.scheme))
+            count_key=lambda p: ("groupby", p.scheme), record=record)
         return plan
 
     # -- feedback (satellite: close the calibration loop online) -----------

@@ -5,10 +5,17 @@ paper's headline — keep *both* processor groups busy and reuse resident
 state — only pays off under a stream of queries.  ``JoinQueryService``
 provides that layer:
 
-  * **admission** — a bounded queue; ``submit`` enqueues (blocking or not),
-    worker threads drain it.  XLA dispatch is asynchronous, so while one
-    worker's C-group slices are in flight another worker's G-group work
-    from a *different* query overlaps on the device timeline.
+  * **admission** — a bounded, tenant-aware two-level queue
+    (``TenantFairQueue``: weighted fair share across tenants, EDF within
+    one); ``submit`` enqueues (blocking or not), worker threads drain it.
+    XLA dispatch is asynchronous, so while one worker's C-group slices
+    are in flight another worker's G-group work from a *different* query
+    overlaps on the device timeline.
+  * **SLO enforcement** — a query with a deadline is priced at admission
+    (``AdmissionController``): predicted completion past the deadline
+    first *degrades* the query to the planner's cheapest plan, and if
+    even that misses, *sheds* it with a structured ``Backpressure`` error
+    carrying a retry-after hint (never a silent timeout).
   * **load-aware planning** — each query is planned by ``QueryPlanner``
     (cost-model scheme + algorithm choice) given the outstanding estimated
     seconds per group, so near-tie plans land on the idler group.
@@ -29,6 +36,8 @@ import time
 from repro.core.coprocess import CoProcessor, Timing
 from repro.core.hash_table import JoinResult, default_num_buckets
 
+from .admission import (AdmissionController, Backpressure, QueueFull,
+                        Tenant, TenantFairQueue)
 from .planner import QueryPlan, QueryPlanner
 from .table_cache import (BuildTableCache, partition_layout_key,
                           relation_fingerprint)
@@ -48,6 +57,15 @@ class JoinQuery:
     # Non-inner kinds probe the same (cacheable) build table but emit
     # match flags / unmatched rows instead of the full expansion.
     kind: str = "inner"
+    # Multi-tenant SLO fields: ``tenant`` names the workload container the
+    # query is billed to; ``deadline_s`` is a relative deadline stamped
+    # into the absolute ``deadline_at`` at admission (a tenant's default
+    # deadline class applies when neither is set).  ``degraded`` marks a
+    # query admission re-priced onto the planner's cheapest plan.
+    tenant: str = "default"
+    deadline_s: float | None = None
+    deadline_at: float | None = None
+    degraded: bool = False
 
 
 @dataclasses.dataclass
@@ -67,6 +85,11 @@ class GroupByQuery:
     # Legacy int32-wrapping sum accumulator (oracle-parity tests); the
     # default accumulates wide (exact int64 sums).
     wrap32: bool = False
+    # Multi-tenant SLO fields (see JoinQuery).
+    tenant: str = "default"
+    deadline_s: float | None = None
+    deadline_at: float | None = None
+    degraded: bool = False
 
 
 @dataclasses.dataclass
@@ -82,6 +105,13 @@ class QueryOutcome:
     partition_cache_hit: bool = False
     priority: int = 0
     probe_partition_cache_hit: bool = False
+    # SLO bookkeeping: the billed tenant, whether admission degraded the
+    # plan, the inherited absolute deadline (None = best-effort), and
+    # whether execution finished inside it (None when no deadline).
+    tenant: str = "default"
+    degraded: bool = False
+    deadline_at: float | None = None
+    deadline_hit: bool | None = None
     # Host-boundary bytes the *caller* moved to hand this query its inputs
     # and consume its outputs (H2D + D2H for query intermediates).  The
     # query-pipeline executor fills this in per stage: ~0 on the fused
@@ -99,6 +129,8 @@ class QueryOutcome:
                    else int(self.result.num_groups))
         return {"query_id": self.query_id, "tag": self.tag,
                 "priority": self.priority,
+                "tenant": self.tenant, "degraded": self.degraded,
+                "deadline_hit": self.deadline_hit,
                 "algorithm": self.plan.algorithm,
                 "scheme": self.plan.scheme,
                 "kind": self.plan.kind,
@@ -113,10 +145,6 @@ class QueryOutcome:
                 "matches": matches,
                 "host_bytes_moved": int(self.host_bytes_moved),
                 "timing": self.timing.to_dict()}
-
-
-class QueueFull(RuntimeError):
-    """Admission rejected: the service is at capacity."""
 
 
 class PriorityAgingQueue:
@@ -225,13 +253,32 @@ class JoinQueryService:
                  planner: QueryPlanner | None = None, *,
                  cache_budget_bytes: int = 256 << 20,
                  max_queue: int = 128, num_workers: int = 2,
-                 priority_aging_s: float = 5.0):
+                 priority_aging_s: float = 5.0,
+                 tenants=None, admission_mode: str = "cost",
+                 max_deferred: int | None = None,
+                 clock=time.monotonic):
         self.cp = cp or CoProcessor()
         self.planner = planner or QueryPlanner()
         self.cache = BuildTableCache(cache_budget_bytes)
         self.num_workers = int(num_workers)
-        self._queue = PriorityAgingQueue(maxsize=max_queue,
-                                         aging_s=priority_aging_s)
+        self._clock = clock
+        # Deadline-aware multi-tenant admission: the controller prices
+        # admit/degrade/shed decisions from planner estimates; the queue
+        # serves tenants weighted-fair, EDF within each.  ``fifo`` mode is
+        # the count-only baseline slo_bench measures against.
+        self.admission = AdmissionController(
+            tenants, num_workers=max(1, self.num_workers),
+            mode=admission_mode)
+        self._queue = TenantFairQueue(
+            maxsize=max_queue, aging_s=priority_aging_s, clock=clock,
+            weight_fn=self.admission.weight_of,
+            fifo=(admission_mode == "fifo"))
+        # Deferred (pipeline-stage) submissions are bounded too: each
+        # pending stage holds one slot, so a deep or wide pipeline blocks
+        # (or bounces, block=False) instead of spawning unbounded threads.
+        self._deferred_sem = threading.BoundedSemaphore(
+            max_deferred if max_deferred is not None
+            else max(1, int(max_queue) or 128))
         self._workers: list[threading.Thread] = []
         self._stop = threading.Event()
         self._lock = threading.Lock()
@@ -249,10 +296,22 @@ class JoinQueryService:
         self.rejected = 0
         self.completed = 0
         self.failed = 0
+        self.shed = 0
+        self.degraded = 0
+        self._tenant_stats: dict[str, dict] = {}
         # H2D + D2H bytes callers moved for query intermediates (the
         # pipeline executor reports its stage hand-offs here; ~0 when the
         # fused device-resident path is in effect).
         self.host_bytes_moved = 0
+
+    def _tstats(self, name: str) -> dict:
+        """Per-tenant counters (call under ``self._lock``)."""
+        st = self._tenant_stats.get(name)
+        if st is None:
+            st = self._tenant_stats[name] = {
+                "admitted": 0, "rejected": 0, "shed": 0, "degraded": 0,
+                "completed": 0, "deadline_hits": 0, "deadline_misses": 0}
+        return st
 
     def note_host_bytes(self, nbytes: int) -> None:
         """Record caller-side host-boundary traffic for intermediates."""
@@ -273,15 +332,46 @@ class JoinQueryService:
         return fp
 
     # -- synchronous execution path (also what workers run) -----------------
-    def execute(self, q) -> QueryOutcome:
+    def execute(self, q, *, enqueued_at: float | None = None
+                ) -> QueryOutcome:
+        """Run one query now.  ``enqueued_at`` (a ``perf_counter`` stamp)
+        is how queue wait reaches the outcome's ``queued_s`` — the direct
+        path has no queue, so it reports 0.0 honestly."""
+        queued_s = (0.0 if enqueued_at is None
+                    else max(0.0, time.perf_counter() - enqueued_at))
+        # Direct executions bypass submit(): stamp the deadline here so
+        # the outcome's verdict (and deferred inheritance) still work.
+        self._stamp_deadline(q, self._clock())
         if isinstance(q, GroupByQuery):
-            return self._execute_groupby(q)
-        return self._execute_join(q)
+            return self._execute_groupby(q, queued_s)
+        return self._execute_join(q, queued_s)
 
-    def _execute_join(self, q: JoinQuery) -> QueryOutcome:
+    def _finish_outcome(self, q) -> bool | None:
+        """Completion bookkeeping: totals, per-tenant counts, deadline
+        verdict (measured on the service clock the deadline was stamped
+        with)."""
+        deadline_hit = None
+        if q.deadline_at is not None:
+            deadline_hit = bool(self._clock() <= q.deadline_at)
+        with self._lock:
+            self.completed += 1
+            ts = self._tstats(q.tenant)
+            ts["completed"] += 1
+            if deadline_hit is True:
+                ts["deadline_hits"] += 1
+            elif deadline_hit is False:
+                ts["deadline_misses"] += 1
+        return deadline_hit
+
+    def _execute_join(self, q: JoinQuery,
+                      queued_s: float = 0.0) -> QueryOutcome:
         t0 = time.perf_counter()
         build_n, probe_n = q.build.size, q.probe.size
-        max_out = q.max_out or (4 * probe_n + 1024)
+        # ``is None`` (not falsy) — an explicit max_out=0 is a legitimate
+        # capacity for expected-empty probes and must not be replaced by
+        # the heuristic default.
+        max_out = (q.max_out if q.max_out is not None
+                   else 4 * probe_n + 1024)
         nb = default_num_buckets(build_n)
         key = self._fingerprint(q.build, nb)
         table = self.cache.peek(key)
@@ -289,11 +379,17 @@ class JoinQueryService:
             seen = key in self._seen_fingerprints
             self._seen_fingerprints.add(key)
             c_load, g_load = self._loads["C"], self._loads["G"]
-        plan = self.planner.choose(build_n, probe_n, max_out=max_out,
-                                   cached=table is not None,
-                                   expect_reuse=seen and table is None,
-                                   c_load=c_load, g_load=g_load,
-                                   kind=q.kind)
+        if q.degraded:
+            # Deadline-degraded: admission promised the cheapest plan.
+            plan = self.planner.choose_degraded(
+                build_n, probe_n, max_out=max_out,
+                cached=table is not None, kind=q.kind)
+        else:
+            plan = self.planner.choose(build_n, probe_n, max_out=max_out,
+                                       cached=table is not None,
+                                       expect_reuse=seen and table is None,
+                                       c_load=c_load, g_load=g_load,
+                                       kind=q.kind)
         share = plan.c_share
         with self._lock:
             self._loads["C"] += plan.est_s * share
@@ -406,16 +502,19 @@ class JoinQueryService:
                 and not probe_partition_hit and big_enough):
             self.planner.observe(plan, timing)
         wall = time.perf_counter() - t0
-        with self._lock:
-            self.completed += 1
+        deadline_hit = self._finish_outcome(q)
         return QueryOutcome(q.query_id, q.tag, plan, timing, cache_hit,
-                            0.0, wall, result,
+                            queued_s, wall, result,
                             partition_cache_hit=partition_hit,
                             probe_partition_cache_hit=probe_partition_hit,
-                            priority=q.priority)
+                            priority=q.priority, tenant=q.tenant,
+                            degraded=q.degraded,
+                            deadline_at=q.deadline_at,
+                            deadline_hit=deadline_hit)
 
     # -- group-by aggregation (ops subsystem) --------------------------------
-    def _execute_groupby(self, q: GroupByQuery) -> QueryOutcome:
+    def _execute_groupby(self, q: GroupByQuery,
+                         queued_s: float = 0.0) -> QueryOutcome:
         """Plan + run one group-by under the same locks/feedback regime."""
         from repro.ops.groupby import groupby_coprocessed
         t0 = time.perf_counter()
@@ -449,7 +548,12 @@ class JoinQueryService:
                 self._inflight -= 1
                 solo = (inflight_at_start == 1
                         and self._exec_epoch == start_epoch + 1)
-        sig = ("groupby", plan.scheme, n)
+        # wrap32 belongs in the warm-up signature: the wide (int64 bit-
+        # chunk) and wrapping accumulators compile different executables,
+        # so the first wide run after a wrap32 run of the same size is a
+        # fresh XLA compile — treating it as "warmed" would calibrate the
+        # cost model on compile time.
+        sig = ("groupby", plan.scheme, n, q.wrap32)
         with self._lock:
             warmed = sig in self._observed_sigs
             self._observed_sigs.add(sig)
@@ -457,10 +561,12 @@ class JoinQueryService:
         if warmed and solo and big_enough:
             self.planner.observe(plan, timing)
         wall = time.perf_counter() - t0
-        with self._lock:
-            self.completed += 1
+        deadline_hit = self._finish_outcome(q)
         return QueryOutcome(q.query_id, q.tag, plan, timing, False,
-                            0.0, wall, result, priority=q.priority)
+                            queued_s, wall, result, priority=q.priority,
+                            tenant=q.tenant, degraded=q.degraded,
+                            deadline_at=q.deadline_at,
+                            deadline_hit=deadline_hit)
 
     # -- admission + workers -------------------------------------------------
     def _ensure_workers(self):
@@ -481,10 +587,11 @@ class JoinQueryService:
                 continue
             q, enq_t, box, done = item
             try:
-                out = self.execute(q)
-                out.queued_s = time.perf_counter() - enq_t - out.wall_s
-                box["outcome"] = out
+                box["outcome"] = self.execute(q, enqueued_at=enq_t)
             except Exception as e:  # surface to the waiter, keep serving
+                # Mark the failure counted: a deferred-stage waiter
+                # re-raising this exception must not count it again.
+                e._svc_failure_counted = True
                 box["error"] = e
                 with self._lock:
                     self.failed += 1
@@ -492,26 +599,140 @@ class JoinQueryService:
                 done.set()
                 self._queue.task_done()
 
-    def submit(self, q: JoinQuery, *, block: bool = True,
-               timeout: float | None = None):
+    # -- admission pricing ---------------------------------------------------
+    def _admission_estimate(self, q) -> tuple[float, float]:
+        """(est_s, c_share) for admission: the same sticky plan the
+        executor will pick, priced without perturbing plan counters."""
+        try:
+            with self._lock:
+                c_load, g_load = self._loads["C"], self._loads["G"]
+            if isinstance(q, GroupByQuery):
+                plan = self.planner.choose_groupby(
+                    q.keys.size, c_load=c_load, g_load=g_load,
+                    record=False)
+            else:
+                build_n, probe_n = q.build.size, q.probe.size
+                max_out = (q.max_out if q.max_out is not None
+                           else 4 * probe_n + 1024)
+                key = self._fingerprint(q.build,
+                                        default_num_buckets(build_n))
+                table = self.cache.peek(key)
+                with self._lock:
+                    seen = key in self._seen_fingerprints
+                plan = self.planner.choose(
+                    build_n, probe_n, max_out=max_out,
+                    cached=table is not None,
+                    expect_reuse=seen and table is None,
+                    c_load=c_load, g_load=g_load, kind=q.kind,
+                    record=False)
+            return float(plan.est_s), float(plan.c_share)
+        except Exception:
+            return 0.0, 0.5    # unpriceable -> admit-by-count semantics
+
+    def _degraded_estimate(self, q) -> float | None:
+        """Cheapest-plan estimate (the degrade option); None when the
+        query has no cheaper realizable variant (group-by)."""
+        if isinstance(q, GroupByQuery):
+            return None
+        try:
+            build_n, probe_n = q.build.size, q.probe.size
+            max_out = (q.max_out if q.max_out is not None
+                       else 4 * probe_n + 1024)
+            key = self._fingerprint(q.build, default_num_buckets(build_n))
+            plan = self.planner.choose_degraded(
+                build_n, probe_n, max_out=max_out,
+                cached=self.cache.peek(key) is not None, kind=q.kind,
+                record=False)
+            return float(plan.est_s)
+        except Exception:
+            return None
+
+    def _stamp_deadline(self, q, now: float) -> None:
+        """Resolve the query's absolute deadline: explicit ``deadline_at``
+        wins, then a relative ``deadline_s``, then the tenant's default
+        deadline class."""
+        if q.deadline_at is not None:
+            return
+        rel = q.deadline_s
+        if rel is None:
+            rel = self.admission.tenant(q.tenant).deadline_s
+        if rel is not None:
+            q.deadline_at = now + float(rel)
+
+    def _admission_snapshot(self, tenant: str) -> tuple[float, float]:
+        """(in-flight estimated seconds, active fair-share weight)."""
+        with self._lock:
+            inflight = sum(self._loads.values())
+        active = set(self._queue.active_tenants()) | {tenant}
+        active_w = sum(self.admission.tenant(x).weight for x in active)
+        return inflight, active_w
+
+    def submit(self, q, *, block: bool = True,
+               timeout: float | None = None, preadmitted: bool = False):
         """Admit a query.  Returns a ``wait()``-able handle.
 
-        Non-blocking submits raise ``QueueFull`` when the admission queue
-        is at capacity (counted in ``rejected``).
+        Deadline-aware: a query whose predicted completion misses its
+        deadline is degraded to the cheapest plan when that still fits,
+        else shed with a structured ``Backpressure`` (counted in
+        ``shed``).  Non-blocking submits raise ``Backpressure`` (a
+        ``QueueFull``) when the admission queue is at capacity (counted
+        in ``rejected``).  ``preadmitted`` skips the shed/degrade
+        decision — pipeline stages whose root already passed admission.
         """
         self._ensure_workers()
+        est, c_share = self._admission_estimate(q)
+        tenant = q.tenant or "default"
+        now = self._clock()
+        self._stamp_deadline(q, now)
+        if (not preadmitted and self.admission.mode == "cost"
+                and q.deadline_at is not None):
+            inflight, active_w = self._admission_snapshot(tenant)
+            decision = self.admission.decide(
+                tenant, est_s=est, deadline_s=q.deadline_at - now,
+                degraded_est_fn=lambda: self._degraded_estimate(q),
+                c_share=c_share, inflight_s=inflight,
+                tenant_backlog_s=self._queue.backlog_s(tenant),
+                active_weight=active_w)
+            if decision.action == "shed":
+                with self._lock:
+                    self.shed += 1
+                    self._tstats(tenant)["shed"] += 1
+                raise Backpressure(
+                    f"query {q.query_id} shed: predicted completion "
+                    f"{decision.predicted_s:.3f}s misses deadline "
+                    f"{q.deadline_at - now:.3f}s "
+                    f"(retry after {decision.retry_after_s:.3f}s)",
+                    reason="deadline", tenant=tenant,
+                    query_id=q.query_id,
+                    retry_after_s=decision.retry_after_s,
+                    predicted_s=decision.predicted_s,
+                    deadline_s=q.deadline_at - now)
+            if decision.action == "degrade":
+                q.degraded = True
+                with self._lock:
+                    self.degraded += 1
+                    self._tstats(tenant)["degraded"] += 1
         box: dict = {}
         done = threading.Event()
         try:
             self._queue.put((q, time.perf_counter(), box, done),
                             priority=q.priority, block=block,
-                            timeout=timeout)
+                            timeout=timeout, tenant=tenant,
+                            deadline_at=q.deadline_at, est_s=est)
         except queue.Full:
             with self._lock:
                 self.rejected += 1
-            raise QueueFull(f"admission queue full (query {q.query_id})")
+                self._tstats(tenant)["rejected"] += 1
+                inflight = sum(self._loads.values())
+            backlog = self._queue.backlog_s()
+            raise Backpressure(
+                f"admission queue full (query {q.query_id})",
+                reason="queue_full", tenant=tenant, query_id=q.query_id,
+                retry_after_s=max(0.05, (inflight + backlog)
+                                 / max(1, self.num_workers)))
         with self._lock:
             self.admitted += 1
+            self._tstats(tenant)["admitted"] += 1
 
         def wait(timeout: float | None = None) -> QueryOutcome:
             if not done.wait(timeout):
@@ -522,8 +743,68 @@ class JoinQueryService:
 
         return wait
 
+    def admit_pipeline(self, *, tenant: str = "default",
+                       est_s: float = 0.0,
+                       deadline_s: float | None = None,
+                       deadline_at: float | None = None,
+                       query_id: int = -1,
+                       degraded_est_s: float | None = None
+                       ) -> tuple[float | None, bool]:
+        """Admit (or shed) a whole pipeline up front on its total cost.
+
+        Returns ``(deadline_at, degraded)``: the absolute deadline every
+        stage of the pipeline should carry (``None`` when neither the
+        caller nor the tenant's deadline class sets one) and whether the
+        pipeline must run its stages degraded.  Raises ``Backpressure``
+        when the predicted completion cannot meet the deadline even
+        degraded — the whole pipeline is shed coherently instead of
+        failing half-way through.
+        """
+        tenant = tenant or "default"
+        now = self._clock()
+        if deadline_at is None:
+            rel = deadline_s
+            if rel is None:
+                rel = self.admission.tenant(tenant).deadline_s
+            if rel is not None:
+                deadline_at = now + float(rel)
+        if (self.admission.mode != "cost" or deadline_at is None):
+            return deadline_at, False
+        inflight, active_w = self._admission_snapshot(tenant)
+        decision = self.admission.decide(
+            tenant, est_s=est_s, deadline_s=deadline_at - now,
+            degraded_est_fn=(None if degraded_est_s is None
+                             else (lambda: degraded_est_s)),
+            inflight_s=inflight,
+            tenant_backlog_s=self._queue.backlog_s(tenant),
+            active_weight=active_w)
+        if decision.action == "shed":
+            with self._lock:
+                self.shed += 1
+                self._tstats(tenant)["shed"] += 1
+            raise Backpressure(
+                f"pipeline {query_id} shed: predicted completion "
+                f"{decision.predicted_s:.3f}s misses deadline "
+                f"{deadline_at - now:.3f}s "
+                f"(retry after {decision.retry_after_s:.3f}s)",
+                reason="deadline", tenant=tenant, query_id=query_id,
+                retry_after_s=decision.retry_after_s,
+                predicted_s=decision.predicted_s,
+                deadline_s=deadline_at - now)
+        if decision.action == "degrade":
+            with self._lock:
+                self.degraded += 1
+                self._tstats(tenant)["degraded"] += 1
+            return deadline_at, True
+        return deadline_at, False
+
     def submit_deferred(self, make_query, deps=(), *, finalize=None,
-                        priority: int | None = None):
+                        priority: int | None = None,
+                        tenant: str | None = None,
+                        deadline_at: float | None = None,
+                        preadmitted: bool = True,
+                        block: bool = True,
+                        timeout: float | None = None):
         """Admit one pipeline stage that depends on earlier stages.
 
         ``make_query(dep_outcomes)`` is called — with the outcomes of the
@@ -539,26 +820,71 @@ class JoinQueryService:
         ``submit``.  Stages with disjoint dependency sets go through the
         normal admission queue concurrently — that is where independent
         subtrees of a join tree overlap on the two device groups.
+
+        Deferred stages are *bounded*: each holds one slot of the service's
+        deferred-stage semaphore while pending, so a deep or wide pipeline
+        cannot spawn unbounded threads past admission (non-blocking submits
+        raise ``Backpressure`` when no slot is free).  The stage inherits
+        its tenant and absolute deadline from its dependencies' outcomes —
+        or takes the explicit ``tenant``/``deadline_at`` overrides — so a
+        whole pipeline is admitted or shed coherently; ``preadmitted``
+        (default) skips per-stage shed/degrade decisions because the root
+        decision via ``admit_pipeline`` already covered the pipeline.
         """
+        if not self._deferred_sem.acquire(blocking=block, timeout=timeout):
+            with self._lock:
+                self.rejected += 1
+                self._tstats(tenant or "default")["rejected"] += 1
+            raise Backpressure(
+                "deferred-stage capacity exhausted",
+                reason="queue_full", tenant=tenant or "default",
+                retry_after_s=0.05)
         box: dict = {}
         done = threading.Event()
 
         def runner():
             try:
-                outs = [d() for d in deps]   # dep failures propagate
-                q = make_query(outs)
-                if priority is not None:
-                    q.priority = priority
-                if self.num_workers <= 0:
-                    out = self.execute(q)
-                else:
-                    out = self.submit(q)()
-                if finalize is not None:
-                    finalize(out)
-                box["outcome"] = out
-            except Exception as e:
-                box["error"] = e
+                try:
+                    outs = [d() for d in deps]
+                except Exception as e:
+                    # Dep failures propagate but were already counted at
+                    # the failing stage — don't double-count here.
+                    box["error"] = e
+                    return
+                try:
+                    q = make_query(outs)
+                    if priority is not None:
+                        q.priority = priority
+                    # Inherit tenant/deadline: explicit override first,
+                    # then the dependencies' outcomes, then the query's
+                    # own fields.
+                    if tenant is not None:
+                        q.tenant = tenant
+                    elif outs and getattr(q, "tenant", "default") == "default":
+                        q.tenant = outs[0].tenant
+                    if deadline_at is not None:
+                        q.deadline_at = deadline_at
+                    elif q.deadline_at is None and outs:
+                        q.deadline_at = outs[0].deadline_at
+                    if self.num_workers <= 0:
+                        out = self.execute(q)
+                    else:
+                        out = self.submit(q, preadmitted=preadmitted)()
+                    if finalize is not None:
+                        finalize(out)
+                    box["outcome"] = out
+                except Exception as e:
+                    # Admission outcomes (shed / queue-full) are already
+                    # counted as shed/rejected, not execution failures.
+                    if (not isinstance(e, QueueFull)
+                            and not getattr(e, "_svc_failure_counted",
+                                            False)):
+                        e._svc_failure_counted = True
+                        with self._lock:
+                            self.failed += 1
+                    box["error"] = e
             finally:
+                self._deferred_sem.release()
                 done.set()
 
         threading.Thread(target=runner, daemon=True,
@@ -610,6 +936,10 @@ class JoinQueryService:
         with self._lock:
             counters = {"admitted": self.admitted, "rejected": self.rejected,
                         "completed": self.completed, "failed": self.failed,
+                        "shed": self.shed, "degraded": self.degraded,
                         "host_bytes_moved": self.host_bytes_moved}
-        return {**counters, "cache": self.cache.stats(),
+            tenants = {name: dict(st)
+                       for name, st in self._tenant_stats.items()}
+        return {**counters, "queue_depth": len(self._queue),
+                "tenants": tenants, "cache": self.cache.stats(),
                 "planner": self.planner.stats()}

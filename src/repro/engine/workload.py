@@ -26,8 +26,16 @@ sizes, skew, and selectivity — the axes the paper sweeps in §5):
 mixes the benchmarks and tests use.  ``star`` produces ``queries.Query``
 objects (not ``JoinQuery``), so it is replayed through the query-pipeline
 executor rather than ``stream``.
+
+``open_loop`` extends the generator into an open-loop traffic simulator:
+queries arrive on a Poisson (or bursty on/off) process, tagged with a
+tenant drawn from a mix (optionally Zipf-skewed toward a hot tenant) and
+that tenant's deadline — the arrival schedule the ``slo_bench`` benchmark
+replays against the service's admission control.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -209,3 +217,72 @@ def make_workload(mix: str = "mixed", num_queries: int = 32, *,
     """One-call workload: a seeded list of queries from a named mix."""
     return WorkloadGenerator(base_tuples, seed=seed, **kw).stream(
         num_queries, mix)
+
+
+# -- open-loop traffic simulation -------------------------------------------
+@dataclasses.dataclass
+class TrafficEvent:
+    """One arrival of the open-loop schedule: submit ``query`` at
+    ``at_s`` (seconds from stream start) on behalf of ``tenant``."""
+
+    at_s: float
+    tenant: str
+    query: JoinQuery
+
+
+def open_loop(num_queries: int, *, rate_qps: float = 20.0,
+              tenant_mix=(("default", 1.0),), mix="mixed",
+              arrivals: str = "poisson", burst_factor: float = 8.0,
+              burst_fraction: float = 0.25, hot_tenant: str | None = None,
+              hot_skew: float = 0.0, deadlines: dict | None = None,
+              base_tuples: int = 65536, seed: int = 0,
+              **gen_kw) -> list[TrafficEvent]:
+    """Build an open-loop arrival schedule (arrivals don't wait on
+    completions — the load that makes admission control earn its keep).
+
+    ``arrivals="poisson"`` draws i.i.d. exponential gaps at ``rate_qps``;
+    ``"burst"`` is an on/off process: a ``burst_fraction`` of the timeline
+    runs at ``burst_factor``× the base rate (the overload the shed path is
+    for), the rest at the base rate.  ``tenant_mix`` weights tenant names;
+    ``hot_tenant``/``hot_skew`` shift extra probability mass (``hot_skew``
+    in [0, 1)) onto one tenant on top of its mix weight.  ``deadlines``
+    maps tenant name → relative deadline seconds stamped on each query
+    (tenants absent from the map submit best-effort queries).
+
+    The schedule is deterministic in ``seed`` — the same events can be
+    replayed against different admission modes for a fair comparison.
+    """
+    rng = np.random.default_rng(seed)
+    gen = WorkloadGenerator(base_tuples, seed=seed + 1, **gen_kw)
+    queries = gen.stream(num_queries, mix)
+
+    names = [n for n, _ in tenant_mix]
+    w = np.array([float(x) for _, x in tenant_mix], dtype=np.float64)
+    w = w / w.sum()
+    if hot_tenant is not None and hot_skew > 0.0:
+        if hot_tenant not in names:
+            names.append(hot_tenant)
+            w = np.append(w, 0.0)
+        w = w * (1.0 - hot_skew)
+        w[names.index(hot_tenant)] += hot_skew
+
+    base_gap = 1.0 / max(rate_qps, 1e-9)
+    events: list[TrafficEvent] = []
+    t = 0.0
+    for q in queries:
+        if arrivals == "poisson":
+            t += float(rng.exponential(base_gap))
+        elif arrivals == "burst":
+            in_burst = rng.random() < burst_fraction
+            gap = base_gap / (burst_factor if in_burst else 1.0)
+            t += float(rng.exponential(gap))
+        elif arrivals == "uniform":
+            t += base_gap
+        else:
+            raise ValueError(f"unknown arrival process {arrivals!r}")
+        tenant = names[int(rng.choice(len(names), p=w))]
+        q.tenant = tenant
+        if deadlines and tenant in deadlines:
+            q.deadline_s = float(deadlines[tenant])
+        events.append(TrafficEvent(t, tenant, q))
+    return events

@@ -396,6 +396,16 @@ def _match_count(build_keys: np.ndarray, probe_keys: np.ndarray,
     return int(counts.sum())
 
 
+def _mark_degraded(make_query):
+    """Wrap a stage's query factory so the stage runs on the planner's
+    cheapest plan — the whole-pipeline degrade admission promised."""
+    def wrapped(dep_outcomes):
+        q = make_query(dep_outcomes)
+        q.degraded = True
+        return q
+    return wrapped
+
+
 @dataclasses.dataclass
 class PipelineResult:
     """Outcome of one pipelined query execution.
@@ -469,12 +479,44 @@ class PipelineExecutor:
     def __exit__(self, *exc):
         self.close()
 
+    def _degraded_total_s(self, physical: PhysicalPlan) -> float | None:
+        """The pipeline's total estimate when every stage runs on the
+        planner's cheapest plan — the degrade option admission weighs
+        before shedding a whole pipeline."""
+        try:
+            total = 0.0
+            for s in physical.stages:
+                p = self.service.planner.choose_degraded(
+                    max(s.est_build, 1), max(s.est_probe, 1),
+                    max_out=self._stage_capacity(s.est_out),
+                    cached=False, kind=s.kind, record=False)
+                total += float(p.est_s)
+            if physical.agg_plan is not None:
+                total += float(physical.agg_plan.est_s)
+            return total
+        except Exception:
+            return None
+
     # -- the pipeline --------------------------------------------------------
-    def run(self, query: Query,
-            physical: PhysicalPlan | None = None) -> PipelineResult:
-        """Execute ``query`` under ``physical`` (optimized when omitted)."""
+    def run(self, query: Query, physical: PhysicalPlan | None = None, *,
+            tenant: str = "default",
+            deadline_s: float | None = None) -> PipelineResult:
+        """Execute ``query`` under ``physical`` (optimized when omitted).
+
+        ``tenant``/``deadline_s`` bill the whole pipeline to one workload
+        container: admission decides *once*, at the root, on the plan's
+        total estimate (``est_total_s``) — the pipeline is admitted,
+        degraded (every stage re-priced to the cheapest plan), or shed
+        coherently with a structured ``Backpressure``, never half-run.
+        Stages then carry the inherited tenant and absolute deadline
+        through the queue pre-admitted.
+        """
         if physical is None:
             physical = self.optimizer.optimize(query)
+        deadline_at, degraded = self.service.admit_pipeline(
+            tenant=tenant, est_s=physical.est_total_s,
+            deadline_s=deadline_s, query_id=next(self._qid),
+            degraded_est_s=self._degraded_total_s(physical))
         base = {name: _ScanView(t) for name, t in query.tables.items()}
         # Residual (cycle-edge) filters on base tables apply at scan time;
         # the rest are grouped by the stage whose output they filter.
@@ -490,7 +532,8 @@ class PipelineExecutor:
                 raise ValueError("plan has no stages but several tables")
             view = next(iter(base.values()))
             return self._finish(query, physical, view, [], t0,
-                                from_stages=False)
+                                from_stages=False, tenant=tenant,
+                                deadline_at=deadline_at)
 
         inter: dict[int, object] = {}     # stage id -> cols dict | StageView
         depth: dict[int, int] = {}
@@ -504,6 +547,8 @@ class PipelineExecutor:
                           if fused else
                           self._stage_query_host(stage, base, inter,
                                                  handoff_bytes))
+            if degraded:
+                make_query = _mark_degraded(make_query)
             finalize = (self._stage_finalize_dev(
                 stage, base, inter,
                 stage_residuals.get(stage.stage_id, ()))
@@ -516,17 +561,23 @@ class PipelineExecutor:
                 make_query,
                 deps=[handles[d] for d in stage.deps],
                 finalize=finalize,
-                priority=depth[stage.stage_id])
+                priority=depth[stage.stage_id],
+                tenant=tenant, deadline_at=deadline_at)
         outcomes = [handles[s.stage_id]() for s in physical.stages]
         final = inter[physical.stages[-1].stage_id]
-        return self._finish(query, physical, final, outcomes, t0)
+        return self._finish(query, physical, final, outcomes, t0,
+                            tenant=tenant, deadline_at=deadline_at,
+                            degraded=degraded)
 
     def _finish(self, query, physical, cols, outcomes, t0, *,
-                from_stages: bool = True) -> PipelineResult:
+                from_stages: bool = True, tenant: str = "default",
+                deadline_at: float | None = None,
+                degraded: bool = False) -> PipelineResult:
         """Apply the sink (group-by through the engine, or a host scalar)."""
         if query.group_by:
             cols, sink_outcome = self._run_group_by(
-                query, cols, count_handoff=from_stages)
+                query, cols, count_handoff=from_stages, tenant=tenant,
+                deadline_at=deadline_at, degraded=degraded)
             outcomes = outcomes + [sink_outcome]
             agg = None
             rows = next(iter(cols.values())).shape[0] if cols else 0
@@ -559,7 +610,9 @@ class PipelineExecutor:
 
     # -- group-by sink -------------------------------------------------------
     def _run_group_by(self, query: Query, cols, *,
-                      count_handoff: bool = True):
+                      count_handoff: bool = True, tenant: str = "default",
+                      deadline_at: float | None = None,
+                      degraded: bool = False):
         """One ``GroupByQuery`` through the service's admission queue.
 
         A device view hands the sink its key/value columns as device
@@ -618,11 +671,15 @@ class PipelineExecutor:
             rel = Relation(jnp.asarray(rid),
                            jnp.asarray(keys, dtype=jnp.int32))
         gq = GroupByQuery(keys=rel, values=values, tag="groupby-sink",
-                          query_id=next(self._qid), wrap32=query.wrap32)
+                          query_id=next(self._qid), wrap32=query.wrap32,
+                          tenant=tenant, deadline_at=deadline_at,
+                          degraded=degraded)
         if self.service.num_workers <= 0:
             outcome = self.service.execute(gq)
         else:
-            outcome = self.service.submit(gq)()
+            # Pre-admitted: the pipeline-root decision already covered the
+            # sink; re-deciding here could shed it after its stages ran.
+            outcome = self.service.submit(gq, preadmitted=True)()
         outcome.host_bytes_moved += moved
         if moved:
             self.service.note_host_bytes(moved)

@@ -375,3 +375,50 @@ def test_hot_table_stream_recurs_fingerprints():
     fps = [relation_fingerprint(q.build, default_num_buckets(q.build.size))
            for q in wl]
     assert len(set(fps)) < len(fps)             # pool recurrence
+
+
+# ---------------------------------------------------------------------------
+# Service-layer regressions: max_out=0, queued_s accounting, wrap32 sig.
+# ---------------------------------------------------------------------------
+
+def test_explicit_max_out_zero_is_respected(cp):
+    # An explicit max_out=0 (legitimate for expected-empty probes) must
+    # not be silently replaced by the heuristic 4*|S|+1024 capacity.
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=0)
+    b = unique_relation(512, seed=1)
+    s = uniform_relation(512, key_range=512, seed=2)
+    out = svc.execute(JoinQuery(build=b, probe=s, max_out=0, query_id=1))
+    assert out.plan.max_out == 0
+    assert int(out.result.count) == 0
+
+
+def test_queued_s_reported_on_worker_path(cp):
+    import time
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=0)
+    q = make_workload("uniform", num_queries=1, base_tuples=512, seed=9)[0]
+    # Direct path: no queue, honestly 0.0.
+    assert svc.execute(q).queued_s == 0.0
+    # Enqueue stamp in the past: the wait is accounted, not hardcoded 0.
+    out = svc.execute(q, enqueued_at=time.perf_counter() - 0.25)
+    assert out.queued_s >= 0.25
+
+
+def test_groupby_feedback_signature_includes_wrap32(cp):
+    from repro.engine import GroupByQuery
+    from repro.core import uniform_relation as _ur
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=0)
+    keys = _ur(512, key_range=16, seed=3)
+    vals = np.ones(512, np.int32)
+    svc.execute(GroupByQuery(keys=keys, values=vals, query_id=1,
+                             wrap32=True))
+    sigs = {s for s in svc._observed_sigs if s[0] == "groupby"}
+    assert all(len(s) == 4 for s in sigs)       # wrap32 is in the sig
+    svc.execute(GroupByQuery(keys=keys, values=vals, query_id=2,
+                             wrap32=False))
+    sigs2 = {s for s in svc._observed_sigs if s[0] == "groupby"}
+    # The wide run after a wrap32 run of the same size is a FRESH
+    # signature (different executable), not "warmed".
+    assert len(sigs2) == len(sigs) + 1
