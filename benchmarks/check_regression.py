@@ -9,7 +9,11 @@ query-pipeline and SLO figures, and fails (exit 1) when:
     ``TOLERANCE`` (25%) past the committed baseline value, or
   * the smoke ``slo_bench`` deadline hit rate (cost mode) fell below the
     baseline floor, its shed rate rose above the baseline ceiling, or a
-    shed query escaped without a structured ``Backpressure``.
+    shed query escaped without a structured ``Backpressure``, or
+  * the observability plumbing went dark: the cost-model audit trail is
+    empty or carries non-finite prediction-error percentiles for an
+    executed phase, or the metrics registry's ``host_bytes_moved``
+    disagrees with the fused-path figure the hand-off section reported.
 
 The baseline lives in ``benchmarks/baseline.json``; refresh it (with a
 note in the commit) whenever an intentional change moves the number.
@@ -23,6 +27,7 @@ from __future__ import annotations
 
 import glob
 import json
+import math
 import os
 import sys
 
@@ -70,6 +75,34 @@ def main() -> int:
                         f"{baseline['smoke_star_chosen_s']:.3f}s")
     print(f"check_regression: fused intermediate host bytes = "
           f"{fused_bytes}", flush=True)
+
+    # -- observability gate: audit trail populated, registry coherent -----
+    snap = payload.get("metrics_snapshot") or {}
+    audit = snap.get("prediction_error")
+    if not audit or not audit.get("count"):
+        failures.append("cost-model audit trail is empty "
+                        "(metrics_snapshot.prediction_error missing)")
+    else:
+        shown = []
+        for phase, s in sorted((audit.get("phases") or {}).items()):
+            p50, p95 = s.get("p50"), s.get("p95")
+            finite = all(isinstance(v, (int, float)) and math.isfinite(v)
+                         for v in (p50, p95))
+            if not s.get("count") or not finite:
+                failures.append(f"prediction-error summary for phase "
+                                f"'{phase}' is missing or non-finite: {s}")
+            else:
+                shown.append(f"{phase}: p50={p50:.2f} p95={p95:.2f}")
+        if not audit.get("phases"):
+            failures.append("cost-model audit has records but no "
+                            "per-phase prediction-error summaries")
+        print(f"check_regression: audit records={audit['count']}, "
+              f"prediction-error ratios {{{'; '.join(shown)}}}", flush=True)
+    reg_bytes = snap.get("host_bytes_moved")
+    if reg_bytes != fused_bytes:
+        failures.append(f"metrics registry host_bytes_moved={reg_bytes} "
+                        f"disagrees with the fused hand-off figure "
+                        f"{fused_bytes}")
 
     slo = rollup.get("benchmarks", {}).get("slo_bench")
     if slo and slo.get("ok") and slo.get("payload"):

@@ -80,6 +80,26 @@ def write_run_summary(results: dict) -> str:
     return path
 
 
+def write_trace(tracer, name: str = "trace") -> str | None:
+    """Chrome-trace artifact: reports/bench/TRACE_<name>_<utc-stamp>.json.
+
+    Emitted next to the ``BENCH_*.json`` rollups (CI uploads both).  The
+    ``TRACE_`` prefix keeps it out of ``check_regression.py``'s newest-
+    ``BENCH_*`` glob.  Returns the path, or None when the tracer recorded
+    nothing (e.g. disabled).
+    """
+    import datetime
+    if tracer is None or not getattr(tracer, "enabled", False):
+        return None
+    if not tracer.spans():
+        return None
+    stamp = datetime.datetime.now(datetime.timezone.utc).strftime(
+        "%Y%m%dT%H%M%SZ")
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    path = os.path.join(REPORT_DIR, f"TRACE_{name}_{stamp}.json")
+    return tracer.write_chrome_trace(path)
+
+
 def time_call(fn, *args, reps: int = 3, warmup: int = 1, **kw) -> float:
     import jax
     for _ in range(warmup):

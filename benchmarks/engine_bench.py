@@ -35,7 +35,8 @@ def _verify(queries, outcomes):
 
 def engine_throughput(smoke: bool = False):
     from repro.core import CoProcessor
-    from repro.engine import (JoinQueryService, QueryPlanner, make_workload)
+    from repro.engine import (NULL_TRACER, JoinQueryService, QueryPlanner,
+                              make_workload)
 
     if smoke:
         base, n_queries, delta, cal_n = 4096, 10, 0.25, 8192
@@ -49,7 +50,10 @@ def engine_throughput(smoke: bool = False):
 
     # -- 1. mixed-workload throughput ------------------------------------
     planner = QueryPlanner.calibrated(cp, n=cal_n, reps=2, delta=delta)
-    svc = JoinQueryService(cp=cp, planner=planner, num_workers=2)
+    # Throughput is the figure here: run with observability disabled
+    # (the no-op recorder) — the instrumented paths must cost a branch.
+    svc = JoinQueryService(cp=cp, planner=planner, num_workers=2,
+                           tracer=NULL_TRACER)
     workload = make_workload("mixed", num_queries=n_queries,
                              base_tuples=base, seed=bench_seed(7))
     warm = svc.run(workload)          # compile + warm the table cache
@@ -86,7 +90,8 @@ def engine_throughput(smoke: bool = False):
     # path, so pin the algorithm to SHJ (PHJ produces no cacheable table).
     shj_pl = QueryPlanner.calibrated(cp, n=cal_n, reps=1, delta=delta,
                                      allow_phj=False)
-    cold_svc = JoinQueryService(cp=cp, planner=shj_pl, num_workers=0)
+    cold_svc = JoinQueryService(cp=cp, planner=shj_pl, num_workers=0,
+                                tracer=NULL_TRACER)
     first = cold_svc.execute(hot_q)       # compile + populate the cache
     assert not first.cache_hit
     t_cold = time_call(lambda: cold_svc.cache.clear() or
@@ -117,7 +122,8 @@ def engine_throughput(smoke: bool = False):
     def timed_mix(pl_kwargs):
         pl = QueryPlanner.calibrated(cp, n=cal_n, reps=1, delta=delta,
                                      **pl_kwargs)
-        s = JoinQueryService(cp=cp, planner=pl, num_workers=2)
+        s = JoinQueryService(cp=cp, planner=pl, num_workers=2,
+                             tracer=NULL_TRACER)
         s.run(mix)                    # adapt pass 1 (compiles, observes)
         s.run(mix)                    # adapt pass 2 (clean feedback)
         s.run(mix)                    # adapt pass 3 (noise averages out)

@@ -29,7 +29,8 @@ import time
 
 import numpy as np
 
-from .common import N_TUPLES, bench_seed, csv_row, report, time_call
+from .common import (N_TUPLES, bench_seed, csv_row, report, time_call,
+                     write_trace)
 
 
 def _run_verified(executor, query, physical, ref):
@@ -92,11 +93,11 @@ def query_pipeline(smoke: bool = False):
             finally:
                 pl.online.alpha = saved
             stats = svc.stats()
-        return t, stats, last["res"]
+        return t, stats, last["res"], svc.tracer
 
-    t_chosen, st_chosen, res_chosen = timed(chosen)
-    t_worst, _, _ = timed(worst)
-    t_textual, _, _ = timed(textual)
+    t_chosen, st_chosen, res_chosen, tr_chosen = timed(chosen)
+    t_worst, _, _, _ = timed(worst)
+    t_textual, _, _, _ = timed(textual)
     out["join_order"] = {
         "chosen_s": t_chosen, "worst_s": t_worst, "textual_s": t_textual,
         "chosen_est_s": chosen.est_total_s, "worst_est_s": worst.est_total_s,
@@ -109,13 +110,27 @@ def query_pipeline(smoke: bool = False):
             f"slowdown={t_worst/t_chosen:.2f}x")
     csv_row("query/order_textual", t_textual * 1e6, "")
 
+    # -- observability artifacts ------------------------------------------
+    # The chosen run's lifecycle trace (admit → queue → plan →
+    # build/partition → probe/join → gather per stage) lands next to the
+    # rollup as a Perfetto-loadable TRACE_*.json, and the registry
+    # snapshot (including the predicted-vs-measured ``prediction_error``
+    # summary) rides in the payload for the regression gate.
+    out["metrics_snapshot"] = st_chosen["metrics"]
+    out["trace_path"] = write_trace(tr_chosen, "query_pipeline")
+    span_names = {s.name for s in tr_chosen.spans()}
+    assert {"admit", "queue", "plan", "query", "pipeline", "finalize",
+            "gather"} <= span_names, sorted(span_names)
+    assert ({"build", "probe"} <= span_names
+            or {"partition", "join"} <= span_names), sorted(span_names)
+
     # -- 2. fused device-resident hand-off vs host materialization --------
     # The SAME chosen physical plan, executed under both data paths.  The
     # fused path's intermediates never cross the host: its service-level
     # host_bytes_moved counter must read 0 (hard invariant, asserted in
     # smoke and at scale); the host path reports the actual gather +
     # re-upload volume its stages moved.
-    t_host, st_host, res_host = timed(chosen, handoff="host")
+    t_host, st_host, res_host, _ = timed(chosen, handoff="host")
     fused_bytes = st_chosen["host_bytes_moved"]
     host_bytes = st_host["host_bytes_moved"]
     assert fused_bytes == 0, \
@@ -144,8 +159,8 @@ def query_pipeline(smoke: bool = False):
         cp, n=cal_n, reps=1, delta=delta,
         allowed_schemes=("GPU_ONLY",), allow_phj=False)
     single_opt = JoinOrderOptimizer(single_planner)
-    t_single, _, _ = timed(single_opt.optimize(query),
-                           use_planner=single_planner)
+    t_single, _, _, _ = timed(single_opt.optimize(query),
+                              use_planner=single_planner)
     out["single_device"] = {"gpu_only_s": t_single,
                             "coproc_vs_single": t_single / t_chosen}
     csv_row("query/single_device", t_single * 1e6,

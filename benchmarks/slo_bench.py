@@ -47,7 +47,7 @@ def _replay(svc, events):
     for ev in events:                 # reset admission-time mutations
         ev.query.deadline_at = None
         ev.query.degraded = False
-    waiters, sheds, malformed = [], [], 0
+    waiters, malformed = [], 0
     t0 = time.perf_counter()
     for ev in events:
         lag = ev.at_s - (time.perf_counter() - t0)
@@ -55,17 +55,20 @@ def _replay(svc, events):
             time.sleep(lag)
         try:
             waiters.append((ev, svc.submit(ev.query, block=False)))
-        except Backpressure as e:
-            sheds.append((ev, e))
+        except Backpressure:
+            pass                      # structured record lands in metrics
         except Exception:
             malformed += 1            # a shed that was NOT structured
     done = []
     for ev, w in waiters:
         done.append((ev, w()))
-    return done, sheds, malformed
+    return done, malformed
 
 
-def _metrics(events, done, sheds, malformed):
+def _metrics(events, done, malformed, admission_events):
+    """Per-tenant rollup.  Shed accounting comes from the service's
+    structured ``admission`` event records (the registry ring), not from
+    re-deriving reasons out of caught ``Backpressure`` exceptions."""
     from repro.engine import jain_index
 
     total = len(events)
@@ -80,11 +83,14 @@ def _metrics(events, done, sheds, malformed):
         p["latencies"].append(out.queued_s + out.wall_s)
         if out.deadline_hit:
             p["hits"] += 1
-    for ev, err in sheds:
-        per[ev.tenant]["shed"] += 1
+    sheds = [e for e in admission_events
+             if e.get("action") in ("shed", "reject")]
+    for e in sheds:
+        if e.get("tenant") in per:
+            per[e["tenant"]]["shed"] += 1
     structured = all(
-        err.reason in ("deadline", "queue_full")
-        and err.retry_after_s > 0.0 for _, err in sheds)
+        e.get("reason") in ("deadline", "queue_full")
+        and float(e.get("retry_after_s") or 0.0) > 0.0 for e in sheds)
     tenants = {}
     for t, p in per.items():
         n = max(p["submitted"], 1)
@@ -162,12 +168,18 @@ def slo_bench(smoke: bool = False):
         svc = JoinQueryService(cp=cp, planner=planner, num_workers=2,
                                max_queue=max(4 * n_queries, 256),
                                tenants=list(tenants), admission_mode=mode)
-        done, sheds, malformed = _replay(svc, events)
-        results[mode] = _metrics(events, done, sheds, malformed)
+        done, malformed = _replay(svc, events)
+        st = svc.stats()
+        results[mode] = _metrics(events, done, malformed,
+                                 svc.metrics.events("admission"))
         results[mode]["service_stats"] = {
-            k: svc.stats()[k]
+            k: st[k]
             for k in ("admitted", "rejected", "shed", "degraded",
                       "completed", "failed")}
+        # Per-tenant predicted-vs-measured error (p50/p95 ratio) from the
+        # cost-model audit trail — ROADMAP item 1's raw material.
+        results[mode]["prediction_error"] = st["metrics"].get(
+            "prediction_error")
         svc.close()
         csv_row(f"slo/{mode}", 1e6 * mean_s,
                 f"hit_rate={results[mode]['deadline_hit_rate']:.2f};"
@@ -180,5 +192,6 @@ def slo_bench(smoke: bool = False):
         results["cost"]["deadline_hit_rate"]
         >= results["fifo"]["deadline_hit_rate"])
     out["sheds_structured"] = bool(results["cost"]["sheds_structured"])
+    out["prediction_error"] = results["cost"]["prediction_error"]
     report("slo_bench", out)
     return out

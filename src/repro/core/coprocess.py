@@ -24,6 +24,7 @@ Build-table modes (§3.3):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import os
@@ -53,6 +54,34 @@ class Timing:
     transfer_s: float = 0.0
     merge_s: float = 0.0
     notes: dict = dataclasses.field(default_factory=dict)
+    # Observability hook: phases timed through ``phase()`` also emit
+    # tracer spans (nested under whatever query span the calling thread
+    # has open).  ``None``/disabled tracer keeps the old perf_counter
+    # behavior with no extra work.  Excluded from equality/repr — two
+    # timings are the same measurement regardless of who observed them.
+    tracer: object = dataclasses.field(default=None, repr=False,
+                                       compare=False)
+
+    @contextlib.contextmanager
+    def phase(self, name: str, **attrs):
+        """Time a phase into ``phase_s[name]`` (and span it when traced).
+
+        Phase seconds always come from ``time.perf_counter`` — the
+        tracer's (possibly fake) clock only stamps the span — so cost-
+        model feedback stays on real time even under test clocks.
+        """
+        tracer = self.tracer
+        traced = tracer is not None and getattr(tracer, "enabled", False)
+        if traced:
+            ctx = tracer.span(name, **attrs)
+        else:
+            ctx = contextlib.nullcontext()
+        with ctx:
+            t0 = time.perf_counter()
+            try:
+                yield self
+            finally:
+                self.phase_s[name] = time.perf_counter() - t0
 
     def to_dict(self) -> dict:
         """JSON-serializable view (machine-readable bench artifacts)."""
@@ -117,7 +146,13 @@ class CoProcessor:
 
     def __init__(self, c_devices=None, g_devices=None, *,
                  link: LinkSpec = ZEROCOPY_LINK, discrete: bool = False,
-                 ratio_quantum: int = 64):
+                 ratio_quantum: int = 64, tracer=None):
+        # Observability: phase timings flow through ``Timing.phase`` and
+        # emit spans on this tracer.  The default is the shared no-op
+        # recorder, so a standalone CoProcessor pays one branch per
+        # phase; ``JoinQueryService`` swaps in its real tracer.
+        from repro.obs import NULL_TRACER
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         devs = jax.devices()
         if c_devices is None or g_devices is None:
             want_c = os.environ.get("REPRO_C_DEVICES")
@@ -286,12 +321,11 @@ class CoProcessor:
         The engine's build-table cache keeps this output resident so later
         probes against the same build relation skip the phase entirely (the
         paper's cache-reuse insight lifted to the query level)."""
-        timing = timing or Timing()
+        timing = timing or Timing(tracer=self.tracer)
         build_rel = self.pad_relation(build_rel, self.BUILD_PAD_KEY)
-        t0 = time.perf_counter()
-        table = self._build(build_rel, num_buckets, ratios, table_mode,
-                            timing)
-        timing.phase_s["build"] = time.perf_counter() - t0
+        with timing.phase("build", n=build_rel.size):
+            table = self._build(build_rel, num_buckets, ratios, table_mode,
+                                timing)
         return table, timing
 
     def probe_table(self, probe_rel: Relation, table: ht.HashTable, *,
@@ -305,13 +339,12 @@ class CoProcessor:
         join-variant emissions in ``repro.ops.join_variants`` route
         through here); ``tag`` keys the jit cache per kernel family.
         """
-        timing = timing or Timing()
+        timing = timing or Timing(tracer=self.tracer)
         probe_rel = self.pad_relation(probe_rel, self.PROBE_PAD_KEY)
-        t0 = time.perf_counter()
-        result = self._probe(probe_rel, table, max_out, ratios, timing,
-                             probe_fn=probe_fn, tag=tag)
-        jax.block_until_ready(result.probe_rid)
-        timing.phase_s["probe"] = time.perf_counter() - t0
+        with timing.phase("probe", n=probe_rel.size):
+            result = self._probe(probe_rel, table, max_out, ratios, timing,
+                                 probe_fn=probe_fn, tag=tag)
+            jax.block_until_ready(result.probe_rid)
         if not timing.wall_s:
             timing.wall_s = timing.phase_s.get("build", 0.0) + \
                 timing.phase_s["probe"]
@@ -505,7 +538,7 @@ class PhjCoProcessorMixin:
         from .phj import resolve_schedule
         from .relation import radix_of
 
-        timing = Timing()
+        timing = Timing(tracer=self.tracer)
         sched = resolve_schedule(build_rel.size, bits_per_pass=bits_per_pass,
                                  num_passes=num_passes, schedule=schedule,
                                  planner=planner)
@@ -513,90 +546,88 @@ class PhjCoProcessorMixin:
         timing.notes["schedule"] = list(sched)
         build_rel = self.pad_relation(build_rel, self.BUILD_PAD_KEY)
         probe_rel = self.pad_relation(probe_rel, self.PROBE_PAD_KEY)
-        t0 = time.perf_counter()
 
         def part_fn(rel):
             return radix_partition_scheduled(rel, schedule=sched).rel
 
-        parts = {}
-        if build_parts is not None:
-            parts["R"] = build_parts
-            timing.notes["build_parts_reused"] = True
-        if probe_parts is not None:
-            parts["S"] = probe_parts
-            timing.notes["probe_parts_reused"] = True
-        todo = [(tag, rel) for tag, rel in (("R", build_rel),
-                                            ("S", probe_rel))
-                if tag not in parts]
-        for tag, rel in todo:
-            n = rel.size
-            cut = self._cut(n, partition_ratio)
-            if self.discrete and 0 < cut < n:
-                self._bus_delay((n - cut) * 8, timing)
-            pieces = []
-            if cut > 0:
-                f = self.c.jit(("phj_part", tag, cut, sched), part_fn)
-                pieces.append(f(self.c.put_items(rel.take(0, cut))))
-            if cut < n:
-                f = self.g.jit(("phj_part", tag, n - cut, sched), part_fn)
-                pieces.append(f(self.g.put_items(rel.take(cut, n))))
-            pieces = [jax.tree.map(jax.device_get, x) for x in pieces]
-            parts[tag] = Relation(
-                jnp.concatenate([x.rid for x in pieces]),
-                jnp.concatenate([x.key for x in pieces]))
-        if parts_out is not None:
-            for tag, _ in todo:
-                parts_out[tag] = parts[tag]
-        t1 = time.perf_counter()
-        timing.phase_s["partition"] = t1 - t0
+        with timing.phase("partition", passes=len(sched)):
+            parts = {}
+            if build_parts is not None:
+                parts["R"] = build_parts
+                timing.notes["build_parts_reused"] = True
+            if probe_parts is not None:
+                parts["S"] = probe_parts
+                timing.notes["probe_parts_reused"] = True
+            todo = [(tag, rel) for tag, rel in (("R", build_rel),
+                                                ("S", probe_rel))
+                    if tag not in parts]
+            for tag, rel in todo:
+                n = rel.size
+                cut = self._cut(n, partition_ratio)
+                if self.discrete and 0 < cut < n:
+                    self._bus_delay((n - cut) * 8, timing)
+                pieces = []
+                if cut > 0:
+                    f = self.c.jit(("phj_part", tag, cut, sched), part_fn)
+                    pieces.append(f(self.c.put_items(rel.take(0, cut))))
+                if cut < n:
+                    f = self.g.jit(("phj_part", tag, n - cut, sched),
+                                   part_fn)
+                    pieces.append(f(self.g.put_items(rel.take(cut, n))))
+                pieces = [jax.tree.map(jax.device_get, x) for x in pieces]
+                parts[tag] = Relation(
+                    jnp.concatenate([x.rid for x in pieces]),
+                    jnp.concatenate([x.key for x in pieces]))
+            if parts_out is not None:
+                for tag, _ in todo:
+                    parts_out[tag] = parts[tag]
 
-        # Ownership exchange: partitions [0, own) -> C, rest -> G.
-        num_parts = 1 << total_bits
-        own = self._cut(num_parts, join_ratio)
-        results = []
-        for grp, sel in ((self.c, lambda pid: pid < own),
-                         (self.g, lambda pid: pid >= own)):
-            if (own == 0 and grp is self.c) or (own == num_parts
-                                                and grp is self.g):
-                continue
-            sub = {}
-            for tag in ("R", "S"):
-                rel = parts[tag]
-                pid = radix_of(rel.key, shift=0, bits=total_bits)
-                mask = np.asarray(sel(pid))
-                idx = np.nonzero(mask)[0]
-                m = _round_up(max(len(idx), 1), self.lcm)
-                sent = (self.BUILD_PAD_KEY if tag == "R"
-                        else self.PROBE_PAD_KEY)
-                rid = np.full(m, -1, np.int32)
-                key = np.full(m, sent, np.int32)
-                rid[:len(idx)] = np.asarray(rel.rid)[idx]
-                key[:len(idx)] = np.asarray(rel.key)[idx]
-                if self.discrete:
-                    self._bus_delay(len(idx) * 8 // 2, timing)
-                sub[tag] = grp.put_items(Relation(jnp.asarray(rid),
-                                                  jnp.asarray(key)))
-            # Full capacity per group: partition ownership is by radix
-            # value, so a skewed relation's hot partition (and all its
-            # matches) can land wholly on either side regardless of
-            # join_ratio — proportional caps would truncate it.
-            mo = _round_up(max_out, 8) + 64
-            f = grp.jit(("phj_join", sub["R"].size, sub["S"].size, mo),
-                        partial(_phj_owned_join, total_bits=total_bits,
-                                shj_bits=shj_bits, max_out=mo))
-            results.append(f(sub["R"], sub["S"]))
-        results = [jax.tree.map(jax.device_get, r) for r in results]
-        if len(results) == 1:
-            out = results[0]
-        else:
-            fcat = self.c.jit(
-                ("concat", tuple(r.probe_rid.shape[0] for r in results),
-                 max_out), partial(concat_results, max_out=max_out))
-            out = fcat([self.c.put_shared(r) for r in results])
-        jax.block_until_ready(out.probe_rid)
-        t2 = time.perf_counter()
-        timing.phase_s["join"] = t2 - t1
-        timing.wall_s = t2 - t0
+        with timing.phase("join"):
+            # Ownership exchange: partitions [0, own) -> C, rest -> G.
+            num_parts = 1 << total_bits
+            own = self._cut(num_parts, join_ratio)
+            results = []
+            for grp, sel in ((self.c, lambda pid: pid < own),
+                             (self.g, lambda pid: pid >= own)):
+                if (own == 0 and grp is self.c) or (own == num_parts
+                                                    and grp is self.g):
+                    continue
+                sub = {}
+                for tag in ("R", "S"):
+                    rel = parts[tag]
+                    pid = radix_of(rel.key, shift=0, bits=total_bits)
+                    mask = np.asarray(sel(pid))
+                    idx = np.nonzero(mask)[0]
+                    m = _round_up(max(len(idx), 1), self.lcm)
+                    sent = (self.BUILD_PAD_KEY if tag == "R"
+                            else self.PROBE_PAD_KEY)
+                    rid = np.full(m, -1, np.int32)
+                    key = np.full(m, sent, np.int32)
+                    rid[:len(idx)] = np.asarray(rel.rid)[idx]
+                    key[:len(idx)] = np.asarray(rel.key)[idx]
+                    if self.discrete:
+                        self._bus_delay(len(idx) * 8 // 2, timing)
+                    sub[tag] = grp.put_items(Relation(jnp.asarray(rid),
+                                                      jnp.asarray(key)))
+                # Full capacity per group: partition ownership is by radix
+                # value, so a skewed relation's hot partition (and all its
+                # matches) can land wholly on either side regardless of
+                # join_ratio — proportional caps would truncate it.
+                mo = _round_up(max_out, 8) + 64
+                f = grp.jit(("phj_join", sub["R"].size, sub["S"].size, mo),
+                            partial(_phj_owned_join, total_bits=total_bits,
+                                    shj_bits=shj_bits, max_out=mo))
+                results.append(f(sub["R"], sub["S"]))
+            results = [jax.tree.map(jax.device_get, r) for r in results]
+            if len(results) == 1:
+                out = results[0]
+            else:
+                fcat = self.c.jit(
+                    ("concat", tuple(r.probe_rid.shape[0] for r in results),
+                     max_out), partial(concat_results, max_out=max_out))
+                out = fcat([self.c.put_shared(r) for r in results])
+            jax.block_until_ready(out.probe_rid)
+        timing.wall_s = timing.phase_s["partition"] + timing.phase_s["join"]
         return out, timing
 
     # ------------------------------------------------------------------

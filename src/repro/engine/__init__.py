@@ -15,7 +15,13 @@ resident build tables across queries.
     within, cost-priced shed/degrade with structured ``Backpressure``
   * ``open_loop`` — open-loop traffic simulation (Poisson/burst arrivals,
     tenant mixes, hot-tenant skew) for the ``slo_bench`` benchmark
+  * ``Tracer`` / ``MetricsRegistry`` / ``CostAudit`` (re-exported from
+    ``repro.obs``) — query-lifecycle spans, the labeled-counter registry
+    behind ``stats()``, and the predicted-vs-measured cost-model audit
 """
+from repro.obs import (CostAudit, MetricsRegistry, NULL_TRACER, NullTracer,
+                       Tracer)
+
 from .admission import (AdmissionController, AdmissionDecision,
                         Backpressure, Tenant, TenantFairQueue, jain_index)
 from .planner import (EXECUTABLE_SCHEMES, SCHEMES, QueryPlan, QueryPlanner)

@@ -95,6 +95,15 @@ class AdmissionDecision:
     predicted_s: float            # predicted completion, relative seconds
     retry_after_s: float = 0.0
 
+    def to_dict(self) -> dict:
+        """Structured-event payload: the service emits every shed/degrade
+        into its ``MetricsRegistry`` so consumers (``slo_bench``) read
+        decisions from metrics instead of re-deriving them from raised
+        ``Backpressure`` exceptions."""
+        return {"action": self.action,
+                "predicted_s": float(self.predicted_s),
+                "retry_after_s": float(self.retry_after_s)}
+
 
 @dataclasses.dataclass
 class _Entry:

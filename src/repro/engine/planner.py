@@ -619,32 +619,58 @@ class QueryPlanner:
         return plan
 
     # -- feedback (satellite: close the calibration loop online) -----------
-    def observe(self, plan: QueryPlan, timing) -> None:
-        """Fold one executed query's measured phase times back in."""
+    @staticmethod
+    def phase_pairs(plan: QueryPlan, timing
+                    ) -> list[tuple[str, str, float, float]]:
+        """``(phase, scheme, est_s, measured_s)`` pairs for one executed
+        plan — the phases the plan actually priced, matched against the
+        ``Timing`` the executor measured.  This is the single source of
+        truth for both the online calibration feedback (``observe``) and
+        the cost-model audit trail (``repro.obs.CostAudit``)."""
         phases = timing.phase_s
         if plan.algorithm == "groupby":
+            pairs = []
             if plan.schedule:
-                self.online.observe("groupby_partition", plan.est_build_s,
-                                    phases.get("partition", 0.0))
-            tag = ("groupby_agg:DD_part" if plan.schedule
-                   else f"groupby_agg:{plan.scheme}")
-            self.online.observe(tag, plan.est_probe_s,
-                                phases.get("agg", 0.0))
-        elif plan.algorithm == "phj":
-            self.online.observe("phj_partition", plan.est_build_s,
-                                phases.get("partition", 0.0))
-            self.online.observe("phj_join", plan.est_probe_s,
-                                phases.get("join", 0.0))
-        else:
-            if not plan.cached:
-                self.online.observe(f"shj_build:{plan.scheme}",
-                                    plan.est_build_s,
-                                    phases.get("build", 0.0))
-            probe_tag = ("shj_probe" if plan.kind == "inner"
-                         else f"shj_probe[{plan.kind}]")
-            self.online.observe(f"{probe_tag}:{plan.scheme}",
-                                plan.est_probe_s,
-                                phases.get("probe", 0.0))
+                pairs.append(("partition", plan.scheme, plan.est_build_s,
+                              phases.get("partition", 0.0)))
+            pairs.append(("agg", plan.scheme, plan.est_probe_s,
+                          phases.get("agg", 0.0)))
+            return pairs
+        if plan.algorithm == "phj":
+            return [("partition", plan.scheme, plan.est_build_s,
+                     phases.get("partition", 0.0)),
+                    ("join", plan.scheme, plan.est_probe_s,
+                     phases.get("join", 0.0))]
+        pairs = []
+        if not plan.cached:
+            pairs.append(("build", plan.scheme, plan.est_build_s,
+                          phases.get("build", 0.0)))
+        pairs.append(("probe", plan.scheme, plan.est_probe_s,
+                      phases.get("probe", 0.0)))
+        return pairs
+
+    @staticmethod
+    def _online_tag(plan: QueryPlan, phase: str) -> str:
+        """The unit-cost series a (plan, phase) pair calibrates."""
+        if plan.algorithm == "groupby":
+            if phase == "partition":
+                return "groupby_partition"
+            return ("groupby_agg:DD_part" if plan.schedule
+                    else f"groupby_agg:{plan.scheme}")
+        if plan.algorithm == "phj":
+            return "phj_partition" if phase == "partition" else "phj_join"
+        if phase == "build":
+            return f"shj_build:{plan.scheme}"
+        probe_tag = ("shj_probe" if plan.kind == "inner"
+                     else f"shj_probe[{plan.kind}]")
+        return f"{probe_tag}:{plan.scheme}"
+
+    def observe(self, plan: QueryPlan, timing) -> None:
+        """Fold one executed query's measured phase times back in."""
+        for phase, _scheme, est_s, measured_s in self.phase_pairs(plan,
+                                                                  timing):
+            self.online.observe(self._online_tag(plan, phase), est_s,
+                                measured_s)
 
     def stats(self) -> dict:
         with self._lock:

@@ -35,6 +35,7 @@ import time
 
 from repro.core.coprocess import CoProcessor, Timing
 from repro.core.hash_table import JoinResult, default_num_buckets
+from repro.obs import CostAudit, MetricsRegistry, NULL_TRACER, Tracer
 
 from .admission import (AdmissionController, Backpressure, QueueFull,
                         Tenant, TenantFairQueue)
@@ -119,6 +120,12 @@ class QueryOutcome:
     # host-materialize path.  Engine-internal movement (group splits,
     # concats) is tracked separately by Timing.transfer_bytes.
     host_bytes_moved: int = 0
+    # Structured per-query trace: the span dicts recorded for this
+    # execution (admit -> queue -> plan -> phases), in completion order.
+    # None when the service's tracer is disabled.  Deliberately excluded
+    # from to_dict() — bench rollups aggregate thousands of outcomes and
+    # the Chrome-trace artifact already carries the spans.
+    trace: list | None = None
 
     def to_dict(self) -> dict:
         """Everything a bench rollup needs to segment latency by plan type
@@ -256,12 +263,27 @@ class JoinQueryService:
                  priority_aging_s: float = 5.0,
                  tenants=None, admission_mode: str = "cost",
                  max_deferred: int | None = None,
-                 clock=time.monotonic):
+                 clock=time.monotonic,
+                 tracer: Tracer | None = None,
+                 metrics: MetricsRegistry | None = None):
         self.cp = cp or CoProcessor()
         self.planner = planner or QueryPlanner()
         self.cache = BuildTableCache(cache_budget_bytes)
         self.num_workers = int(num_workers)
         self._clock = clock
+        # Observability: spans (query lifecycle), a metrics registry (all
+        # service counters live there — one lock, one coherent snapshot),
+        # and the predicted-vs-measured cost-model audit trail.  Pass
+        # ``tracer=NULL_TRACER`` to run with tracing disabled.
+        self.tracer = tracer if tracer is not None else Tracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.audit = CostAudit()
+        # A CoProcessor constructed standalone carries the no-op tracer;
+        # adopt it into this service's tracer so its phase spans land in
+        # the query lifecycle.  An explicitly-traced CoProcessor is left
+        # alone.
+        if getattr(self.cp, "tracer", None) is NULL_TRACER:
+            self.cp.tracer = self.tracer
         # Deadline-aware multi-tenant admission: the controller prices
         # admit/degrade/shed decisions from planner estimates; the queue
         # serves tenants weighted-fair, EDF within each.  ``fifo`` mode is
@@ -292,31 +314,67 @@ class JoinQueryService:
         # tuple on every repeat would tax exactly the queries the cache
         # makes cheap.  Held references keep the ids stable; bounded FIFO.
         self._fp_cache: dict = {}
-        self.admitted = 0
-        self.rejected = 0
-        self.completed = 0
-        self.failed = 0
-        self.shed = 0
-        self.degraded = 0
-        self._tenant_stats: dict[str, dict] = {}
-        # H2D + D2H bytes callers moved for query intermediates (the
-        # pipeline executor reports its stage hand-offs here; ~0 when the
-        # fused device-resident path is in effect).
-        self.host_bytes_moved = 0
+        # Service counters live in the metrics registry (per-tenant
+        # labeled series; ``stats()`` reads them back in one snapshot).
+        # Point-in-time views of components are registered as collectors
+        # so the same snapshot carries queue depth, cache and planner
+        # state, calibration version ticks and the audit summary.
+        self.cache.register_metrics(self.metrics)
+        self.metrics.register_collector("queue_depth",
+                                        lambda: len(self._queue))
+        self.metrics.register_collector("planner", self.planner.stats)
+        self.metrics.register_collector(
+            "calibration_version", lambda: int(self.planner.online.version))
+        self.metrics.register_collector("prediction_error",
+                                        self.audit.summary)
+        # Pre-seed so snapshot()["host_bytes_moved"] is always present —
+        # the fused data path's whole point is to never increment it.
+        self.metrics.inc("host_bytes_moved", 0)
 
-    def _tstats(self, name: str) -> dict:
-        """Per-tenant counters (call under ``self._lock``)."""
-        st = self._tenant_stats.get(name)
-        if st is None:
-            st = self._tenant_stats[name] = {
-                "admitted": 0, "rejected": 0, "shed": 0, "degraded": 0,
-                "completed": 0, "deadline_hits": 0, "deadline_misses": 0}
-        return st
+    # Per-tenant counter names mirrored into the registry (and the exact
+    # key set ``stats()["tenants"][t]`` has always exposed).
+    _TENANT_COUNTERS = ("admitted", "rejected", "shed", "degraded",
+                        "completed", "deadline_hits", "deadline_misses")
+
+    def _count(self, name: str, tenant: str | None = None) -> None:
+        """Bump a service counter (and its per-tenant series).
+
+        Never called under ``self._lock`` — the registry lock is a leaf
+        lock (see ``MetricsRegistry``), which is what makes ``stats()``
+        one coherent pass instead of the old counters-then-components
+        split."""
+        if tenant is None:
+            self.metrics.inc(name)
+        else:
+            self.metrics.inc(name, tenant=tenant)
+
+    def _admission_event(self, action: str, bp: Backpressure) -> None:
+        """Persist one shed/reject decision: bump its counter and emit a
+        structured event (reason, predicted_s, deadline_s,
+        retry_after_s) into the registry plus an instant into the trace,
+        so consumers read admission decisions from metrics instead of
+        re-deriving them from raised ``Backpressure`` exceptions."""
+        self._count("shed" if action == "shed" else "rejected", bp.tenant)
+        self.metrics.event("admission", action=action, **bp.to_dict())
+        self.tracer.instant(action, tenant=bp.tenant,
+                            query_id=bp.query_id, reason=bp.reason)
+
+    # Read-only counter views (the attribute API the service always had).
+    def _counter_total(self, name: str) -> int:
+        return int(self.metrics.counter_value(name))
+
+    admitted = property(lambda self: self._counter_total("admitted"))
+    rejected = property(lambda self: self._counter_total("rejected"))
+    completed = property(lambda self: self._counter_total("completed"))
+    failed = property(lambda self: self._counter_total("failed"))
+    shed = property(lambda self: self._counter_total("shed"))
+    degraded = property(lambda self: self._counter_total("degraded"))
+    host_bytes_moved = property(
+        lambda self: self._counter_total("host_bytes_moved"))
 
     def note_host_bytes(self, nbytes: int) -> None:
         """Record caller-side host-boundary traffic for intermediates."""
-        with self._lock:
-            self.host_bytes_moved += int(nbytes)
+        self.metrics.inc("host_bytes_moved", int(nbytes))
 
     def _fingerprint(self, rel, num_buckets: int) -> str:
         memo_key = (id(rel.rid), id(rel.key), num_buckets)
@@ -346,6 +404,25 @@ class JoinQueryService:
             return self._execute_groupby(q, queued_s)
         return self._execute_join(q, queued_s)
 
+    def _obs_begin(self, q):
+        """Allocate the query's trace correlation key (``q_key``) and
+        retro-record its queue-wait lane span (``_obs_enq`` was stamped
+        at submit on the tracer clock; queue wait starts on the caller's
+        thread and ends on a worker's, so it cannot nest on either
+        thread's stack — it becomes an async lane interval)."""
+        tr = self.tracer
+        if not tr.enabled:
+            return None
+        key = getattr(q, "_obs_key", None)
+        if key is None:
+            key = q._obs_key = tr.next_key()
+        enq = getattr(q, "_obs_enq", None)
+        if enq is not None:
+            q._obs_enq = None
+            tr.lane("queue", enq, tr.now(), q_key=key,
+                    query_id=q.query_id, tenant=q.tenant, tag=q.tag)
+        return key
+
     def _finish_outcome(self, q) -> bool | None:
         """Completion bookkeeping: totals, per-tenant counts, deadline
         verdict (measured on the service clock the deadline was stamped
@@ -353,18 +430,44 @@ class JoinQueryService:
         deadline_hit = None
         if q.deadline_at is not None:
             deadline_hit = bool(self._clock() <= q.deadline_at)
-        with self._lock:
-            self.completed += 1
-            ts = self._tstats(q.tenant)
-            ts["completed"] += 1
-            if deadline_hit is True:
-                ts["deadline_hits"] += 1
-            elif deadline_hit is False:
-                ts["deadline_misses"] += 1
+        self._count("completed", q.tenant)
+        if deadline_hit is True:
+            self._count("deadline_hits", q.tenant)
+        elif deadline_hit is False:
+            self._count("deadline_misses", q.tenant)
         return deadline_hit
 
     def _execute_join(self, q: JoinQuery,
                       queued_s: float = 0.0) -> QueryOutcome:
+        obs_key = self._obs_begin(q)
+        with self.tracer.span("query", q_key=obs_key, query_id=q.query_id,
+                              tenant=q.tenant, tag=q.tag,
+                              kind=q.kind) as qspan:
+            result, plan, timing, flags = self._run_join(q, qspan)
+        # Audit EVERY executed plan (phase, scheme, est_s, measured_s):
+        # calibration's warm/solo gating filters out contended samples,
+        # but measuring how wrong the solo-time estimate was *under
+        # contention* is exactly the audit's job.
+        self.audit.record(self.planner.phase_pairs(plan, timing),
+                          tenant=q.tenant, query_id=q.query_id)
+        deadline_hit = self._finish_outcome(q)
+        cache_hit, partition_hit, probe_partition_hit, wall = flags
+        outcome = QueryOutcome(q.query_id, q.tag, plan, timing, cache_hit,
+                               queued_s, wall, result,
+                               partition_cache_hit=partition_hit,
+                               probe_partition_cache_hit=probe_partition_hit,
+                               priority=q.priority, tenant=q.tenant,
+                               degraded=q.degraded,
+                               deadline_at=q.deadline_at,
+                               deadline_hit=deadline_hit)
+        if obs_key is not None:
+            outcome.trace = self.tracer.spans_for(obs_key)
+        return outcome
+
+    def _run_join(self, q: JoinQuery, qspan=None):
+        """Plan + execute one join (the body of ``_execute_join``, run
+        inside its query span).  Returns ``(result, plan, timing,
+        (cache_hit, partition_hit, probe_partition_hit, wall_s))``."""
         t0 = time.perf_counter()
         build_n, probe_n = q.build.size, q.probe.size
         # ``is None`` (not falsy) — an explicit max_out=0 is a legitimate
@@ -379,17 +482,21 @@ class JoinQueryService:
             seen = key in self._seen_fingerprints
             self._seen_fingerprints.add(key)
             c_load, g_load = self._loads["C"], self._loads["G"]
-        if q.degraded:
-            # Deadline-degraded: admission promised the cheapest plan.
-            plan = self.planner.choose_degraded(
-                build_n, probe_n, max_out=max_out,
-                cached=table is not None, kind=q.kind)
-        else:
-            plan = self.planner.choose(build_n, probe_n, max_out=max_out,
-                                       cached=table is not None,
-                                       expect_reuse=seen and table is None,
-                                       c_load=c_load, g_load=g_load,
-                                       kind=q.kind)
+        with self.tracer.span("plan"):
+            if q.degraded:
+                # Deadline-degraded: admission promised the cheapest plan.
+                plan = self.planner.choose_degraded(
+                    build_n, probe_n, max_out=max_out,
+                    cached=table is not None, kind=q.kind)
+            else:
+                plan = self.planner.choose(
+                    build_n, probe_n, max_out=max_out,
+                    cached=table is not None,
+                    expect_reuse=seen and table is None,
+                    c_load=c_load, g_load=g_load, kind=q.kind)
+        if qspan is not None:
+            # Ambient for the phase spans opened below on this thread.
+            qspan.set(algorithm=plan.algorithm, scheme=plan.scheme)
         share = plan.c_share
         with self._lock:
             self._loads["C"] += plan.est_s * share
@@ -414,7 +521,7 @@ class JoinQueryService:
             cache_hit = table is not None and plan.cached
             if cache_hit:
                 self.cache.get(key)   # record the hit + LRU touch
-                timing = Timing()
+                timing = Timing(tracer=self.cp.tracer)
                 timing.phase_s["build"] = 0.0
                 result, timing = probe_table_variant(
                     self.cp, q.probe, table, kind=q.kind, max_out=max_out,
@@ -502,26 +609,41 @@ class JoinQueryService:
                 and not probe_partition_hit and big_enough):
             self.planner.observe(plan, timing)
         wall = time.perf_counter() - t0
-        deadline_hit = self._finish_outcome(q)
-        return QueryOutcome(q.query_id, q.tag, plan, timing, cache_hit,
-                            queued_s, wall, result,
-                            partition_cache_hit=partition_hit,
-                            probe_partition_cache_hit=probe_partition_hit,
-                            priority=q.priority, tenant=q.tenant,
-                            degraded=q.degraded,
-                            deadline_at=q.deadline_at,
-                            deadline_hit=deadline_hit)
+        return result, plan, timing, (cache_hit, partition_hit,
+                                      probe_partition_hit, wall)
 
     # -- group-by aggregation (ops subsystem) --------------------------------
     def _execute_groupby(self, q: GroupByQuery,
                          queued_s: float = 0.0) -> QueryOutcome:
         """Plan + run one group-by under the same locks/feedback regime."""
+        obs_key = self._obs_begin(q)
+        with self.tracer.span("query", q_key=obs_key, query_id=q.query_id,
+                              tenant=q.tenant, tag=q.tag,
+                              kind="groupby") as qspan:
+            result, plan, timing, wall = self._run_groupby(q, qspan)
+        self.audit.record(self.planner.phase_pairs(plan, timing),
+                          tenant=q.tenant, query_id=q.query_id)
+        deadline_hit = self._finish_outcome(q)
+        outcome = QueryOutcome(q.query_id, q.tag, plan, timing, False,
+                               queued_s, wall, result, priority=q.priority,
+                               tenant=q.tenant, degraded=q.degraded,
+                               deadline_at=q.deadline_at,
+                               deadline_hit=deadline_hit)
+        if obs_key is not None:
+            outcome.trace = self.tracer.spans_for(obs_key)
+        return outcome
+
+    def _run_groupby(self, q: GroupByQuery, qspan=None):
         from repro.ops.groupby import groupby_coprocessed
         t0 = time.perf_counter()
         n = q.keys.size
         with self._lock:
             c_load, g_load = self._loads["C"], self._loads["G"]
-        plan = self.planner.choose_groupby(n, c_load=c_load, g_load=g_load)
+        with self.tracer.span("plan"):
+            plan = self.planner.choose_groupby(n, c_load=c_load,
+                                               g_load=g_load)
+        if qspan is not None:
+            qspan.set(algorithm=plan.algorithm, scheme=plan.scheme)
         share = plan.c_share
         with self._lock:
             self._loads["C"] += plan.est_s * share
@@ -561,12 +683,7 @@ class JoinQueryService:
         if warmed and solo and big_enough:
             self.planner.observe(plan, timing)
         wall = time.perf_counter() - t0
-        deadline_hit = self._finish_outcome(q)
-        return QueryOutcome(q.query_id, q.tag, plan, timing, False,
-                            queued_s, wall, result, priority=q.priority,
-                            tenant=q.tenant, degraded=q.degraded,
-                            deadline_at=q.deadline_at,
-                            deadline_hit=deadline_hit)
+        return result, plan, timing, wall
 
     # -- admission + workers -------------------------------------------------
     def _ensure_workers(self):
@@ -593,8 +710,7 @@ class JoinQueryService:
                 # re-raising this exception must not count it again.
                 e._svc_failure_counted = True
                 box["error"] = e
-                with self._lock:
-                    self.failed += 1
+                self._count("failed")
             finally:
                 done.set()
                 self._queue.task_done()
@@ -680,59 +796,70 @@ class JoinQueryService:
         decision — pipeline stages whose root already passed admission.
         """
         self._ensure_workers()
-        est, c_share = self._admission_estimate(q)
         tenant = q.tenant or "default"
-        now = self._clock()
-        self._stamp_deadline(q, now)
-        if (not preadmitted and self.admission.mode == "cost"
-                and q.deadline_at is not None):
-            inflight, active_w = self._admission_snapshot(tenant)
-            decision = self.admission.decide(
-                tenant, est_s=est, deadline_s=q.deadline_at - now,
-                degraded_est_fn=lambda: self._degraded_estimate(q),
-                c_share=c_share, inflight_s=inflight,
-                tenant_backlog_s=self._queue.backlog_s(tenant),
-                active_weight=active_w)
-            if decision.action == "shed":
+        tr = self.tracer
+        if tr.enabled and getattr(q, "_obs_key", None) is None:
+            q._obs_key = tr.next_key()
+        with tr.span("admit", q_key=getattr(q, "_obs_key", None),
+                     query_id=q.query_id, tenant=tenant, tag=q.tag):
+            est, c_share = self._admission_estimate(q)
+            now = self._clock()
+            self._stamp_deadline(q, now)
+            if (not preadmitted and self.admission.mode == "cost"
+                    and q.deadline_at is not None):
+                inflight, active_w = self._admission_snapshot(tenant)
+                decision = self.admission.decide(
+                    tenant, est_s=est, deadline_s=q.deadline_at - now,
+                    degraded_est_fn=lambda: self._degraded_estimate(q),
+                    c_share=c_share, inflight_s=inflight,
+                    tenant_backlog_s=self._queue.backlog_s(tenant),
+                    active_weight=active_w)
+                if decision.action == "shed":
+                    bp = Backpressure(
+                        f"query {q.query_id} shed: predicted completion "
+                        f"{decision.predicted_s:.3f}s misses deadline "
+                        f"{q.deadline_at - now:.3f}s "
+                        f"(retry after {decision.retry_after_s:.3f}s)",
+                        reason="deadline", tenant=tenant,
+                        query_id=q.query_id,
+                        retry_after_s=decision.retry_after_s,
+                        predicted_s=decision.predicted_s,
+                        deadline_s=q.deadline_at - now)
+                    self._admission_event("shed", bp)
+                    raise bp
+                if decision.action == "degrade":
+                    q.degraded = True
+                    self._count("degraded", tenant)
+                    self.metrics.event(
+                        "admission", action="degrade", reason="deadline",
+                        tenant=tenant, query_id=q.query_id,
+                        predicted_s=decision.predicted_s,
+                        deadline_s=q.deadline_at - now,
+                        retry_after_s=decision.retry_after_s)
+                    tr.instant("degrade", tenant=tenant,
+                               query_id=q.query_id)
+            box: dict = {}
+            done = threading.Event()
+            try:
+                if tr.enabled:
+                    q._obs_enq = tr.now()
+                self._queue.put((q, time.perf_counter(), box, done),
+                                priority=q.priority, block=block,
+                                timeout=timeout, tenant=tenant,
+                                deadline_at=q.deadline_at, est_s=est)
+            except queue.Full:
                 with self._lock:
-                    self.shed += 1
-                    self._tstats(tenant)["shed"] += 1
-                raise Backpressure(
-                    f"query {q.query_id} shed: predicted completion "
-                    f"{decision.predicted_s:.3f}s misses deadline "
-                    f"{q.deadline_at - now:.3f}s "
-                    f"(retry after {decision.retry_after_s:.3f}s)",
-                    reason="deadline", tenant=tenant,
+                    inflight = sum(self._loads.values())
+                backlog = self._queue.backlog_s()
+                bp = Backpressure(
+                    f"admission queue full (query {q.query_id})",
+                    reason="queue_full", tenant=tenant,
                     query_id=q.query_id,
-                    retry_after_s=decision.retry_after_s,
-                    predicted_s=decision.predicted_s,
-                    deadline_s=q.deadline_at - now)
-            if decision.action == "degrade":
-                q.degraded = True
-                with self._lock:
-                    self.degraded += 1
-                    self._tstats(tenant)["degraded"] += 1
-        box: dict = {}
-        done = threading.Event()
-        try:
-            self._queue.put((q, time.perf_counter(), box, done),
-                            priority=q.priority, block=block,
-                            timeout=timeout, tenant=tenant,
-                            deadline_at=q.deadline_at, est_s=est)
-        except queue.Full:
-            with self._lock:
-                self.rejected += 1
-                self._tstats(tenant)["rejected"] += 1
-                inflight = sum(self._loads.values())
-            backlog = self._queue.backlog_s()
-            raise Backpressure(
-                f"admission queue full (query {q.query_id})",
-                reason="queue_full", tenant=tenant, query_id=q.query_id,
-                retry_after_s=max(0.05, (inflight + backlog)
-                                 / max(1, self.num_workers)))
-        with self._lock:
-            self.admitted += 1
-            self._tstats(tenant)["admitted"] += 1
+                    retry_after_s=max(0.05, (inflight + backlog)
+                                     / max(1, self.num_workers)))
+                self._admission_event("reject", bp)
+                raise bp
+            self._count("admitted", tenant)
 
         def wait(timeout: float | None = None) -> QueryOutcome:
             if not done.wait(timeout):
@@ -779,10 +906,7 @@ class JoinQueryService:
             tenant_backlog_s=self._queue.backlog_s(tenant),
             active_weight=active_w)
         if decision.action == "shed":
-            with self._lock:
-                self.shed += 1
-                self._tstats(tenant)["shed"] += 1
-            raise Backpressure(
+            bp = Backpressure(
                 f"pipeline {query_id} shed: predicted completion "
                 f"{decision.predicted_s:.3f}s misses deadline "
                 f"{deadline_at - now:.3f}s "
@@ -791,10 +915,16 @@ class JoinQueryService:
                 retry_after_s=decision.retry_after_s,
                 predicted_s=decision.predicted_s,
                 deadline_s=deadline_at - now)
+            self._admission_event("shed", bp)
+            raise bp
         if decision.action == "degrade":
-            with self._lock:
-                self.degraded += 1
-                self._tstats(tenant)["degraded"] += 1
+            self._count("degraded", tenant)
+            self.metrics.event(
+                "admission", action="degrade", reason="deadline",
+                tenant=tenant, query_id=query_id,
+                predicted_s=decision.predicted_s,
+                deadline_s=deadline_at - now,
+                retry_after_s=decision.retry_after_s)
             return deadline_at, True
         return deadline_at, False
 
@@ -832,13 +962,12 @@ class JoinQueryService:
         decision via ``admit_pipeline`` already covered the pipeline.
         """
         if not self._deferred_sem.acquire(blocking=block, timeout=timeout):
-            with self._lock:
-                self.rejected += 1
-                self._tstats(tenant or "default")["rejected"] += 1
-            raise Backpressure(
+            bp = Backpressure(
                 "deferred-stage capacity exhausted",
                 reason="queue_full", tenant=tenant or "default",
                 retry_after_s=0.05)
+            self._admission_event("reject", bp)
+            raise bp
         box: dict = {}
         done = threading.Event()
 
@@ -880,8 +1009,7 @@ class JoinQueryService:
                             and not getattr(e, "_svc_failure_counted",
                                             False)):
                         e._svc_failure_counted = True
-                        with self._lock:
-                            self.failed += 1
+                        self._count("failed")
                     box["error"] = e
             finally:
                 self._deferred_sem.release()
@@ -921,8 +1049,7 @@ class JoinQueryService:
             box["error"] = RuntimeError(
                 f"service closed before query {q.query_id} ran")
             done.set()
-            with self._lock:
-                self.failed += 1
+            self._count("failed")
         self._workers.clear()
         self._stop.clear()
 
@@ -933,13 +1060,33 @@ class JoinQueryService:
         self.close()
 
     def stats(self) -> dict:
-        with self._lock:
-            counters = {"admitted": self.admitted, "rejected": self.rejected,
-                        "completed": self.completed, "failed": self.failed,
-                        "shed": self.shed, "degraded": self.degraded,
-                        "host_bytes_moved": self.host_bytes_moved}
-            tenants = {name: dict(st)
-                       for name, st in self._tenant_stats.items()}
-        return {**counters, "queue_depth": len(self._queue),
-                "tenants": tenants, "cache": self.cache.stats(),
-                "planner": self.planner.stats()}
+        """One coherent snapshot, routed through ``metrics.snapshot()``.
+
+        All service counters (global and per-tenant) come out of a single
+        locked registry read; queue depth, cache, planner and audit state
+        are registry collectors invoked in the same pass — the old
+        counters-then-components split (where ``queue_depth`` and
+        ``cache.stats()`` were read at a later instant than the counter
+        snapshot) is gone.  The full registry snapshot rides along under
+        ``"metrics"`` for consumers that want the labeled series, the
+        prediction-error summary, or the calibration version.
+        """
+        snap = self.metrics.snapshot()
+        counters = {name: int(snap.get(name, 0))
+                    for name in ("admitted", "rejected", "completed",
+                                 "failed", "shed", "degraded")}
+        tenants: dict[str, dict] = {}
+        for name in self._TENANT_COUNTERS:
+            prefix = name + "{tenant="
+            for key, value in snap.items():
+                if (isinstance(key, str) and key.startswith(prefix)
+                        and key.endswith("}")):
+                    t = key[len(prefix):-1]
+                    tenants.setdefault(
+                        t, {n: 0 for n in self._TENANT_COUNTERS}
+                    )[name] = int(value)
+        return {**counters,
+                "host_bytes_moved": int(snap.get("host_bytes_moved", 0)),
+                "queue_depth": snap.get("queue_depth", 0),
+                "tenants": tenants, "cache": snap.get("cache"),
+                "planner": snap.get("planner"), "metrics": snap}

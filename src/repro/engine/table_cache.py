@@ -197,6 +197,15 @@ class BuildTableCache:
         total = self.partition_hits + self.partition_misses
         return self.partition_hits / total if total else 0.0
 
+    def register_metrics(self, registry, name: str = "cache") -> None:
+        """Expose this cache's counters as a ``MetricsRegistry`` collector.
+
+        ``stats()`` reads everything under the cache's own lock, and the
+        registry invokes collectors outside its lock, so the engine's
+        lock-ordering rule (registry lock is a leaf) holds.
+        """
+        registry.register_collector(name, self.stats)
+
     def stats(self) -> dict:
         with self._lock:
             return {"entries": len(self._entries), "bytes": self.bytes,

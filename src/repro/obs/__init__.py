@@ -1,0 +1,7 @@
+"""Observability: query-lifecycle tracing, metrics, cost-model audit."""
+from .audit import CostAudit
+from .metrics import MetricsRegistry
+from .trace import NULL_TRACER, NullTracer, SpanRecord, Tracer
+
+__all__ = ["CostAudit", "MetricsRegistry", "NULL_TRACER", "NullTracer",
+           "SpanRecord", "Tracer"]

@@ -202,7 +202,7 @@ def groupby_coprocessed(cp: CoProcessor, rel: Relation, values, *,
     """
     from repro.core.partition import radix_partition_scheduled
 
-    timing = Timing()
+    timing = Timing(tracer=cp.tracer)
     if isinstance(values, jax.Array):
         values = values.astype(jnp.int32)
     else:
@@ -212,7 +212,6 @@ def groupby_coprocessed(cp: CoProcessor, rel: Relation, values, *,
         timing.phase_s["agg"] = 0.0
         return _collect([], wrap32=wrap32), timing
     rel = cp.pad_relation(rel, GROUP_PAD_KEY)
-    t0 = time.perf_counter()
     if schedule:
         timing.notes["schedule"] = list(schedule)
         total_bits = sum(schedule)
@@ -221,87 +220,90 @@ def groupby_coprocessed(cp: CoProcessor, rel: Relation, values, *,
             return radix_partition_scheduled(r, schedule=schedule,
                                              interpret=interpret).rel
 
-        n = rel.size
-        cut = cp._cut(n, partition_ratio)
-        if cp.discrete and 0 < cut < n:
-            cp._bus_delay((n - cut) * 8, timing)
-        pieces = []
-        if cut > 0:
-            f = cp.c.jit(("gb_part", cut, schedule), part_fn)
-            pieces.append(f(cp.c.put_items(rel.take(0, cut))))
-        if cut < n:
-            f = cp.g.jit(("gb_part", n - cut, schedule), part_fn)
-            pieces.append(f(cp.g.put_items(rel.take(cut, n))))
-        pieces = [jax.tree.map(jax.device_get, x) for x in pieces]
-        rel = Relation(jnp.concatenate([x.rid for x in pieces]),
-                       jnp.concatenate([x.key for x in pieces]))
-        t1 = time.perf_counter()
-        timing.phase_s["partition"] = t1 - t0
-        # Ownership exchange: partitions [0, own) -> C, rest -> G (phj's
-        # join-phase split, applied to the reduce).
-        num_parts = 1 << total_bits
-        own = cp._cut(num_parts, agg_ratio)
-        pid = radix_of(rel.key, shift=0, bits=total_bits)
-        pid_host = np.asarray(pid)
-        outs = []
-        for grp, mask in ((cp.c, pid_host < own), (cp.g, pid_host >= own)):
-            if (own == 0 and grp is cp.c) or (own == num_parts
-                                              and grp is cp.g):
-                continue
-            idx = np.nonzero(mask)[0]
-            m = _round_up(max(len(idx), 1), cp.lcm)
-            rid = np.full(m, int(INVALID), np.int32)
-            key = np.full(m, GROUP_PAD_KEY, np.int32)
-            rid[:len(idx)] = np.asarray(rel.rid)[idx]
-            key[:len(idx)] = np.asarray(rel.key)[idx]
-            if cp.discrete:
-                cp._bus_delay(len(idx) * 8 // 2, timing)
-            vals = _gather_values(values, rid)
-            f = grp.jit(("gb_agg", m, interpret, wrap32),
-                        partial(grouped_agg, num_slots=m,
-                                interpret=interpret, wrap32=wrap32))
-            outs.append(f(grp.put_items(Relation(jnp.asarray(rid),
-                                                 jnp.asarray(key))),
-                          grp.put_items(jnp.asarray(vals))))
-    else:
-        t1 = t0
-        timing.phase_s["partition"] = 0.0
-        n = rel.size
-        cut = cp._cut(n, agg_ratio)
-        if 0 < cut < n:
-            # Separate partial aggregation + host merge: each group builds
-            # a partial group list on its row share (both programs in
-            # flight at once — async dispatch), merged below.
-            if cp.discrete:
+        with timing.phase("partition", passes=len(schedule)):
+            n = rel.size
+            cut = cp._cut(n, partition_ratio)
+            if cp.discrete and 0 < cut < n:
                 cp._bus_delay((n - cut) * 8, timing)
-            vals = _gather_values(values, np.asarray(rel.rid))
+            pieces = []
+            if cut > 0:
+                f = cp.c.jit(("gb_part", cut, schedule), part_fn)
+                pieces.append(f(cp.c.put_items(rel.take(0, cut))))
+            if cut < n:
+                f = cp.g.jit(("gb_part", n - cut, schedule), part_fn)
+                pieces.append(f(cp.g.put_items(rel.take(cut, n))))
+            pieces = [jax.tree.map(jax.device_get, x) for x in pieces]
+            rel = Relation(jnp.concatenate([x.rid for x in pieces]),
+                           jnp.concatenate([x.key for x in pieces]))
+        with timing.phase("agg"):
+            # Ownership exchange: partitions [0, own) -> C, rest -> G
+            # (phj's join-phase split, applied to the reduce).
+            num_parts = 1 << total_bits
+            own = cp._cut(num_parts, agg_ratio)
+            pid = radix_of(rel.key, shift=0, bits=total_bits)
+            pid_host = np.asarray(pid)
             outs = []
-            for grp, lo, hi in ((cp.c, 0, cut), (cp.g, cut, n)):
-                f = grp.jit(("gb_agg", hi - lo, interpret, wrap32),
-                            partial(grouped_agg, num_slots=hi - lo,
+            for grp, mask in ((cp.c, pid_host < own),
+                              (cp.g, pid_host >= own)):
+                if (own == 0 and grp is cp.c) or (own == num_parts
+                                                  and grp is cp.g):
+                    continue
+                idx = np.nonzero(mask)[0]
+                m = _round_up(max(len(idx), 1), cp.lcm)
+                rid = np.full(m, int(INVALID), np.int32)
+                key = np.full(m, GROUP_PAD_KEY, np.int32)
+                rid[:len(idx)] = np.asarray(rel.rid)[idx]
+                key[:len(idx)] = np.asarray(rel.key)[idx]
+                if cp.discrete:
+                    cp._bus_delay(len(idx) * 8 // 2, timing)
+                vals = _gather_values(values, rid)
+                f = grp.jit(("gb_agg", m, interpret, wrap32),
+                            partial(grouped_agg, num_slots=m,
                                     interpret=interpret, wrap32=wrap32))
-                outs.append(f(grp.put_items(rel.take(lo, hi)),
-                              grp.put_items(jnp.asarray(vals[lo:hi]))))
-        else:
-            grp = cp.c if cut == n else cp.g
-            if cp.discrete and grp is cp.g:
-                cp._bus_delay(n * 8, timing)
-            vals = _gather_values(values, np.asarray(rel.rid))
-            f = grp.jit(("gb_agg", n, interpret, wrap32),
-                        partial(grouped_agg, num_slots=n,
-                                interpret=interpret, wrap32=wrap32))
-            outs = [f(grp.put_items(rel), grp.put_items(jnp.asarray(vals)))]
-    outs = [jax.tree.map(jax.device_get, o) for o in outs]
-    if not schedule and len(outs) == 2:
-        tm = time.perf_counter()
-        result = _merge_partials(_collect(outs[:1], wrap32=wrap32),
-                                 _collect(outs[1:], wrap32=wrap32))
-        timing.merge_s = time.perf_counter() - tm
+                outs.append(f(grp.put_items(Relation(jnp.asarray(rid),
+                                                     jnp.asarray(key))),
+                              grp.put_items(jnp.asarray(vals))))
+            outs = [jax.tree.map(jax.device_get, o) for o in outs]
+            result = _collect(outs, wrap32=wrap32)
     else:
-        result = _collect(outs, wrap32=wrap32)
-    t2 = time.perf_counter()
-    timing.phase_s["agg"] = t2 - t1
-    timing.wall_s = t2 - t0
+        timing.phase_s["partition"] = 0.0
+        with timing.phase("agg"):
+            n = rel.size
+            cut = cp._cut(n, agg_ratio)
+            if 0 < cut < n:
+                # Separate partial aggregation + host merge: each group
+                # builds a partial group list on its row share (both
+                # programs in flight at once — async dispatch), merged
+                # below.
+                if cp.discrete:
+                    cp._bus_delay((n - cut) * 8, timing)
+                vals = _gather_values(values, np.asarray(rel.rid))
+                outs = []
+                for grp, lo, hi in ((cp.c, 0, cut), (cp.g, cut, n)):
+                    f = grp.jit(("gb_agg", hi - lo, interpret, wrap32),
+                                partial(grouped_agg, num_slots=hi - lo,
+                                        interpret=interpret, wrap32=wrap32))
+                    outs.append(f(grp.put_items(rel.take(lo, hi)),
+                                  grp.put_items(jnp.asarray(vals[lo:hi]))))
+            else:
+                grp = cp.c if cut == n else cp.g
+                if cp.discrete and grp is cp.g:
+                    cp._bus_delay(n * 8, timing)
+                vals = _gather_values(values, np.asarray(rel.rid))
+                f = grp.jit(("gb_agg", n, interpret, wrap32),
+                            partial(grouped_agg, num_slots=n,
+                                    interpret=interpret, wrap32=wrap32))
+                outs = [f(grp.put_items(rel),
+                          grp.put_items(jnp.asarray(vals)))]
+            outs = [jax.tree.map(jax.device_get, o) for o in outs]
+            if len(outs) == 2:
+                tm = time.perf_counter()
+                result = _merge_partials(_collect(outs[:1], wrap32=wrap32),
+                                         _collect(outs[1:], wrap32=wrap32))
+                timing.merge_s = time.perf_counter() - tm
+            else:
+                result = _collect(outs, wrap32=wrap32)
+    timing.wall_s = timing.phase_s["partition"] + timing.phase_s["agg"]
     timing.notes["num_groups"] = result.num_groups
     return result, timing
 

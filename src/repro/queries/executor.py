@@ -513,61 +513,65 @@ class PipelineExecutor:
         """
         if physical is None:
             physical = self.optimizer.optimize(query)
-        deadline_at, degraded = self.service.admit_pipeline(
-            tenant=tenant, est_s=physical.est_total_s,
-            deadline_s=deadline_s, query_id=next(self._qid),
-            degraded_est_s=self._degraded_total_s(physical))
-        base = {name: _ScanView(t) for name, t in query.tables.items()}
-        # Residual (cycle-edge) filters on base tables apply at scan time;
-        # the rest are grouped by the stage whose output they filter.
-        stage_residuals: dict[int, list] = {}
-        for ref, lq, rq in physical.residuals:
-            if isinstance(ref, str):
-                base[ref].narrow(base[ref].col(lq) == base[ref].col(rq))
-            else:
-                stage_residuals.setdefault(ref, []).append((lq, rq))
-        t0 = time.perf_counter()
-        if not physical.stages:
-            if len(base) != 1:
-                raise ValueError("plan has no stages but several tables")
-            view = next(iter(base.values()))
-            return self._finish(query, physical, view, [], t0,
-                                from_stages=False, tenant=tenant,
-                                deadline_at=deadline_at)
+        with self.service.tracer.span("pipeline", tenant=tenant,
+                                      stages=len(physical.stages),
+                                      handoff=self.handoff):
+            deadline_at, degraded = self.service.admit_pipeline(
+                tenant=tenant, est_s=physical.est_total_s,
+                deadline_s=deadline_s, query_id=next(self._qid),
+                degraded_est_s=self._degraded_total_s(physical))
+            base = {name: _ScanView(t) for name, t in query.tables.items()}
+            # Residual (cycle-edge) filters on base tables apply at scan
+            # time; the rest are grouped by the stage whose output they
+            # filter.
+            stage_residuals: dict[int, list] = {}
+            for ref, lq, rq in physical.residuals:
+                if isinstance(ref, str):
+                    base[ref].narrow(base[ref].col(lq) == base[ref].col(rq))
+                else:
+                    stage_residuals.setdefault(ref, []).append((lq, rq))
+            t0 = time.perf_counter()
+            if not physical.stages:
+                if len(base) != 1:
+                    raise ValueError("plan has no stages but several tables")
+                view = next(iter(base.values()))
+                return self._finish(query, physical, view, [], t0,
+                                    from_stages=False, tenant=tenant,
+                                    deadline_at=deadline_at)
 
-        inter: dict[int, object] = {}     # stage id -> cols dict | StageView
-        depth: dict[int, int] = {}
-        handles: dict[int, object] = {}
-        handoff_bytes: dict[int, int] = {}   # host-path H2D per stage
-        fused = self.handoff == "device"
-        for stage in physical.stages:
-            depth[stage.stage_id] = 1 + max(
-                [depth[d] for d in stage.deps], default=0)
-            make_query = (self._stage_query_dev(stage, base, inter)
-                          if fused else
-                          self._stage_query_host(stage, base, inter,
-                                                 handoff_bytes))
-            if degraded:
-                make_query = _mark_degraded(make_query)
-            finalize = (self._stage_finalize_dev(
-                stage, base, inter,
-                stage_residuals.get(stage.stage_id, ()))
-                if fused else
-                self._stage_finalize_host(
+            inter: dict[int, object] = {}  # stage id -> cols | StageView
+            depth: dict[int, int] = {}
+            handles: dict[int, object] = {}
+            handoff_bytes: dict[int, int] = {}  # host-path H2D per stage
+            fused = self.handoff == "device"
+            for stage in physical.stages:
+                depth[stage.stage_id] = 1 + max(
+                    [depth[d] for d in stage.deps], default=0)
+                make_query = (self._stage_query_dev(stage, base, inter)
+                              if fused else
+                              self._stage_query_host(stage, base, inter,
+                                                     handoff_bytes))
+                if degraded:
+                    make_query = _mark_degraded(make_query)
+                finalize = (self._stage_finalize_dev(
                     stage, base, inter,
-                    stage_residuals.get(stage.stage_id, ()),
-                    handoff_bytes))
-            handles[stage.stage_id] = self.service.submit_deferred(
-                make_query,
-                deps=[handles[d] for d in stage.deps],
-                finalize=finalize,
-                priority=depth[stage.stage_id],
-                tenant=tenant, deadline_at=deadline_at)
-        outcomes = [handles[s.stage_id]() for s in physical.stages]
-        final = inter[physical.stages[-1].stage_id]
-        return self._finish(query, physical, final, outcomes, t0,
-                            tenant=tenant, deadline_at=deadline_at,
-                            degraded=degraded)
+                    stage_residuals.get(stage.stage_id, ()))
+                    if fused else
+                    self._stage_finalize_host(
+                        stage, base, inter,
+                        stage_residuals.get(stage.stage_id, ()),
+                        handoff_bytes))
+                handles[stage.stage_id] = self.service.submit_deferred(
+                    make_query,
+                    deps=[handles[d] for d in stage.deps],
+                    finalize=finalize,
+                    priority=depth[stage.stage_id],
+                    tenant=tenant, deadline_at=deadline_at)
+            outcomes = [handles[s.stage_id]() for s in physical.stages]
+            final = inter[physical.stages[-1].stage_id]
+            return self._finish(query, physical, final, outcomes, t0,
+                                tenant=tenant, deadline_at=deadline_at,
+                                degraded=degraded)
 
     def _finish(self, query, physical, cols, outcomes, t0, *,
                 from_stages: bool = True, tenant: str = "default",
@@ -770,18 +774,27 @@ class PipelineExecutor:
 
     def _stage_finalize_dev(self, stage, base, inter, residuals=()):
         def finalize(outcome) -> None:
-            bsrc = self._input(stage.build_input, base, inter)
-            psrc = self._input(stage.probe_input, base, inter)
-            c = int(outcome.result.count)
-            view = StageView(
-                stage.kind, psrc, bsrc,
-                outcome.result.probe_rid[:c],
-                None if stage.kind in ("semi", "anti")
-                else outcome.result.build_rid[:c], c)
-            for lq, rq in residuals:
-                view.apply_residual(lq, rq)
-            inter[stage.stage_id] = view
-            outcome.host_bytes_moved = 0     # the fused path's invariant
+            # Runs on the deferred-stage thread: the gather/finalize leg
+            # of the lifecycle, spanned per stage (the executed query's
+            # own spans closed on a worker thread already).
+            with self.service.tracer.span(
+                    "finalize", stage=stage.stage_id,
+                    query_id=outcome.query_id, tenant=outcome.tenant,
+                    tag=outcome.tag):
+                with self.service.tracer.span("gather",
+                                              stage=stage.stage_id):
+                    bsrc = self._input(stage.build_input, base, inter)
+                    psrc = self._input(stage.probe_input, base, inter)
+                    c = int(outcome.result.count)
+                    view = StageView(
+                        stage.kind, psrc, bsrc,
+                        outcome.result.probe_rid[:c],
+                        None if stage.kind in ("semi", "anti")
+                        else outcome.result.build_rid[:c], c)
+                    for lq, rq in residuals:
+                        view.apply_residual(lq, rq)
+                inter[stage.stage_id] = view
+                outcome.host_bytes_moved = 0  # the fused path's invariant
         return finalize
 
     # -- host-materialize hand-off (the pre-fusion baseline) -----------------
@@ -813,39 +826,47 @@ class PipelineExecutor:
     def _stage_finalize_host(self, stage, base, inter, residuals=(),
                              handoff_bytes=None):
         def finalize(outcome) -> None:
-            bsrc = self._input(stage.build_input, base, inter)
-            psrc = self._input(stage.probe_input, base, inter)
-            c = int(outcome.result.count)
-            pr = np.asarray(outcome.result.probe_rid[:c])
-            moved = pr.nbytes                      # D2H: match indices
-            cols = _src_take(psrc, pr)
-            if stage.kind in ("semi", "anti"):
-                pass          # filter table consumed: probe columns only
-            elif stage.kind == "left_outer":
-                br = np.asarray(outcome.result.build_rid[:c])
-                moved += br.nbytes
-                # Unmatched rows carry NULL_VALUE on the build side.  An
-                # empty build side (filtered to nothing) has no rows to
-                # gather at all — everything is NULL.
-                matched = br >= 0
-                if _src_n(bsrc) == 0:
-                    for q in _src_names(bsrc):
-                        cols[q] = np.full(c, NULL_VALUE, np.int32)
-                else:
-                    bcols = _src_take(bsrc, np.where(matched, br, 0))
-                    for q, v in bcols.items():
-                        cols[q] = np.where(matched, v,
-                                           v.dtype.type(NULL_VALUE))
-            else:
-                br = np.asarray(outcome.result.build_rid[:c])
-                moved += br.nbytes
-                cols.update(_src_take(bsrc, br))
-            for lq, rq in residuals:
-                cols = _apply_residual(cols, lq, rq)
-            inter[stage.stage_id] = cols
-            self.service.note_host_bytes(moved)
-            outcome.host_bytes_moved = moved + \
-                (handoff_bytes or {}).get(stage.stage_id, 0)
+            with self.service.tracer.span(
+                    "finalize", stage=stage.stage_id,
+                    query_id=outcome.query_id, tenant=outcome.tenant,
+                    tag=outcome.tag):
+                with self.service.tracer.span("gather",
+                                              stage=stage.stage_id):
+                    bsrc = self._input(stage.build_input, base, inter)
+                    psrc = self._input(stage.probe_input, base, inter)
+                    c = int(outcome.result.count)
+                    pr = np.asarray(outcome.result.probe_rid[:c])
+                    moved = pr.nbytes              # D2H: match indices
+                    cols = _src_take(psrc, pr)
+                    if stage.kind in ("semi", "anti"):
+                        pass  # filter table consumed: probe columns only
+                    elif stage.kind == "left_outer":
+                        br = np.asarray(outcome.result.build_rid[:c])
+                        moved += br.nbytes
+                        # Unmatched rows carry NULL_VALUE on the build
+                        # side.  An empty build side (filtered to nothing)
+                        # has no rows to gather at all — everything is
+                        # NULL.
+                        matched = br >= 0
+                        if _src_n(bsrc) == 0:
+                            for q in _src_names(bsrc):
+                                cols[q] = np.full(c, NULL_VALUE, np.int32)
+                        else:
+                            bcols = _src_take(bsrc,
+                                              np.where(matched, br, 0))
+                            for q, v in bcols.items():
+                                cols[q] = np.where(matched, v,
+                                                   v.dtype.type(NULL_VALUE))
+                    else:
+                        br = np.asarray(outcome.result.build_rid[:c])
+                        moved += br.nbytes
+                        cols.update(_src_take(bsrc, br))
+                for lq, rq in residuals:
+                    cols = _apply_residual(cols, lq, rq)
+                inter[stage.stage_id] = cols
+                self.service.note_host_bytes(moved)
+                outcome.host_bytes_moved = moved + \
+                    (handoff_bytes or {}).get(stage.stage_id, 0)
         return finalize
 
     # -- convenience ---------------------------------------------------------
