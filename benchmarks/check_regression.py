@@ -13,7 +13,12 @@ query-pipeline and SLO figures, and fails (exit 1) when:
   * the observability plumbing went dark: the cost-model audit trail is
     empty or carries non-finite prediction-error percentiles for an
     executed phase, or the metrics registry's ``host_bytes_moved``
-    disagrees with the fused-path figure the hand-off section reported.
+    disagrees with the fused-path figure the hand-off section reported, or
+  * the observability loop stopped *acting*: the SLO burn-rate monitor
+    fired at steady state (alert noise) or stayed silent through the
+    bursty overload replay, the flight-recorder dump is missing or
+    schema-invalid, or the ``cost_model_staleness`` gauge is absent or
+    non-finite.
 
 The baseline lives in ``benchmarks/baseline.json``; refresh it (with a
 note in the commit) whenever an intentional change moves the number.
@@ -125,6 +130,27 @@ def main() -> int:
         if not sp["sheds_structured"]:
             failures.append("smoke slo shed queries missing structured "
                             "Backpressure errors")
+        # -- closed-loop observability gates ----------------------------
+        steady = sp.get("slo_alerts_steady")
+        burst = sp.get("slo_alerts_burst")
+        stale = sp.get("cost_model_staleness")
+        print(f"check_regression: slo alerts steady={steady} (want 0), "
+              f"burst={burst} (want >=1), flight_dump_valid="
+              f"{sp.get('flight_dump_valid')}, staleness={stale}",
+              flush=True)
+        if steady != 0:
+            failures.append(f"SLO monitor fired {steady} alert(s) at "
+                            f"steady state (want 0 — alerts that fire "
+                            f"when nothing is wrong are noise)")
+        if not burst:
+            failures.append("SLO monitor stayed silent through the "
+                            "bursty overload replay (want >= 1 alert)")
+        if not sp.get("flight_dump_valid"):
+            failures.append("flight-recorder dump missing or "
+                            "schema-invalid")
+        if not isinstance(stale, (int, float)) or not math.isfinite(stale):
+            failures.append(f"cost_model_staleness gauge missing or "
+                            f"non-finite: {stale!r}")
     else:
         print("check_regression: no successful slo_bench payload — "
               "skipping SLO gate", flush=True)

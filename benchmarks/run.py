@@ -90,6 +90,19 @@ def main() -> None:
                              "error": traceback.format_exc(limit=5)}
             print(f"# {name} FAILED", flush=True)
             traceback.print_exc()
+            # Post-mortem: dump every live flight recorder next to the
+            # rollup so CI uploads the recent query lifecycles that led
+            # up to the failure (FLIGHT_*.json — outside the BENCH_*
+            # glob check_regression reads).
+            try:
+                from repro.obs import dump_live_recorders
+
+                from .common import REPORT_DIR
+                for p in dump_live_recorders(REPORT_DIR,
+                                             reason=f"bench_{name}"):
+                    print(f"# flight dump -> {p}", flush=True)
+            except Exception:
+                pass
     from .common import write_run_summary
     path = write_run_summary(results)
     print(f"# run summary -> {path}", flush=True)

@@ -19,8 +19,9 @@ resident build tables across queries.
     ``repro.obs``) — query-lifecycle spans, the labeled-counter registry
     behind ``stats()``, and the predicted-vs-measured cost-model audit
 """
-from repro.obs import (CostAudit, MetricsRegistry, NULL_TRACER, NullTracer,
-                       Tracer)
+from repro.obs import (CostAudit, DriftDetector, FlightRecorder,
+                       MetricsRegistry, NULL_TRACER, NullTracer,
+                       SLObjective, SLOMonitor, Tracer)
 
 from .admission import (AdmissionController, AdmissionDecision,
                         Backpressure, Tenant, TenantFairQueue, jain_index)

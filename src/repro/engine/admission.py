@@ -275,6 +275,13 @@ class AdmissionController:
         self.num_workers = max(1, int(num_workers))
         self.min_retry_s = float(min_retry_s)
         self._tenants: dict[str, Tenant] = {}
+        # Per-tenant safety margins on estimate pricing (>= 1.0): the
+        # drift detector widens a tenant's margin when its measured/
+        # estimated ratio runs sustainedly high, so admission predicts
+        # completion from estimates inflated to what this tenant's
+        # queries actually cost — prediction error fed back into
+        # admission (ROADMAP item 1).
+        self._margins: dict[str, float] = {}
         self._lock = threading.Lock()
         for t in (tenants or ()):
             self.register(t)
@@ -300,6 +307,19 @@ class AdmissionController:
     def weight_of(self, name: str) -> float:
         return self.tenant(name).weight
 
+    def set_margin(self, name: str, margin: float) -> None:
+        """Set a tenant's estimate safety margin (clamped to >= 1.0)."""
+        with self._lock:
+            self._margins[name] = max(1.0, float(margin))
+
+    def margin_of(self, name: str) -> float:
+        with self._lock:
+            return self._margins.get(name, 1.0)
+
+    def margins(self) -> dict[str, float]:
+        with self._lock:
+            return dict(self._margins)
+
     def decide(self, tenant_name: str, *, est_s: float,
                deadline_s: float | None, degraded_est_fn=None,
                c_share: float = 0.5, inflight_s: float = 0.0,
@@ -309,6 +329,11 @@ class AdmissionController:
         from now); ``degraded_est_fn`` lazily prices the cheapest plan —
         only evaluated when the preferred plan already misses."""
         t = self.tenant(tenant_name)
+        # The drift-priced safety margin inflates every estimate used in
+        # this decision: a tenant whose queries sustainedly run over
+        # estimate is priced at what they actually cost.
+        margin = self.margin_of(tenant_name)
+        est_s = max(0.0, float(est_s)) * margin
         total_w = max(active_weight if active_weight else t.weight, 1e-9)
         share = t.weight / total_w
         budget_cap = (t.c_budget * c_share
@@ -316,12 +341,14 @@ class AdmissionController:
         share = max(min(share, budget_cap), 1e-6)
         wait = (inflight_s / self.num_workers
                 + tenant_backlog_s / (self.num_workers * share))
-        predicted = wait + max(0.0, float(est_s))
+        predicted = wait + est_s
         if self.mode != "cost" or deadline_s is None:
             return AdmissionDecision("admit", predicted)
         if predicted <= deadline_s:
             return AdmissionDecision("admit", predicted)
         degraded_est = degraded_est_fn() if degraded_est_fn else None
+        if degraded_est is not None:
+            degraded_est = float(degraded_est) * margin
         if degraded_est is not None and wait + degraded_est <= deadline_s:
             return AdmissionDecision("degrade", wait + degraded_est)
         cheapest = min([x for x in (est_s, degraded_est)

@@ -184,6 +184,7 @@ class QueryPlanner:
         self.plan_counts: dict[tuple[str, str], int] = {}
         self._sweep_cache: dict = {}
         self._plan_cache: dict = {}
+        self._replan_flags = 0
         self._lock = threading.Lock()
 
     # -- measured construction (paper §4.2, once at service start) ---------
@@ -518,6 +519,32 @@ class QueryPlanner:
                 self.plan_counts[k] = self.plan_counts.get(k, 0) + 1
         return best, False
 
+    def flag_replan(self, *, algorithm: str | None = None,
+                    scheme: str | None = None) -> int:
+        """Flag matching sticky plans for re-pricing (the drift hook).
+
+        Marks every cached plan matching ``algorithm``/``scheme`` (None =
+        any) with a version that can never equal ``online.version``, so
+        the next ``choose`` for that signature re-prices through the
+        normal ``_sticky_choose`` path — candidates re-swept, incumbent
+        kept unless a challenger beats it by ``replan_margin``.  No new
+        invalidation machinery: drift reuses the same hysteresis a
+        calibration version tick does.  Returns how many cached plans
+        were flagged.
+        """
+        n = 0
+        with self._lock:
+            for sig, (ver, plan) in list(self._plan_cache.items()):
+                if algorithm is not None and plan.algorithm != algorithm:
+                    continue
+                if scheme is not None and plan.scheme != scheme:
+                    continue
+                if ver != -1:
+                    self._plan_cache[sig] = (-1, plan)
+                    n += 1
+            self._replan_flags += n
+        return n
+
     # -- group-by aggregation (ops subsystem) --------------------------------
     def _groupby_sweep(self, n: int):
         return self._sweep("groupby_agg", BUILD_SERIES.steps, [n] * 4,
@@ -676,4 +703,6 @@ class QueryPlanner:
         with self._lock:
             counts = {f"{a}/{s}": n for (a, s), n in
                       sorted(self.plan_counts.items())}
-        return {"plan_counts": counts, "online": self.online.to_dict()}
+            replan_flags = self._replan_flags
+        return {"plan_counts": counts, "replan_flags": replan_flags,
+                "online": self.online.to_dict()}

@@ -35,7 +35,8 @@ import time
 
 from repro.core.coprocess import CoProcessor, Timing
 from repro.core.hash_table import JoinResult, default_num_buckets
-from repro.obs import CostAudit, MetricsRegistry, NULL_TRACER, Tracer
+from repro.obs import (CostAudit, DriftDetector, FlightRecorder,
+                       MetricsRegistry, NULL_TRACER, SLOMonitor, Tracer)
 
 from .admission import (AdmissionController, Backpressure, QueueFull,
                         Tenant, TenantFairQueue)
@@ -265,7 +266,10 @@ class JoinQueryService:
                  max_deferred: int | None = None,
                  clock=time.monotonic,
                  tracer: Tracer | None = None,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 flight: FlightRecorder | None = None,
+                 slo: SLOMonitor | None = None,
+                 drift: DriftDetector | None = None):
         self.cp = cp or CoProcessor()
         self.planner = planner or QueryPlanner()
         self.cache = BuildTableCache(cache_budget_bytes)
@@ -327,6 +331,26 @@ class JoinQueryService:
             "calibration_version", lambda: int(self.planner.online.version))
         self.metrics.register_collector("prediction_error",
                                         self.audit.summary)
+        # The closed loop: a flight recorder of recent lifecycles (dumps
+        # itself on failures / shed storms / miss bursts), an SLO burn-
+        # rate monitor over the per-tenant counters, and a drift detector
+        # on the audit trail that flags stale sticky plans for re-pricing
+        # and feeds per-tenant safety margins back into admission.  All
+        # on by default; each is a bounded ring plus O(1) updates.
+        self.flight = flight if flight is not None else \
+            FlightRecorder(clock=clock)
+        self.slo = slo if slo is not None else \
+            SLOMonitor(self.metrics, clock=clock, tracer=self.tracer)
+        self.drift = drift if drift is not None else DriftDetector(
+            metrics=self.metrics, tracer=self.tracer,
+            on_drift=self._on_drift, on_margin=self.admission.set_margin,
+            clock=clock)
+        self.audit.add_listener(self.drift.observe_record)
+        self.metrics.register_collector("flight", self.flight.summary)
+        self.metrics.register_collector("slo", self.slo.summary)
+        self.metrics.register_collector("drift", self.drift.summary)
+        self.metrics.set_gauge("audit_capacity",
+                               float(self.audit.capacity))
         # Pre-seed so snapshot()["host_bytes_moved"] is always present —
         # the fused data path's whole point is to never increment it.
         self.metrics.inc("host_bytes_moved", 0)
@@ -358,6 +382,22 @@ class JoinQueryService:
         self.metrics.event("admission", action=action, **bp.to_dict())
         self.tracer.instant(action, tenant=bp.tenant,
                             query_id=bp.query_id, reason=bp.reason)
+        self.flight.record_admission(action, **bp.to_dict())
+        self.slo.evaluate()
+
+    # Which algorithm's sticky plans a drifted audit phase invalidates
+    # ("partition" is shared by phj and groupby — match any algorithm).
+    _DRIFT_ALGO = {"build": "shj", "probe": "shj", "join": "phj",
+                   "agg": "groupby", "partition": None}
+
+    def _on_drift(self, phase: str, scheme: str, stats: dict) -> None:
+        """Sustained cost-model drift on (phase, scheme): flag the
+        affected sticky plans for re-pricing through the planner's
+        existing replan-hysteresis path."""
+        flagged = self.planner.flag_replan(
+            algorithm=self._DRIFT_ALGO.get(phase), scheme=scheme)
+        if flagged:
+            self.metrics.inc("plans_flagged_for_replan", flagged)
 
     # Read-only counter views (the attribute API the service always had).
     def _counter_total(self, name: str) -> int:
@@ -435,6 +475,7 @@ class JoinQueryService:
             self._count("deadline_hits", q.tenant)
         elif deadline_hit is False:
             self._count("deadline_misses", q.tenant)
+        self.slo.evaluate()
         return deadline_hit
 
     def _execute_join(self, q: JoinQuery,
@@ -462,6 +503,9 @@ class JoinQueryService:
                                deadline_hit=deadline_hit)
         if obs_key is not None:
             outcome.trace = self.tracer.spans_for(obs_key)
+        self.metrics.observe("query_latency_s", queued_s + wall,
+                             tenant=q.tenant)
+        self.flight.record_outcome(outcome)
         return outcome
 
     def _run_join(self, q: JoinQuery, qspan=None):
@@ -520,7 +564,7 @@ class JoinQueryService:
             from repro.ops.join_variants import probe_table_variant
             cache_hit = table is not None and plan.cached
             if cache_hit:
-                self.cache.get(key)   # record the hit + LRU touch
+                self.cache.get(key, q.tenant)  # record the hit + LRU touch
                 timing = Timing(tracer=self.cp.tracer)
                 timing.phase_s["build"] = 0.0
                 result, timing = probe_table_variant(
@@ -549,29 +593,31 @@ class JoinQueryService:
                     build_parts=layout, probe_parts=probe_layout,
                     parts_out=parts_out)
                 if layout is not None:
-                    self.cache.get_partition(pkey)  # hit + LRU touch
+                    self.cache.get_partition(pkey, q.tenant)  # hit + touch
                     partition_hit = True
                 else:
-                    self.cache.record_partition_miss()
-                    self.cache.put_partition(pkey, parts_out["R"])
+                    self.cache.record_partition_miss(q.tenant)
+                    self.cache.put_partition(pkey, parts_out["R"],
+                                             q.tenant)
                 if probe_layout is not None:
-                    self.cache.get_probe_partition(skey)
+                    self.cache.get_probe_partition(skey, q.tenant)
                     probe_partition_hit = True
                 else:
-                    self.cache.record_probe_partition_miss()
-                    self.cache.put_probe_partition(skey, parts_out["S"])
+                    self.cache.record_probe_partition_miss(q.tenant)
+                    self.cache.put_probe_partition(skey, parts_out["S"],
+                                                   q.tenant)
             else:
                 # Miss accounting mirrors hit accounting: only a plan that
                 # would have *used* a resident table counts as a miss (a
                 # PHJ plan never wants one, in either direction).
-                self.cache.record_miss()
+                self.cache.record_miss(q.tenant)
                 table, timing = self.cp.build_table(
                     q.build, num_buckets=plan.num_buckets,
                     ratios=plan.build_ratios, table_mode=plan.table_mode)
                 result, timing = probe_table_variant(
                     self.cp, q.probe, table, kind=q.kind, max_out=max_out,
                     ratios=plan.probe_ratios, timing=timing)
-                self.cache.put(key, table)
+                self.cache.put(key, table, q.tenant)
         finally:
             for lock in reversed(held):
                 lock.release()
@@ -631,6 +677,9 @@ class JoinQueryService:
                                deadline_hit=deadline_hit)
         if obs_key is not None:
             outcome.trace = self.tracer.spans_for(obs_key)
+        self.metrics.observe("query_latency_s", queued_s + wall,
+                             tenant=q.tenant)
+        self.flight.record_outcome(outcome)
         return outcome
 
     def _run_groupby(self, q: GroupByQuery, qspan=None):
@@ -711,6 +760,10 @@ class JoinQueryService:
                 e._svc_failure_counted = True
                 box["error"] = e
                 self._count("failed")
+                self.flight.record_failure(
+                    tenant=getattr(q, "tenant", "default"),
+                    query_id=getattr(q, "query_id", -1),
+                    where="worker", error=repr(e))
             finally:
                 done.set()
                 self._queue.task_done()
@@ -838,6 +891,9 @@ class JoinQueryService:
                         retry_after_s=decision.retry_after_s)
                     tr.instant("degrade", tenant=tenant,
                                query_id=q.query_id)
+                    self.flight.record_admission(
+                        "degrade", tenant=tenant, query_id=q.query_id,
+                        predicted_s=decision.predicted_s)
             box: dict = {}
             done = threading.Event()
             try:
@@ -925,6 +981,9 @@ class JoinQueryService:
                 predicted_s=decision.predicted_s,
                 deadline_s=deadline_at - now,
                 retry_after_s=decision.retry_after_s)
+            self.flight.record_admission(
+                "degrade", tenant=tenant, query_id=query_id,
+                predicted_s=decision.predicted_s)
             return deadline_at, True
         return deadline_at, False
 
@@ -1010,6 +1069,9 @@ class JoinQueryService:
                                             False)):
                         e._svc_failure_counted = True
                         self._count("failed")
+                        self.flight.record_failure(
+                            tenant=tenant or "default",
+                            where="deferred", error=repr(e))
                     box["error"] = e
             finally:
                 self._deferred_sem.release()
@@ -1089,4 +1151,6 @@ class JoinQueryService:
                 "host_bytes_moved": int(snap.get("host_bytes_moved", 0)),
                 "queue_depth": snap.get("queue_depth", 0),
                 "tenants": tenants, "cache": snap.get("cache"),
-                "planner": snap.get("planner"), "metrics": snap}
+                "planner": snap.get("planner"),
+                "flight": snap.get("flight"), "slo": snap.get("slo"),
+                "drift": snap.get("drift"), "metrics": snap}

@@ -73,7 +73,11 @@ class BuildTableCache:
 
     def __init__(self, budget_bytes: int = 256 << 20):
         self.budget_bytes = int(budget_bytes)
-        self._entries: OrderedDict[str, tuple[object, int]] = OrderedDict()
+        # key -> (obj, nbytes, owner_tenant, kind); the owner is whoever
+        # inserted the entry — eviction attribution needs the victim's
+        # identity, not just its key.
+        self._entries: OrderedDict[str, tuple] = OrderedDict()
+        self._registry = None          # optional MetricsRegistry
         self._lock = threading.Lock()
         self.bytes = 0
         self.hits = 0
@@ -100,75 +104,95 @@ class BuildTableCache:
             ent = self._entries.get(key)
             return ent[0] if ent is not None else None
 
-    def get(self, key: str):
+    def _emit(self, name: str, tenant: str, kind: str) -> None:
+        """Per-tenant labeled counter into the attached registry.  Called
+        *after* the cache lock is released (the service's lock discipline:
+        components do not call into the registry under their own locks)."""
+        if self._registry is not None:
+            self._registry.inc(name, tenant=tenant, kind=kind)
+
+    def get(self, key: str, tenant: str = "default"):
         with self._lock:
             ent = self._entries.get(key)
             if ent is None:
                 self.misses += 1
-                return None
-            self._entries.move_to_end(key)
-            self.hits += 1
-            return ent[0]
+            else:
+                self._entries.move_to_end(key)
+                self.hits += 1
+        self._emit("cache_hits" if ent is not None else "cache_misses",
+                   tenant, "table")
+        return ent[0] if ent is not None else None
 
-    def record_miss(self):
+    def record_miss(self, tenant: str = "default"):
         """Count a lookup that found nothing (pairs with ``peek``)."""
         with self._lock:
             self.misses += 1
+        self._emit("cache_misses", tenant, "table")
 
-    def put(self, key: str, table) -> bool:
+    def put(self, key: str, table, tenant: str = "default") -> bool:
         """Insert; evicts LRU entries until under budget.  Returns False if
         the table alone exceeds the whole budget (not cached)."""
-        return self._put(key, table, "table")
+        return self._put(key, table, "table", tenant)
 
     # -- partitioned layouts (PHJ build side) -------------------------------
     def peek_partition(self, key: str):
         """Partition-layout lookup without touching stats or LRU order."""
         return self.peek(key)
 
-    def get_partition(self, key: str):
+    def get_partition(self, key: str, tenant: str = "default"):
         with self._lock:
             ent = self._entries.get(key)
             if ent is None:
                 self.partition_misses += 1
-                return None
-            self._entries.move_to_end(key)
-            self.partition_hits += 1
-            return ent[0]
+            else:
+                self._entries.move_to_end(key)
+                self.partition_hits += 1
+        self._emit("cache_hits" if ent is not None else "cache_misses",
+                   tenant, "partition")
+        return ent[0] if ent is not None else None
 
-    def record_partition_miss(self):
+    def record_partition_miss(self, tenant: str = "default"):
         with self._lock:
             self.partition_misses += 1
+        self._emit("cache_misses", tenant, "partition")
 
-    def put_partition(self, key: str, layout) -> bool:
-        return self._put(key, layout, "partition")
+    def put_partition(self, key: str, layout,
+                      tenant: str = "default") -> bool:
+        return self._put(key, layout, "partition", tenant)
 
     # -- probe-side partitioned layouts (satellite: probe reuse) ------------
-    def get_probe_partition(self, key: str):
+    def get_probe_partition(self, key: str, tenant: str = "default"):
         with self._lock:
             ent = self._entries.get(key)
             if ent is None:
                 self.probe_partition_misses += 1
-                return None
-            self._entries.move_to_end(key)
-            self.probe_partition_hits += 1
-            return ent[0]
+            else:
+                self._entries.move_to_end(key)
+                self.probe_partition_hits += 1
+        self._emit("cache_hits" if ent is not None else "cache_misses",
+                   tenant, "probe_partition")
+        return ent[0] if ent is not None else None
 
-    def record_probe_partition_miss(self):
+    def record_probe_partition_miss(self, tenant: str = "default"):
         with self._lock:
             self.probe_partition_misses += 1
+        self._emit("cache_misses", tenant, "probe_partition")
 
-    def put_probe_partition(self, key: str, layout) -> bool:
-        return self._put(key, layout, "probe_partition")
+    def put_probe_partition(self, key: str, layout,
+                            tenant: str = "default") -> bool:
+        return self._put(key, layout, "probe_partition", tenant)
 
-    def _put(self, key: str, obj, kind: str) -> bool:
+    def _put(self, key: str, obj, kind: str,
+             tenant: str = "default") -> bool:
         nbytes = table_nbytes(obj)
         if nbytes > self.budget_bytes:
             return False
+        evicted = []
         with self._lock:
             if key in self._entries:
                 self._entries.move_to_end(key)
                 return True
-            self._entries[key] = (obj, nbytes)
+            self._entries[key] = (obj, nbytes, tenant, kind)
             self.bytes += nbytes
             if kind == "partition":
                 self.partition_puts += 1
@@ -177,10 +201,23 @@ class BuildTableCache:
             else:
                 self.puts += 1
             while self.bytes > self.budget_bytes:
-                _, (_, ev_bytes) = self._entries.popitem(last=False)
+                ev_key, (_, ev_bytes, ev_tenant, ev_kind) = \
+                    self._entries.popitem(last=False)
                 self.bytes -= ev_bytes
                 self.evictions += 1
-            return True
+                evicted.append((ev_key, ev_bytes, ev_tenant, ev_kind))
+        # Eviction attribution (outside the lock): which tenant's insert
+        # pushed out which tenant's entry — the observability groundwork
+        # for per-tenant cache budgets (ROADMAP item 1).
+        if self._registry is not None:
+            for ev_key, ev_bytes, ev_tenant, ev_kind in evicted:
+                self._registry.inc("cache_evictions", tenant=ev_tenant,
+                                   kind=ev_kind)
+                self._registry.event(
+                    "cache_eviction", evictor=tenant, victim=ev_tenant,
+                    kind=ev_kind, nbytes=int(ev_bytes),
+                    key=ev_key[:16])
+        return True
 
     def clear(self):
         with self._lock:
@@ -198,12 +235,17 @@ class BuildTableCache:
         return self.partition_hits / total if total else 0.0
 
     def register_metrics(self, registry, name: str = "cache") -> None:
-        """Expose this cache's counters as a ``MetricsRegistry`` collector.
+        """Expose this cache's counters as a ``MetricsRegistry`` collector
+        and attach the registry for per-tenant hit/miss/eviction series
+        (``cache_hits{tenant=..,kind=..}`` etc.) plus eviction-attribution
+        events.
 
         ``stats()`` reads everything under the cache's own lock, and the
         registry invokes collectors outside its lock, so the engine's
-        lock-ordering rule (registry lock is a leaf) holds.
+        lock-ordering rule (registry lock is a leaf) holds; per-tenant
+        emission likewise happens after the cache lock is released.
         """
+        self._registry = registry
         registry.register_collector(name, self.stats)
 
     def stats(self) -> dict:

@@ -1,7 +1,15 @@
-"""Observability: query-lifecycle tracing, metrics, cost-model audit."""
+"""Observability: query-lifecycle tracing, metrics, cost-model audit,
+flight recording, SLO burn-rate monitoring and drift detection."""
 from .audit import CostAudit
+from .drift import DriftDetector, PageHinkley
+from .flight import (FlightRecorder, dump_live_recorders, summarize_outcome,
+                     validate_dump)
 from .metrics import MetricsRegistry
+from .slo import SLObjective, SLOMonitor, default_objectives
 from .trace import NULL_TRACER, NullTracer, SpanRecord, Tracer
 
-__all__ = ["CostAudit", "MetricsRegistry", "NULL_TRACER", "NullTracer",
-           "SpanRecord", "Tracer"]
+__all__ = ["CostAudit", "DriftDetector", "FlightRecorder",
+           "MetricsRegistry", "NULL_TRACER", "NullTracer", "PageHinkley",
+           "SLObjective", "SLOMonitor", "SpanRecord", "Tracer",
+           "default_objectives", "dump_live_recorders",
+           "summarize_outcome", "validate_dump"]

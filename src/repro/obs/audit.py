@@ -26,6 +26,20 @@ class CostAudit:
     def __init__(self, max_records: int = 8192):
         self._lock = threading.Lock()
         self._records: deque = deque(maxlen=int(max_records))
+        # Record listeners (e.g. the drift detector): invoked once per
+        # appended record, outside the audit lock — a listener may call
+        # back into components that themselves log metrics.
+        self._listeners: list = []
+
+    @property
+    def capacity(self) -> int:
+        """The retention bound (ring ``maxlen``) — long-running services
+        cannot grow audit memory past it; exposed as a service gauge."""
+        return int(self._records.maxlen or 0)
+
+    def add_listener(self, fn) -> None:
+        """Register ``fn(record_dict)`` to observe every appended record."""
+        self._listeners.append(fn)
 
     def record(self, pairs, *, tenant: str = "default",
                query_id: int = -1) -> None:
@@ -48,6 +62,12 @@ class CostAudit:
                          "query_id": query_id})
         with self._lock:
             self._records.extend(recs)
+        for fn in self._listeners:
+            for r in recs:
+                try:
+                    fn(r)
+                except Exception:   # a broken listener must not sink queries
+                    pass
 
     def records(self) -> list[dict]:
         with self._lock:

@@ -25,6 +25,7 @@ Design rules:
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 
 
@@ -42,13 +43,21 @@ class MetricsRegistry:
     collectors."""
 
     def __init__(self, *, max_events: int = 4096,
-                 histogram_window: int = 4096):
+                 histogram_window: int = 4096,
+                 histogram_window_s: float | None = None,
+                 clock=time.monotonic):
         self._lock = threading.Lock()
         self._counters: dict[tuple, float] = {}
         self._gauges: dict[tuple, float] = {}
         self._hists: dict[tuple, deque] = {}
         self._events: deque = deque(maxlen=int(max_events))
         self._hist_window = int(histogram_window)
+        # Optional *time* window on top of the count bound: a sample whose
+        # age reaches the window is gone — strictly older-than keeps, so a
+        # sample lands exactly at the edge ages out (see test_obs_loop).
+        self._hist_window_s = (None if histogram_window_s is None
+                               else float(histogram_window_s))
+        self._clock = clock
         self._collectors: dict[str, object] = {}
 
     @staticmethod
@@ -73,13 +82,43 @@ class MetricsRegistry:
             self._gauges[key] = value
 
     def observe(self, name: str, value: float, **labels) -> None:
-        """Record one histogram sample (sliding window, per series)."""
+        """Record one histogram sample (sliding window, per series).
+
+        Samples are stamped with the registry clock; when a time window is
+        configured (``histogram_window_s``) aged-out samples are pruned
+        here and excluded from summaries.
+        """
         key = self._key(name, labels)
+        now = self._clock()
         with self._lock:
             h = self._hists.get(key)
             if h is None:
                 h = self._hists[key] = deque(maxlen=self._hist_window)
-            h.append(float(value))
+            h.append((now, float(value)))
+            self._prune_locked(h, now)
+
+    def _prune_locked(self, h: deque, now: float) -> None:
+        if self._hist_window_s is None:
+            return
+        edge = now - self._hist_window_s
+        while h and h[0][0] <= edge:
+            h.popleft()
+
+    def _hist_values(self, samples, now: float) -> list[float]:
+        """Window-filtered sample values (edge-exclusive on the old side)."""
+        if self._hist_window_s is None:
+            return [v for _, v in samples]
+        edge = now - self._hist_window_s
+        return [v for t, v in samples if t > edge]
+
+    def histogram_summary(self, name: str, **labels) -> dict:
+        """Point-in-time summary of one histogram series (an empty or
+        fully-aged-out window reads as count=0 with zeroed stats)."""
+        key = self._key(name, labels)
+        now = self._clock()
+        with self._lock:
+            samples = list(self._hists.get(key, ()))
+        return self._hist_summary(self._hist_values(samples, now))
 
     def event(self, name: str, **payload) -> None:
         """Append a structured event record (bounded ring)."""
@@ -93,6 +132,14 @@ class MetricsRegistry:
         with self._lock:
             return sum(v for (n, _), v in self._counters.items()
                        if n == name)
+
+    def counter_series(self, name: str) -> dict[tuple, float]:
+        """All of one counter's labeled series: ``{label-items: value}``
+        (label items are the sorted ``(key, value)`` tuples).  The cheap
+        read the SLO monitor samples per-tenant counters through."""
+        with self._lock:
+            return {labels: v for (n, labels), v in self._counters.items()
+                    if n == name}
 
     def events(self, name: str | None = None) -> list[dict]:
         with self._lock:
@@ -124,10 +171,12 @@ class MetricsRegistry:
         collectors (queue depth, cache stats, planner stats, audit
         summaries) are then invoked immediately after in the same pass.
         """
+        now = self._clock()
         with self._lock:
             counters = dict(self._counters)
             gauges = dict(self._gauges)
-            hists = {k: list(v) for k, v in self._hists.items()}
+            hists = {k: self._hist_values(v, now)
+                     for k, v in self._hists.items()}
             collectors = list(self._collectors.items())
         out: dict = {}
         totals: dict[str, float] = {}

@@ -510,7 +510,27 @@ class PipelineExecutor:
         coherently with a structured ``Backpressure``, never half-run.
         Stages then carry the inherited tenant and absolute deadline
         through the queue pre-admitted.
+
+        A pipeline failure lands in the service's flight recorder (which
+        auto-dumps a post-mortem bundle); stage-level failures were
+        already recorded where they happened and are not re-recorded.
         """
+        from repro.engine.admission import QueueFull
+        try:
+            return self._run_pipeline(query, physical, tenant=tenant,
+                                      deadline_s=deadline_s)
+        except Exception as e:
+            if (not isinstance(e, QueueFull)      # sheds are not failures
+                    and not getattr(e, "_svc_failure_counted", False)):
+                e._svc_failure_counted = True
+                self.service.flight.record_failure(
+                    tenant=tenant, where="pipeline", error=repr(e))
+            raise
+
+    def _run_pipeline(self, query: Query,
+                      physical: PhysicalPlan | None = None, *,
+                      tenant: str = "default",
+                      deadline_s: float | None = None) -> PipelineResult:
         if physical is None:
             physical = self.optimizer.optimize(query)
         with self.service.tracer.span("pipeline", tenant=tenant,

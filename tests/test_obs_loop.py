@@ -1,0 +1,405 @@
+"""The closed observability loop: windowed histograms, burn-rate SLO
+alerts, the flight recorder, and cost-model drift acting on the planner
+and admission control.
+
+Everything deterministic runs on an injected fake clock; the acceptance
+tests drive real tiny joins through ``JoinQueryService`` and then feed
+perturbed measured timings through the audit trail, asserting the drift
+detector flags the sticky plan for re-pricing and widens the tenant's
+admission margin.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import CoProcessor, uniform_relation, unique_relation
+from repro.engine import (AdmissionController, BuildTableCache, JoinQuery,
+                          JoinQueryService, QueryPlanner, Tenant)
+from repro.obs import (CostAudit, DriftDetector, FlightRecorder,
+                       MetricsRegistry, PageHinkley, SLObjective, SLOMonitor,
+                       validate_dump)
+
+
+@pytest.fixture(scope="module")
+def cp():
+    return CoProcessor()
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _tiny_query(qid=1, **kw):
+    b = unique_relation(256, seed=1)
+    s = uniform_relation(256, key_range=256, seed=2)
+    return JoinQuery(build=b, probe=s, query_id=qid, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Time-windowed histograms.
+# ---------------------------------------------------------------------------
+def test_histogram_time_window_edge_semantics():
+    clk = FakeClock()
+    reg = MetricsRegistry(histogram_window_s=10.0, clock=clk)
+    reg.observe("lat_s", 1.0)          # t=0
+    clk.t = 5.0
+    reg.observe("lat_s", 2.0)          # t=5
+    clk.t = 10.0
+    # The t=0 sample's age reached the window exactly: strictly-older-than
+    # keeps, so exactly-at-the-edge is OUT.
+    s = reg.histogram_summary("lat_s")
+    assert s["count"] == 1 and s["min"] == s["max"] == 2.0
+    clk.t = 14.9
+    assert reg.histogram_summary("lat_s")["count"] == 1
+    clk.t = 15.0
+    # Fully aged-out window reads as empty, not stale.
+    s = reg.histogram_summary("lat_s")
+    assert s["count"] == 0 and s["p50"] == 0.0 and s["sum"] == 0.0
+    # snapshot() applies the same window.
+    assert reg.snapshot()["lat_s"]["count"] == 0
+
+
+def test_histogram_count_window_unchanged_without_time_window():
+    reg = MetricsRegistry(histogram_window=3)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        reg.observe("x", v)
+    s = reg.snapshot()["x"]
+    assert s["count"] == 3 and s["min"] == 2.0 and s["max"] == 4.0
+
+
+# ---------------------------------------------------------------------------
+# SLO burn-rate monitor on deterministic counter streams.
+# ---------------------------------------------------------------------------
+def _monitor(reg, clk, **obj_kw):
+    obj = SLObjective("deadline", good="deadline_hits",
+                      bad="deadline_misses", target=0.75,
+                      fast_window_s=60.0, slow_window_s=300.0,
+                      burn_threshold=2.0, min_events=8, **obj_kw)
+    return SLOMonitor(reg, [obj], clock=clk)
+
+
+def test_burn_rate_fires_and_clears_single_transition():
+    clk, reg = FakeClock(), MetricsRegistry()
+    mon = _monitor(reg, clk)
+    mon.evaluate(force=True)                     # baseline sample at t=0
+    # 12 events, 8 misses: error rate 0.667 / budget 0.25 = burn 2.67.
+    for _ in range(4):
+        reg.inc("deadline_hits", tenant="gold")
+    for _ in range(8):
+        reg.inc("deadline_misses", tenant="gold")
+    clk.t = 1.0
+    active = mon.evaluate(force=True)
+    keys = {(a["objective"], a["tenant"]) for a in active}
+    assert ("deadline", "gold") in keys and ("deadline", "*") in keys
+    a = next(x for x in active if x["tenant"] == "gold")
+    assert a["burn_fast"] == pytest.approx(8 / 12 / 0.25, rel=1e-3)
+    assert a["events_fast"] == 12
+    # Re-evaluating while still firing does NOT re-count the alert.
+    clk.t = 2.0
+    mon.evaluate(force=True)
+    assert reg.counter_value("slo_alerts_total") == len(active)
+    fires = [e for e in reg.events("slo") if e["action"] == "fire"]
+    assert len(fires) == len(active)
+    # Good traffic ages the bad window out: alert clears once both
+    # windows drop under threshold.
+    for _ in range(200):
+        reg.inc("deadline_hits", tenant="gold")
+    clk.t = 400.0                                # past the slow window
+    mon.evaluate(force=True)
+    clk.t = 401.0
+    assert mon.evaluate(force=True) == []
+    resolves = [e for e in reg.events("slo") if e["action"] == "resolve"]
+    assert {(e["objective"], e["tenant"]) for e in resolves} == keys
+
+
+def test_burn_rate_needs_min_events_and_both_windows():
+    clk, reg = FakeClock(), MetricsRegistry()
+    mon = _monitor(reg, clk)
+    mon.evaluate(force=True)
+    # 100% errors but only 4 events: under min_events, no alert (tiny
+    # denominators make infinite-looking burns out of a blip).
+    for _ in range(4):
+        reg.inc("deadline_misses", tenant="gold")
+    clk.t = 1.0
+    assert mon.evaluate(force=True) == []
+    # Many events at a healthy error rate: burn < threshold, no alert.
+    for _ in range(96):
+        reg.inc("deadline_hits", tenant="gold")
+    clk.t = 2.0
+    assert mon.evaluate(force=True) == []
+    assert reg.counter_value("slo_alerts_total") == 0
+
+
+def test_burn_rate_windows_diverge_fast_spike_slow_quiet():
+    """A fresh spike after a long healthy history trips the fast window
+    but not the slow one — the multi-window AND suppresses it."""
+    clk, reg = FakeClock(), MetricsRegistry()
+    mon = _monitor(reg, clk)
+    mon.evaluate(force=True)
+    for _ in range(400):                         # long healthy history
+        reg.inc("deadline_hits", tenant="gold")
+    for t in range(1, 6):
+        clk.t = float(60 * t)
+        mon.evaluate(force=True)
+    for _ in range(10):                          # fresh spike
+        reg.inc("deadline_misses", tenant="gold")
+    clk.t = 301.0
+    active = mon.evaluate(force=True)
+    assert active == []                          # slow window still healthy
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder: rings, triggers, dumps.
+# ---------------------------------------------------------------------------
+def test_flight_ring_bounds_and_tenant_rings():
+    clk = FakeClock()
+    fr = FlightRecorder(capacity=4, tenant_capacity=2, clock=clk)
+    for i in range(6):
+        fr.record_admission("degrade", tenant=f"t{i % 2}", query_id=i)
+    assert len(fr) == 4
+    bundle = fr.dump("manual")
+    assert validate_dump(bundle)
+    assert [r["query_id"] for r in bundle["records"]] == [2, 3, 4, 5]
+    assert [r["query_id"] for r in bundle["tenants"]["t0"]] == [2, 4]
+    assert bundle["counts"]["admission"] == 6     # counts survive eviction
+
+
+def test_flight_shed_storm_dump_and_cooldown(tmp_path):
+    clk = FakeClock()
+    fr = FlightRecorder(clock=clk, storm_n=3, storm_window_s=5.0,
+                        min_dump_gap_s=30.0, dump_dir=str(tmp_path))
+    # Three sheds spread WIDER than the window: no storm.
+    for t in (0.0, 3.0, 6.0):
+        clk.t = t
+        fr.record_admission("shed", tenant="a")
+    assert fr.dump_count == 0
+    # Three sheds inside the window: storm -> dump written to disk.
+    for t in (10.0, 11.0, 12.0):
+        clk.t = t
+        fr.record_admission("shed", tenant="a")
+    assert fr.dump_count == 1 and len(fr.dump_paths) == 1
+    with open(fr.dump_paths[0]) as f:
+        bundle = json.load(f)
+    assert validate_dump(bundle) and bundle["reason"] == "shed_storm"
+    # Another storm inside the cooldown stays quiet...
+    for t in (13.0, 13.5, 14.0):
+        clk.t = t
+        fr.record_admission("shed", tenant="a")
+    assert fr.dump_count == 1
+    # ...and fires again once the gap has passed.
+    for t in (50.0, 51.0, 52.0):
+        clk.t = t
+        fr.record_admission("shed", tenant="a")
+    assert fr.dump_count == 2
+
+
+def test_flight_deadline_miss_burst_triggers_dump():
+    class Out:                                    # duck-typed outcome
+        def __init__(self, i):
+            self.plan = None
+            self.timing = None
+            self.query_id = i
+            self.tag = "t"
+            self.tenant = "gold"
+            self.queued_s = 0.0
+            self.wall_s = 0.01
+            self.deadline_hit = False
+            self.degraded = False
+            self.cache_hit = False
+
+    clk = FakeClock()
+    fr = FlightRecorder(clock=clk, burst_n=3, burst_window_s=5.0,
+                        min_dump_gap_s=0.0)
+    for i in range(3):
+        clk.t = float(i)
+        fr.record_outcome(Out(i))
+    assert fr.dump_count == 1
+    assert fr.auto_dumps[-1]["reason"] == "deadline_miss_burst"
+
+
+def test_service_failure_lands_in_flight_recorder(cp):
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=2)
+    with svc:
+        h = svc.submit_deferred(lambda outs: (_ for _ in ()).throw(
+            RuntimeError("boom")), tenant="gold")
+        with pytest.raises(RuntimeError):
+            h()
+        failures = [r for r in svc.flight.dump("t")["records"]
+                    if r["kind"] == "failure"]
+    assert len(failures) == 1
+    f = failures[0]
+    assert f["tenant"] == "gold" and "boom" in f["error"]
+    # A failure always dumps (in-memory here: no dump_dir configured).
+    assert svc.flight.dump_count >= 1 and svc.flight.auto_dumps
+    assert validate_dump(svc.flight.auto_dumps[-1])
+    assert svc.stats()["flight"]["counts"]["failure"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Page-Hinkley + the drift loop acting on planner and admission.
+# ---------------------------------------------------------------------------
+def test_page_hinkley_stationary_silent_shift_fires_once():
+    ph = PageHinkley(delta=0.05, threshold=0.5, min_samples=8)
+    rng = np.random.default_rng(7)
+    for _ in range(300):
+        assert not ph.update(float(rng.normal(0.0, 0.02)))
+    fired = 0
+    for _ in range(40):
+        if ph.update(float(rng.normal(0.9, 0.02))):
+            fired += 1
+            ph.reset()
+    assert fired == 1                  # the shift, once; then re-armed
+
+
+def test_drift_detector_acts_flags_and_margins():
+    reg = MetricsRegistry()
+    flagged, margins = [], {}
+    det = DriftDetector(metrics=reg,
+                        on_drift=lambda p, s, st: flagged.append((p, s)),
+                        on_margin=margins.__setitem__,
+                        threshold=0.5, min_samples=4, margin_min_samples=4)
+    assert reg.snapshot()["cost_model_staleness"] == 0.0   # pre-seeded
+    rec = {"phase": "probe", "scheme": "DD", "tenant": "gold"}
+    for _ in range(6):
+        det.observe_record({**rec, "ratio": 1.0})
+    assert flagged == [] and margins == {}
+    for _ in range(12):
+        det.observe_record({**rec, "ratio": 3.0})
+    assert ("probe", "DD") in flagged
+    snap = reg.snapshot()
+    assert snap["cost_model_staleness"] >= 1.0
+    assert snap["cost_model_drift_events"] >= 1
+    # q75 of the mixed ratio window prices the gold margin up.
+    assert margins["gold"] == pytest.approx(3.0)
+    assert snap["admission_margin{tenant=gold}"] == pytest.approx(3.0)
+    det.mark_repriced("probe", "DD")
+    assert reg.snapshot()["cost_model_staleness"] == 0.0
+    # Bad ratios (None / non-finite / <= 0) are ignored, not crashed on.
+    for bad in (None, 0.0, -1.0, float("nan"), float("inf")):
+        det.observe_record({**rec, "ratio": bad})
+
+
+def test_drift_reprices_sticky_plan_and_widens_admission(cp):
+    """The acceptance loop: perturb measured phase times through the
+    audit trail and watch the sticky plan get flagged for re-pricing and
+    the tenant's admission margin widen."""
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=0, tenants=[Tenant("gold")])
+    svc._ensure_workers = lambda: None
+    svc.drift.min_samples = 4
+
+    q = _tiny_query(qid=1, tenant="gold")
+    svc.submit(q, block=False)
+    qq, enq, _b, _d = svc._queue.get_nowait()
+    out = svc.execute(qq, enqueued_at=enq)
+    planner = svc.planner
+    assert planner._plan_cache, "warm query left no sticky plan"
+    assert svc.admission.margin_of("gold") == 1.0
+    svc.drift.margin_min_samples = 4
+
+    # Replay the executed plan's phases with 4x-inflated measured times —
+    # the audit feed a contention shift would produce.
+    pairs = QueryPlanner.phase_pairs(out.plan, out.timing)
+    inflated = [(p, s, est, 4.0 * max(est, 1e-4))
+                for p, s, est, _ in pairs]
+    for i in range(16):
+        svc.audit.record(inflated, tenant="gold", query_id=100 + i)
+
+    st = planner.stats()
+    assert st["replan_flags"] >= 1
+    algo = out.plan.algorithm
+    assert any(ver == -1 for sig, (ver, plan) in
+               planner._plan_cache.items() if plan.algorithm == algo)
+    # The widened margin reached admission pricing.
+    assert svc.admission.margin_of("gold") > 1.0
+    snap = svc.stats()["metrics"]
+    assert snap["cost_model_staleness"] >= 1.0
+    assert snap.get("plans_flagged_for_replan", 0) >= 1
+    assert any(e for e in svc.metrics.events("drift"))
+
+    # Re-choosing the same shape re-prices through the normal sticky
+    # path: the flagged entry is stamped back to the live version.
+    planner.choose(build_n=q.build.size, probe_n=q.probe.size,
+                   max_out=out.plan.max_out)
+    assert any(ver == planner.online.version for sig, (ver, plan) in
+               planner._plan_cache.items() if plan.algorithm == algo)
+    svc.close()
+
+
+def test_admission_margin_flips_borderline_decision():
+    ac = AdmissionController([Tenant("gold", deadline_s=1.0)],
+                             num_workers=1, mode="cost")
+    d = ac.decide("gold", est_s=0.6, deadline_s=1.0)
+    assert d.action == "admit"
+    ac.set_margin("gold", 2.0)
+    d = ac.decide("gold", est_s=0.6, deadline_s=1.0)
+    assert d.action in ("shed", "degrade")       # 1.2s predicted > 1.0s
+    assert ac.margins() == {"gold": 2.0}
+    ac.set_margin("gold", 0.5)                   # clamped at 1.0
+    assert ac.margin_of("gold") == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Satellites: cache attribution, audit retention.
+# ---------------------------------------------------------------------------
+def _blob(nbytes: int):
+    return {"a": np.zeros(nbytes, dtype=np.uint8)}
+
+
+def test_cache_eviction_attribution_per_tenant():
+    reg = MetricsRegistry()
+    cache = BuildTableCache(budget_bytes=1000)
+    cache.register_metrics(reg, "cache")
+    cache.put("ka", _blob(600), tenant="alice")
+    assert cache.get("ka", "alice") is not None
+    assert cache.get("kx", "bob") is None
+    # Bob's insert pushes Alice's entry out of the shared budget.
+    cache.put("kb", _blob(600), tenant="bob")
+    snap = reg.snapshot()
+    assert snap["cache_hits{kind=table,tenant=alice}"] == 1
+    assert snap["cache_misses{kind=table,tenant=bob}"] == 1
+    assert snap["cache_evictions{kind=table,tenant=alice}"] == 1
+    evs = reg.events("cache_eviction")
+    assert len(evs) == 1
+    assert evs[0]["evictor"] == "bob" and evs[0]["victim"] == "alice"
+    assert evs[0]["kind"] == "table" and evs[0]["nbytes"] == 600
+    # The collector view still rides along.
+    assert snap["cache"]["evictions"] == 1
+
+
+def test_audit_bounded_retention_capacity_and_listener():
+    audit = CostAudit(max_records=4)
+    assert audit.capacity == 4
+    seen = []
+    audit.add_listener(seen.append)
+    audit.add_listener(lambda r: 1 / 0)          # broken listener: ignored
+    for i in range(6):
+        audit.record([("probe", "DD", 1.0, 2.0)], query_id=i)
+    assert len(audit.records()) == 4             # bounded ring
+    assert [r["query_id"] for r in audit.records()] == [2, 3, 4, 5]
+    assert [r["query_id"] for r in seen] == list(range(6))
+
+
+def test_service_exposes_loop_collectors(cp):
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=0)
+    svc._ensure_workers = lambda: None
+    svc.submit(_tiny_query(qid=1), block=False)
+    qq, enq, _b, _d = svc._queue.get_nowait()
+    svc.execute(qq, enqueued_at=enq)
+    st = svc.stats()
+    snap = st["metrics"]
+    assert snap["audit_capacity"] == float(svc.audit.capacity) > 0
+    assert math.isfinite(snap["cost_model_staleness"])
+    assert st["flight"]["records"] >= 1
+    assert st["slo"]["objectives"] and st["slo"]["alerts_total"] == 0
+    assert "margins" in st["drift"]
+    assert snap["query_latency_s{tenant=default}"]["count"] == 1
+    svc.close()
