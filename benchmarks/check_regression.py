@@ -18,7 +18,13 @@ query-pipeline and SLO figures, and fails (exit 1) when:
     fired at steady state (alert noise) or stayed silent through the
     bursty overload replay, the flight-recorder dump is missing or
     schema-invalid, or the ``cost_model_staleness`` gauge is absent or
-    non-finite.
+    non-finite, or
+  * the data-path observability went dark or dishonest: the cardinality
+    audit carries no (or non-finite) q-error summary for an executed
+    stage type, the fused run's transfer ledger shows an unknown cause
+    or any ``handoff`` bytes, the ledger's intermediate sum disagrees
+    with the flat fused-path figure, or the adaptive skewed-star run
+    failed to replan or to beat static execution.
 
 The baseline lives in ``benchmarks/baseline.json``; refresh it (with a
 note in the commit) whenever an intentional change moves the number.
@@ -108,6 +114,66 @@ def main() -> int:
         failures.append(f"metrics registry host_bytes_moved={reg_bytes} "
                         f"disagrees with the fused hand-off figure "
                         f"{fused_bytes}")
+
+    # -- data-path observability: cardinality audit present + finite ------
+    KNOWN_CAUSES = ("fingerprint", "multicol_pack", "handoff", "result")
+    INTERMEDIATE = ("fingerprint", "multicol_pack", "handoff")
+    card = payload.get("cardinality") or {}
+    if not card.get("count") or not card.get("stage_types"):
+        failures.append("cardinality audit is empty (payload.cardinality "
+                        "missing stage-type q-error summaries)")
+    else:
+        shown = []
+        for stype, s in sorted(card["stage_types"].items()):
+            p50, p95 = s.get("p50"), s.get("p95")
+            finite = all(isinstance(v, (int, float)) and math.isfinite(v)
+                         and v >= 1.0 for v in (p50, p95))
+            if not s.get("count") or not finite:
+                failures.append(f"cardinality q-error for stage type "
+                                f"'{stype}' is missing or non-finite: {s}")
+            else:
+                shown.append(f"{stype}: p50={p50:.2f} p95={p95:.2f}")
+        print(f"check_regression: cardinality records={card['count']}, "
+              f"q-error {{{'; '.join(shown)}}}", flush=True)
+
+    # -- data-path observability: ledger attribution exact + fused-quiet --
+    ledger = payload.get("ledger") or {}
+    by_cause = ledger.get("by_cause") or {}
+    if not by_cause:
+        failures.append("transfer ledger missing from payload")
+    else:
+        unknown = sorted(set(by_cause) - set(KNOWN_CAUSES))
+        if unknown:
+            failures.append(f"transfer ledger reports unknown cause(s) "
+                            f"{unknown}")
+        if by_cause.get("handoff", 0) != 0:
+            failures.append(f"fused-path ledger shows "
+                            f"{by_cause['handoff']} handoff bytes (want 0)")
+        inter_sum = sum(by_cause.get(c, 0) for c in INTERMEDIATE)
+        if inter_sum != fused_bytes:
+            failures.append(f"ledger intermediate sum {inter_sum} "
+                            f"disagrees with the fused hand-off figure "
+                            f"{fused_bytes}")
+        print(f"check_regression: ledger by_cause={by_cause} "
+              f"(intermediate sum {inter_sum})", flush=True)
+
+    # -- adaptive re-optimization must fire and win on the skewed star ----
+    adaptive = payload.get("adaptive") or {}
+    if not adaptive:
+        failures.append("adaptive skewed-star section missing from payload")
+    else:
+        replans = adaptive.get("replans") or []
+        t_s, t_a = adaptive.get("static_s"), adaptive.get("adaptive_s")
+        print(f"check_regression: adaptive static={t_s:.3f}s "
+              f"adaptive={t_a:.3f}s replans={len(replans)} beats_static="
+              f"{adaptive.get('adaptive_beats_static')}", flush=True)
+        if not replans:
+            failures.append("adaptive run performed no replans on the "
+                            "skewed star (estimate-vs-observed trigger "
+                            "went dark)")
+        if not adaptive.get("adaptive_beats_static"):
+            failures.append(f"adaptive execution ({t_a:.3f}s) did not "
+                            f"beat static ({t_s:.3f}s) on the skewed star")
 
     slo = rollup.get("benchmarks", {}).get("slo_bench")
     if slo and slo.get("ok") and slo.get("payload"):

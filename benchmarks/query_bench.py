@@ -1,6 +1,6 @@
 """Query-pipeline benchmark: join ordering, data-path fusion, and reuse.
 
-Four measured figures for the multi-join subsystem on a 3-join star
+Five measured figures for the multi-join subsystem on a 3-join star
 query (fact ⋈ D0 ⋈ D1 ⋈ D2, one highly selective dimension filter):
 
   1. **join order** — the cost-model-chosen order vs the worst enumerated
@@ -13,7 +13,10 @@ query (fact ⋈ D0 ⋈ D1 ⋈ D2, one highly selective dimension filter):
      report ``host_bytes_moved == 0`` for its intermediates.
   3. **single device** — the chosen order re-run with planning pinned to
      GPU_ONLY: what pipelined co-processing over both groups adds.
-  4. **star replay** — a ``WorkloadGenerator.star()`` stream through one
+  4. **adaptive replan** — an estimator-hostile skewed star, static vs
+     adaptive execution: the adaptive executor re-orders the remaining
+     stages from observed cardinalities mid-pipeline and must win.
+  5. **star replay** — a ``WorkloadGenerator.star()`` stream through one
      shared executor: multi-join traffic with recurring dimensions,
      reporting pipelines/sec and both build-side cache hit kinds.
 
@@ -40,6 +43,45 @@ def _run_verified(executor, query, physical, ref):
         "pipeline rows diverge from the NumPy reference"
     assert res.aggregate == ref[1], (res.aggregate, ref[1])
     return res
+
+
+def _skewed_star(fact: int, seed: int = 0):
+    """Estimator-hostile 3-join star (scaled twin of the unit-test one).
+
+    ``fact.fk0`` is half junk: the System-R estimate for the first join
+    lands ~16x under the true cardinality, and the d2 edge — a shrink at
+    the true intermediate size, a growth at the estimated one — flips
+    which tail order is cheapest.  Static planning runs d2 last; the
+    adaptive executor observes stage 0's exact count and runs it first.
+    """
+    from repro.queries import Join, Query, Table
+
+    scale = max(1, fact // 8192)
+    rng = np.random.default_rng(seed)
+    d0_n, d1_n = 128 * scale, 144 * scale
+    d2_distinct, d2_rep, fk2_range = 40 * scale, 10, 4000 * scale
+    fk0 = np.where(rng.random(fact) < 0.5,
+                   rng.integers(0, d0_n, fact),
+                   rng.integers(10 * fact, 20 * fact, fact)).astype(np.int32)
+    tables = {
+        "fact": Table("fact", {
+            "fk0": fk0,
+            "fk1": rng.integers(0, d1_n, fact).astype(np.int32),
+            "fk2": rng.integers(0, fk2_range, fact).astype(np.int32),
+            "v": rng.integers(0, 100, fact).astype(np.int32)}),
+        "d0": Table("d0", {"id": np.arange(d0_n, dtype=np.int32),
+                           "a": rng.integers(0, 10, d0_n).astype(np.int32)}),
+        "d1": Table("d1", {"id": np.arange(d1_n, dtype=np.int32),
+                           "b": rng.integers(0, 10, d1_n).astype(np.int32)}),
+        "d2": Table("d2", {
+            "id": np.repeat(np.arange(d2_distinct, dtype=np.int32), d2_rep),
+            "c": rng.integers(0, 10,
+                              d2_distinct * d2_rep).astype(np.int32)})}
+    return Query(tables=tables,
+                 joins=(Join("fact", "fk0", "d0", "id"),
+                        Join("fact", "fk1", "d1", "id"),
+                        Join("fact", "fk2", "d2", "id")),
+                 aggregate=("count",))
 
 
 def query_pipeline(smoke: bool = False):
@@ -117,6 +159,11 @@ def query_pipeline(smoke: bool = False):
     # snapshot (including the predicted-vs-measured ``prediction_error``
     # summary) rides in the payload for the regression gate.
     out["metrics_snapshot"] = st_chosen["metrics"]
+    # Data-path observability payload for the regression gate: the host-
+    # transfer ledger (every byte attributed to a cause) and the
+    # cardinality audit's q-error summary from the chosen fused run.
+    out["ledger"] = st_chosen["host_transfer_ledger"]
+    out["cardinality"] = st_chosen["cardinality_error"]
     out["trace_path"] = write_trace(tr_chosen, "query_pipeline")
     span_names = {s.name for s in tr_chosen.spans()}
     assert {"admit", "queue", "plan", "query", "pipeline", "finalize",
@@ -166,7 +213,51 @@ def query_pipeline(smoke: bool = False):
     csv_row("query/single_device", t_single * 1e6,
             f"coproc_speedup={t_single/t_chosen:.2f}x")
 
-    # -- 4. star replay: multi-join traffic with recurring dimensions -----
+    # -- 4. adaptive mid-pipeline re-optimization -------------------------
+    # The estimator-hostile skewed star, static vs adaptive: the adaptive
+    # executor observes the first stage's exact cardinality, re-prices the
+    # tail, and flips the remaining order — same rows, less work.
+    skew_q = _skewed_star(fact, seed=bench_seed(41))
+    skew_ref = reference_execute(skew_q)
+
+    def timed_skew(adaptive: bool):
+        svc = JoinQueryService(cp=cp, planner=planner, num_workers=2)
+        with PipelineExecutor(service=svc, optimizer=optimizer,
+                              adaptive=adaptive) as ex:
+            res = _run_verified(ex, skew_q, None, skew_ref)
+            for _ in range(2):
+                res = ex.run(skew_q)
+            saved, planner.online.alpha = planner.online.alpha, 0.0
+            try:
+                last = {"res": res}
+                t = time_call(lambda: last.update(res=ex.run(skew_q)),
+                              reps=reps, warmup=1)
+            finally:
+                planner.online.alpha = saved
+            stats = svc.stats()
+        return t, last["res"], stats
+
+    t_skew_static, res_skew_static, _ = timed_skew(False)
+    t_skew_adapt, res_skew_adapt, st_skew = timed_skew(True)
+    assert res_skew_adapt.replans, \
+        "skewed star did not trigger an adaptive replan"
+    assert st_skew["host_bytes_moved"] == 0   # replans stay fused-quiet
+    out["adaptive"] = {
+        "static_s": t_skew_static, "adaptive_s": t_skew_adapt,
+        "adaptive_speedup": t_skew_static / t_skew_adapt,
+        "adaptive_beats_static": bool(t_skew_adapt < t_skew_static),
+        "replans": res_skew_adapt.replans,
+        "static_order": [str(s.join)
+                         for s in res_skew_static.physical.stages],
+        "adaptive_order": [str(s.join)
+                           for s in res_skew_adapt.physical.stages],
+        "cardinality": st_skew["cardinality_error"]}
+    csv_row("query/adaptive_static", t_skew_static * 1e6, "")
+    csv_row("query/adaptive_replan", t_skew_adapt * 1e6,
+            f"speedup={t_skew_static/t_skew_adapt:.2f}x;"
+            f"replans={len(res_skew_adapt.replans)}")
+
+    # -- 5. star replay: multi-join traffic with recurring dimensions -----
     gen = WorkloadGenerator(max(1024, fact // 4), seed=bench_seed(29))
     stars = [gen.star() for _ in range(n_stars)]
     refs = [reference_execute(s) for s in stars]

@@ -29,6 +29,13 @@ class Relation:
 
     rid: jax.Array
     key: jax.Array
+    # Optional structural fingerprint hint (not a pytree leaf — dropped
+    # through jit, which is fine: hints only matter on the host path into
+    # the engine's cache keying).  When set, ``JoinQueryService`` keys the
+    # BuildTableCache off this string instead of pulling the key column to
+    # host for a content hash — the ledger's ``fingerprint`` cause tracks
+    # any relation that still arrives without one.
+    fp_hint: str | None = None
 
     @property
     def size(self) -> int:

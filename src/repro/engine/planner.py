@@ -507,8 +507,8 @@ class QueryPlanner:
         if hit is not None:
             prev = hit[1]
             keep = [p for p in candidates if keep_key(p) == keep_key(prev)]
-            if keep and effective(best) >= self.replan_margin * \
-                    effective(keep[0]):
+            if keep and not self.replan_beats(effective(best),
+                                              effective(keep[0])):
                 best = keep[0]
         with self._lock:
             if len(self._plan_cache) > 512:
@@ -518,6 +518,17 @@ class QueryPlanner:
                 k = count_key(best)
                 self.plan_counts[k] = self.plan_counts.get(k, 0) + 1
         return best, False
+
+    def replan_beats(self, challenger_s: float, incumbent_s: float) -> bool:
+        """The one replan-hysteresis rule: a challenger displaces an
+        incumbent only by beating its estimate by ``replan_margin``.
+
+        Shared by sticky per-stage re-pricing (above) and the executor's
+        mid-pipeline order replans (``optimize.reprice_remaining``) —
+        near-tie flips trade compiled executables and warmed caches for
+        nothing, so both layers apply the identical margin.
+        """
+        return float(challenger_s) < self.replan_margin * float(incumbent_s)
 
     def flag_replan(self, *, algorithm: str | None = None,
                     scheme: str | None = None) -> int:

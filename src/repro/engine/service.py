@@ -33,10 +33,13 @@ import queue
 import threading
 import time
 
+import numpy as np
+
 from repro.core.coprocess import CoProcessor, Timing
 from repro.core.hash_table import JoinResult, default_num_buckets
-from repro.obs import (CostAudit, DriftDetector, FlightRecorder,
-                       MetricsRegistry, NULL_TRACER, SLOMonitor, Tracer)
+from repro.obs import (CardinalityAudit, CostAudit, DriftDetector,
+                       FlightRecorder, MetricsRegistry, NULL_TRACER,
+                       SLOMonitor, Tracer, TransferLedger)
 
 from .admission import (AdmissionController, Backpressure, QueueFull,
                         Tenant, TenantFairQueue)
@@ -260,6 +263,7 @@ class JoinQueryService:
     def __init__(self, cp: CoProcessor | None = None,
                  planner: QueryPlanner | None = None, *,
                  cache_budget_bytes: int = 256 << 20,
+                 tenant_cache_budget_bytes=None,
                  max_queue: int = 128, num_workers: int = 2,
                  priority_aging_s: float = 5.0,
                  tenants=None, admission_mode: str = "cost",
@@ -272,7 +276,8 @@ class JoinQueryService:
                  drift: DriftDetector | None = None):
         self.cp = cp or CoProcessor()
         self.planner = planner or QueryPlanner()
-        self.cache = BuildTableCache(cache_budget_bytes)
+        self.cache = BuildTableCache(
+            cache_budget_bytes, tenant_budget_bytes=tenant_cache_budget_bytes)
         self.num_workers = int(num_workers)
         self._clock = clock
         # Observability: spans (query lifecycle), a metrics registry (all
@@ -282,6 +287,13 @@ class JoinQueryService:
         self.tracer = tracer if tracer is not None else Tracer()
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.audit = CostAudit()
+        # Data-path observability: every host-boundary byte is attributed
+        # to (stage, column, cause) in the transfer ledger — the flat
+        # ``host_bytes_moved`` counter is the ledger's intermediate-cause
+        # sum view — and every executed stage's (estimated, observed)
+        # cardinality pair lands in the cardinality audit.
+        self.ledger = TransferLedger(self.metrics)
+        self.cardinality = CardinalityAudit()
         # A CoProcessor constructed standalone carries the no-op tracer;
         # adopt it into this service's tracer so its phase spans land in
         # the query lifecycle.  An explicitly-traced CoProcessor is left
@@ -331,6 +343,10 @@ class JoinQueryService:
             "calibration_version", lambda: int(self.planner.online.version))
         self.metrics.register_collector("prediction_error",
                                         self.audit.summary)
+        self.metrics.register_collector("cardinality_error",
+                                        self.cardinality.summary)
+        self.metrics.register_collector("host_transfer_ledger",
+                                        self.ledger.summary)
         # The closed loop: a flight recorder of recent lifecycles (dumps
         # itself on failures / shed storms / miss bursts), an SLO burn-
         # rate monitor over the per-tenant counters, and a drift detector
@@ -412,17 +428,46 @@ class JoinQueryService:
     host_bytes_moved = property(
         lambda self: self._counter_total("host_bytes_moved"))
 
-    def note_host_bytes(self, nbytes: int) -> None:
-        """Record caller-side host-boundary traffic for intermediates."""
-        self.metrics.inc("host_bytes_moved", int(nbytes))
+    def note_host_bytes(self, nbytes: int, *, cause: str = "handoff",
+                        stage: str = "-", column: str = "-",
+                        direction: str = "d2h",
+                        tenant: str = "default") -> None:
+        """Attribute caller-side host-boundary traffic through the ledger.
 
-    def _fingerprint(self, rel, num_buckets: int) -> str:
+        The ledger increments ``host_bytes_moved`` for every intermediate
+        cause (``result`` bytes are attributed but excluded — final result
+        delivery was never counted as intermediate traffic), so the flat
+        counter stays a sum view over the ledger.
+        """
+        self.ledger.record(nbytes, cause=cause, stage=stage, column=column,
+                           direction=direction, tenant=tenant)
+
+    def _fingerprint(self, rel, num_buckets: int, *,
+                     stage: str = "-", column: str = "key",
+                     tenant: str = "default") -> str:
+        # Structural fast path: a relation carrying an fp_hint (every
+        # pipeline-built stage input does) is keyed without touching the
+        # array contents — no D2H pull, nothing for the ledger.
+        hint = getattr(rel, "fp_hint", None)
+        if hint:
+            return f"struct:{hint}|b={num_buckets}"
         memo_key = (id(rel.rid), id(rel.key), num_buckets)
         with self._lock:
             hit = self._fp_cache.get(memo_key)
             if hit is not None:
                 return hit[0]
+        # Content hash of a hint-less relation: for device-resident arrays
+        # this pulls both columns across the boundary — attributed under
+        # the ledger's ``fingerprint`` cause (memo-missed pulls only; a
+        # repeat of the same array objects hits the memo above).
+        pulled = sum(int(getattr(col, "nbytes", 0))
+                     for col in (rel.rid, rel.key)
+                     if not isinstance(col, np.ndarray))
         fp = relation_fingerprint(rel, num_buckets)
+        if pulled:
+            self.ledger.record(pulled, cause="fingerprint", stage=stage,
+                               column=column, direction="d2h",
+                               tenant=tenant)
         with self._lock:
             if len(self._fp_cache) > 256:
                 self._fp_cache.clear()
@@ -520,7 +565,8 @@ class JoinQueryService:
         max_out = (q.max_out if q.max_out is not None
                    else 4 * probe_n + 1024)
         nb = default_num_buckets(build_n)
-        key = self._fingerprint(q.build, nb)
+        key = self._fingerprint(q.build, nb, stage=q.tag,
+                                column="build.key", tenant=q.tenant)
         table = self.cache.peek(key)
         with self._lock:
             seen = key in self._seen_fingerprints
@@ -582,7 +628,9 @@ class JoinQueryService:
                 # relation re-probed against differently-sized build
                 # tables still hits (fingerprinted at num_buckets=0).
                 skey = partition_layout_key(
-                    self._fingerprint(q.probe, 0), plan.schedule, side="S")
+                    self._fingerprint(q.probe, 0, stage=q.tag,
+                                      column="probe.key", tenant=q.tenant),
+                    plan.schedule, side="S")
                 probe_layout = self.cache.peek_partition(skey)
                 parts_out: dict = {}
                 result, timing = self.cp.phj(
@@ -784,7 +832,9 @@ class JoinQueryService:
                 max_out = (q.max_out if q.max_out is not None
                            else 4 * probe_n + 1024)
                 key = self._fingerprint(q.build,
-                                        default_num_buckets(build_n))
+                                        default_num_buckets(build_n),
+                                        stage=q.tag, column="build.key",
+                                        tenant=q.tenant)
                 table = self.cache.peek(key)
                 with self._lock:
                     seen = key in self._seen_fingerprints
@@ -807,7 +857,9 @@ class JoinQueryService:
             build_n, probe_n = q.build.size, q.probe.size
             max_out = (q.max_out if q.max_out is not None
                        else 4 * probe_n + 1024)
-            key = self._fingerprint(q.build, default_num_buckets(build_n))
+            key = self._fingerprint(q.build, default_num_buckets(build_n),
+                                    stage=q.tag, column="build.key",
+                                    tenant=q.tenant)
             plan = self.planner.choose_degraded(
                 build_n, probe_n, max_out=max_out,
                 cached=self.cache.peek(key) is not None, kind=q.kind,
@@ -1153,4 +1205,7 @@ class JoinQueryService:
                 "tenants": tenants, "cache": snap.get("cache"),
                 "planner": snap.get("planner"),
                 "flight": snap.get("flight"), "slo": snap.get("slo"),
-                "drift": snap.get("drift"), "metrics": snap}
+                "drift": snap.get("drift"),
+                "host_transfer_ledger": snap.get("host_transfer_ledger"),
+                "cardinality_error": snap.get("cardinality_error"),
+                "metrics": snap}

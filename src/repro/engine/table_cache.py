@@ -71,12 +71,19 @@ class BuildTableCache:
     Hit/miss counters are kept per kind so ``stats()`` can attribute reuse.
     """
 
-    def __init__(self, budget_bytes: int = 256 << 20):
+    def __init__(self, budget_bytes: int = 256 << 20,
+                 tenant_budget_bytes=None):
         self.budget_bytes = int(budget_bytes)
+        # Optional per-tenant byte cap (ROADMAP item 1 remainder): an int
+        # applies the same cap to every tenant, a dict caps only the named
+        # tenants.  A tenant over its own cap evicts its own LRU entries
+        # *before* the shared-capacity sweep can touch anyone else's.
+        self.tenant_budget_bytes = tenant_budget_bytes
         # key -> (obj, nbytes, owner_tenant, kind); the owner is whoever
         # inserted the entry — eviction attribution needs the victim's
         # identity, not just its key.
         self._entries: OrderedDict[str, tuple] = OrderedDict()
+        self._tenant_bytes: dict[str, int] = {}
         self._registry = None          # optional MetricsRegistry
         self._lock = threading.Lock()
         self.bytes = 0
@@ -84,6 +91,7 @@ class BuildTableCache:
         self.misses = 0
         self.puts = 0
         self.evictions = 0
+        self.budget_evictions = 0
         self.partition_hits = 0
         self.partition_misses = 0
         self.partition_puts = 0
@@ -182,11 +190,36 @@ class BuildTableCache:
                             tenant: str = "default") -> bool:
         return self._put(key, layout, "probe_partition", tenant)
 
+    def _tenant_cap(self, tenant: str):
+        cap = self.tenant_budget_bytes
+        if cap is None:
+            return None
+        if isinstance(cap, dict):
+            cap = cap.get(tenant)
+            return None if cap is None else int(cap)
+        return int(cap)
+
+    def _evict_locked(self, key: str, evicted: list, reason: str) -> None:
+        _, ev_bytes, ev_tenant, ev_kind = self._entries.pop(key)
+        self.bytes -= ev_bytes
+        left = self._tenant_bytes.get(ev_tenant, 0) - ev_bytes
+        if left > 0:
+            self._tenant_bytes[ev_tenant] = left
+        else:
+            self._tenant_bytes.pop(ev_tenant, None)
+        self.evictions += 1
+        if reason == "tenant_budget":
+            self.budget_evictions += 1
+        evicted.append((key, ev_bytes, ev_tenant, ev_kind, reason))
+
     def _put(self, key: str, obj, kind: str,
              tenant: str = "default") -> bool:
         nbytes = table_nbytes(obj)
         if nbytes > self.budget_bytes:
             return False
+        cap = self._tenant_cap(tenant)
+        if cap is not None and nbytes > cap:
+            return False        # mirrors the whole-budget rule: not cached
         evicted = []
         with self._lock:
             if key in self._entries:
@@ -194,34 +227,46 @@ class BuildTableCache:
                 return True
             self._entries[key] = (obj, nbytes, tenant, kind)
             self.bytes += nbytes
+            self._tenant_bytes[tenant] = \
+                self._tenant_bytes.get(tenant, 0) + nbytes
             if kind == "partition":
                 self.partition_puts += 1
             elif kind == "probe_partition":
                 self.probe_partition_puts += 1
             else:
                 self.puts += 1
+            # Per-tenant budget first: a hot tenant over its own cap evicts
+            # its OWN oldest entries (never the one just inserted — the
+            # entry alone fits the cap, so an older one must exist) before
+            # the shared sweep below can push out anyone else's.
+            if cap is not None:
+                while self._tenant_bytes.get(tenant, 0) > cap:
+                    victim = next(k for k, e in self._entries.items()
+                                  if e[2] == tenant and k != key)
+                    self._evict_locked(victim, evicted, "tenant_budget")
             while self.bytes > self.budget_bytes:
-                ev_key, (_, ev_bytes, ev_tenant, ev_kind) = \
-                    self._entries.popitem(last=False)
-                self.bytes -= ev_bytes
-                self.evictions += 1
-                evicted.append((ev_key, ev_bytes, ev_tenant, ev_kind))
+                self._evict_locked(next(iter(self._entries)), evicted,
+                                   "capacity")
         # Eviction attribution (outside the lock): which tenant's insert
-        # pushed out which tenant's entry — the observability groundwork
-        # for per-tenant cache budgets (ROADMAP item 1).
+        # pushed out which tenant's entry, and whether the victim fell to
+        # its owner's budget or to shared capacity (ROADMAP item 1).
         if self._registry is not None:
-            for ev_key, ev_bytes, ev_tenant, ev_kind in evicted:
+            for ev_key, ev_bytes, ev_tenant, ev_kind, reason in evicted:
                 self._registry.inc("cache_evictions", tenant=ev_tenant,
                                    kind=ev_kind)
+                if reason == "tenant_budget":
+                    self._registry.inc("cache_budget_evictions",
+                                       tenant=ev_tenant, kind=ev_kind)
                 self._registry.event(
                     "cache_eviction", evictor=tenant, victim=ev_tenant,
-                    kind=ev_kind, nbytes=int(ev_bytes),
+                    kind=ev_kind, nbytes=int(ev_bytes), reason=reason,
                     key=ev_key[:16])
         return True
 
     def clear(self):
         with self._lock:
             self._entries.clear()
+            self._tenant_bytes.clear()
             self.bytes = 0
 
     @property
@@ -254,6 +299,8 @@ class BuildTableCache:
                     "budget_bytes": self.budget_bytes, "hits": self.hits,
                     "misses": self.misses, "puts": self.puts,
                     "evictions": self.evictions,
+                    "budget_evictions": self.budget_evictions,
+                    "tenant_bytes": dict(self._tenant_bytes),
                     "hit_rate": self.hit_rate,
                     "partition_hits": self.partition_hits,
                     "partition_misses": self.partition_misses,

@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import itertools
 import time
 
@@ -62,6 +63,7 @@ import numpy as np
 
 from repro.core.relation import IndexChain, Relation, next_pow2
 from repro.engine.service import GroupByQuery, JoinQuery, JoinQueryService
+from repro.obs import q_error
 
 from .optimize import JoinOrderOptimizer, PhysicalPlan
 from .plan import (NULL_VALUE, Query, agg_output_name, apply_aggregate,
@@ -95,6 +97,8 @@ class _ScanView:
         self._memo: dict = {}
         self._dev_memo: dict = {}
         self._chain: IndexChain | None = None
+        self._fp_memo: dict = {}
+        self._rows_tok: str | None = None
 
     @property
     def n(self) -> int:
@@ -138,6 +142,33 @@ class _ScanView:
             self._dev_memo[q] = chain.gather(raw)
         return self._dev_memo[q]
 
+    def _rows_token(self) -> str:
+        """Content token for the surviving-row selection."""
+        if self._rows_tok is None:
+            h = hashlib.sha1()
+            if self._idx is None:
+                h.update(b"all")
+            else:
+                h.update(np.asarray(self._idx).tobytes())
+            h.update(f"|n={self.n}".encode())
+            self._rows_tok = h.hexdigest()
+        return self._rows_tok
+
+    def col_fp(self, q: str) -> str:
+        """Content fingerprint of one *filtered* column, computed entirely
+        host-side (the raw columns live on host): sha1 over the raw bytes
+        plus the scan-index token.  Equal content — even regenerated by a
+        different ``Query`` object — hashes equal, which is what keeps the
+        build-table cache hitting across repeated workloads without ever
+        pulling a device column back to compute its key."""
+        fp = self._fp_memo.get(q)
+        if fp is None:
+            h = hashlib.sha1()
+            h.update(self._raw(q).tobytes())
+            h.update(self._rows_token().encode())
+            fp = self._fp_memo[q] = h.hexdigest()
+        return fp
+
     def take(self, rows: np.ndarray) -> dict:
         """All columns at the given (filtered-space) row positions.
 
@@ -161,6 +192,8 @@ class _ScanView:
         self._memo.clear()
         self._dev_memo.clear()
         self._chain = None
+        self._fp_memo.clear()
+        self._rows_tok = None
 
 
 @functools.partial(jax.jit, static_argnames=("kind",))
@@ -208,7 +241,7 @@ class StageView:
     """
 
     def __init__(self, kind: str, psrc, bsrc, probe_rid, build_rid,
-                 count: int):
+                 count: int, token: str | None = None):
         self.kind = kind
         self._psrc, self._bsrc = psrc, bsrc
         self._pr = probe_rid
@@ -218,6 +251,14 @@ class StageView:
         self._rc_memo: dict = {}
         self._col_memo: dict = {}
         self._ext_memo: dict = {}
+        # Structural execution token: sha1 over (stage kind, both input
+        # column fingerprints, the *executed* QueryPlan's full knob set,
+        # match count) — the engine is a deterministic function of those,
+        # so equal tokens imply equal output content.  Downstream stages
+        # derive their input fingerprints from it without a D2H pull;
+        # ``None`` (no fingerprints available) falls back to the ledgered
+        # content-hash path in the service.
+        self._token = token
 
     def names(self):
         names = list(self._psrc.names())
@@ -285,6 +326,15 @@ class StageView:
             self._col_memo[q] = col
         return self._col_memo[q]
 
+    def col_fp(self, q: str) -> str | None:
+        """Structural fingerprint of one output column: the execution
+        token qualified by the column name.  No array bytes are read —
+        soundness comes from the token construction (deterministic engine
+        over fingerprinted inputs)."""
+        if self._token is None:
+            return None
+        return f"{self._token}|col={q}"
+
     def materialize(self) -> dict:
         """Host columns — final result delivery only (one D2H per
         column; intermediates never take this path on the fused route)."""
@@ -300,6 +350,7 @@ class StageView:
         self._rc_memo.clear()
         self._col_memo.clear()
         self._ext_memo.clear()
+        self._token = None      # content changed; caller re-derives
 
     def apply_residual(self, left_q: str, right_q: str) -> None:
         """Equality filter between two output columns, on device: the
@@ -307,8 +358,14 @@ class StageView:
         crosses to the host, never the mask itself)."""
         mask = self.col_dev(left_q) == self.col_dev(right_q)
         k = int(mask.sum())
+        tok = self._token
         self.narrow(jnp.nonzero(mask, size=k)[0] if k else
                     jnp.zeros(0, jnp.int32))
+        if tok is not None:
+            # The residual is a deterministic function of the pre-filter
+            # content, so the token extends instead of dying.
+            self._token = hashlib.sha1(
+                f"{tok}|res:{left_q}={right_q}|k={k}".encode()).hexdigest()
 
 
 def _src_n(src) -> int:
@@ -335,24 +392,36 @@ def _src_take(src, rows: np.ndarray) -> dict:
 
 def _as_relation(col: np.ndarray, fill_key: int) -> Relation:
     """A core Relation over a host column, rid = row index (gather
-    convention) — the host-materialize path's H2D upload."""
+    convention) — the host-materialize path's H2D upload.
+
+    The fingerprint hint is a content hash computed from the *host* copy
+    before the upload, so the engine's cache keying never pulls the
+    column back down — content-equal inputs still share a cache line.
+    """
     n = col.shape[0]
     if n and int(col.min()) < 0:
         raise ValueError(
             "negative join-key values are unsupported: they collide with "
             "the executor's fill keys and the engine's pad sentinels")
+    col = np.asarray(col, dtype=np.int32)
     rid = np.arange(n, dtype=np.int32)
     if n < MIN_STAGE_ROWS:
         pad = MIN_STAGE_ROWS - n
-        col = np.concatenate([col.astype(np.int32),
-                              np.full(pad, fill_key, np.int32)])
+        col = np.concatenate([col, np.full(pad, fill_key, np.int32)])
         rid = np.concatenate([rid, np.full(pad, -1, np.int32)])
-    return Relation(jnp.asarray(rid), jnp.asarray(col, dtype=jnp.int32))
+    h = hashlib.sha1(col.tobytes())
+    h.update(rid.tobytes())
+    return Relation(jnp.asarray(rid), jnp.asarray(col),
+                    fp_hint=f"host:{h.hexdigest()}")
 
 
-def _as_relation_dev(col: jax.Array, fill_key: int) -> Relation:
+def _as_relation_dev(col: jax.Array, fill_key: int,
+                     fp_hint: str | None = None) -> Relation:
     """Device twin of ``_as_relation``: the column never leaves the
-    device (the caller has already validated keys non-negative)."""
+    device (the caller has already validated keys non-negative).
+    ``fp_hint`` is the source view's structural column fingerprint;
+    the fill key and row count pin down the padding this function adds,
+    making the hint content-complete for the padded relation."""
     n = int(col.shape[0])
     rid = jnp.arange(n, dtype=jnp.int32)
     col = col.astype(jnp.int32)
@@ -360,7 +429,9 @@ def _as_relation_dev(col: jax.Array, fill_key: int) -> Relation:
         pad = MIN_STAGE_ROWS - n
         col = jnp.concatenate([col, jnp.full(pad, fill_key, jnp.int32)])
         rid = jnp.concatenate([rid, jnp.full(pad, -1, jnp.int32)])
-    return Relation(rid, col)
+    hint = (f"{fp_hint}|fill={fill_key}|n={n}"
+            if fp_hint is not None else None)
+    return Relation(rid, col, fp_hint=hint)
 
 
 def _check_keys_nonneg(*keys) -> None:
@@ -424,6 +495,10 @@ class PipelineResult:
     physical: PhysicalPlan
     _source: object = None        # dict | _ScanView | StageView
     _columns: dict | None = None
+    _ledger: object = None        # TransferLedger for result attribution
+    # Structured record of every adaptive mid-pipeline re-ordering this
+    # execution performed (empty for static runs).
+    replans: list = dataclasses.field(default_factory=list)
 
     @property
     def columns(self) -> dict:
@@ -432,6 +507,11 @@ class PipelineResult:
             src = self._source
             self._columns = src if isinstance(src, dict) else \
                 src.materialize()
+            if self._ledger is not None and isinstance(src, StageView):
+                self._ledger.record(
+                    sum(v.nbytes for v in self._columns.values()),
+                    cause="result", stage="result", column="*",
+                    direction="d2h")
         return self._columns
 
     @property
@@ -447,6 +527,7 @@ class PipelineResult:
                 "wall_s": self.wall_s,
                 "est_total_s": self.physical.est_total_s,
                 "host_bytes_moved": self.host_bytes_moved,
+                "replans": list(self.replans),
                 "stages": [o.to_dict() for o in self.outcomes]}
 
 
@@ -457,17 +538,30 @@ class PipelineExecutor:
     fused default — intermediates stay resident as ``StageView``s) or
     ``"host"`` (materialize every stage's qualified columns to NumPy; the
     pre-fusion baseline the benchmark compares against).
+
+    ``adaptive=True`` turns on mid-pipeline re-optimization (fused path
+    only): stages execute in dependency waves, every completed stage's
+    exact device-observed cardinality is compared against the optimizer's
+    estimate, and when the worst q-error in a wave crosses
+    ``qerror_threshold`` the not-yet-admitted tail is re-priced from the
+    observed numbers (``JoinOrderOptimizer.reprice_remaining``) and
+    re-ordered if the challenger clears the planner's replan margin.
+    Cardinality *recording* is always on — adaptivity only changes
+    whether the pipeline acts on it.
     """
 
     def __init__(self, service: JoinQueryService | None = None,
                  optimizer: JoinOrderOptimizer | None = None,
-                 handoff: str = "device"):
+                 handoff: str = "device", *, adaptive: bool = False,
+                 qerror_threshold: float = 2.0):
         if handoff not in HANDOFF_MODES:
             raise ValueError(f"unknown handoff mode {handoff!r}")
         self.service = service or JoinQueryService(num_workers=2)
         self.optimizer = optimizer or JoinOrderOptimizer(
             self.service.planner, handoff=handoff)
         self.handoff = handoff
+        self.adaptive = bool(adaptive)
+        self.qerror_threshold = float(qerror_threshold)
         self._qid = itertools.count(1)
 
     def close(self):
@@ -564,6 +658,18 @@ class PipelineExecutor:
             handles: dict[int, object] = {}
             handoff_bytes: dict[int, int] = {}  # host-path H2D per stage
             fused = self.handoff == "device"
+            # Adaptive mid-pipeline re-optimization needs the frontier-wave
+            # schedule (observe a wave, then admit the next); it applies on
+            # the fused path to plans whose edges all became stages (cycle
+            # edges carry residual state a re-order would have to re-home).
+            if (self.adaptive and fused and not physical.residuals
+                    and len(physical.stages) == len(physical.order)):
+                physical, outcomes, final, replans = self._run_adaptive(
+                    query, physical, base, inter, depth, degraded=degraded,
+                    tenant=tenant, deadline_at=deadline_at)
+                return self._finish(query, physical, final, outcomes, t0,
+                                    tenant=tenant, deadline_at=deadline_at,
+                                    degraded=degraded, replans=replans)
             for stage in physical.stages:
                 depth[stage.stage_id] = 1 + max(
                     [depth[d] for d in stage.deps], default=0)
@@ -575,12 +681,13 @@ class PipelineExecutor:
                     make_query = _mark_degraded(make_query)
                 finalize = (self._stage_finalize_dev(
                     stage, base, inter,
-                    stage_residuals.get(stage.stage_id, ()))
+                    stage_residuals.get(stage.stage_id, ()),
+                    depth=depth[stage.stage_id])
                     if fused else
                     self._stage_finalize_host(
                         stage, base, inter,
                         stage_residuals.get(stage.stage_id, ()),
-                        handoff_bytes))
+                        handoff_bytes, depth=depth[stage.stage_id]))
                 handles[stage.stage_id] = self.service.submit_deferred(
                     make_query,
                     deps=[handles[d] for d in stage.deps],
@@ -593,10 +700,112 @@ class PipelineExecutor:
                                 tenant=tenant, deadline_at=deadline_at,
                                 degraded=degraded)
 
+    def _run_adaptive(self, query, physical, base, inter, depth, *,
+                      degraded, tenant, deadline_at):
+        """Frontier-wave execution with observed-cardinality replans.
+
+        Dependency-free stages of the remaining tail are admitted as one
+        concurrent wave; when the wave completes, each stage's exact
+        device-observed cardinality is recorded against its estimate, and
+        a wave whose worst q-error crosses the threshold triggers a
+        re-pricing of the not-yet-admitted tail.  A re-ordering that
+        clears the replan margin splices into the plan before the next
+        wave is admitted.
+        """
+        pending = list(physical.stages)
+        executed_joins: list = []
+        exec_ids: list = []
+        observed: dict = {}
+        outcomes_by_id: dict = {}
+        replans: list = []
+        next_id = itertools.count(
+            max(s.stage_id for s in physical.stages) + 1)
+        while pending:
+            wave = [s for s in pending if all(d in inter for d in s.deps)]
+            handles = {}
+            for stage in wave:
+                depth[stage.stage_id] = 1 + max(
+                    [depth[d] for d in stage.deps], default=0)
+                make_query = self._stage_query_dev(stage, base, inter)
+                if degraded:
+                    make_query = _mark_degraded(make_query)
+                handles[stage.stage_id] = self.service.submit_deferred(
+                    make_query, deps=[],       # wave inputs are all ready
+                    finalize=self._stage_finalize_dev(
+                        stage, base, inter, (),
+                        depth=depth[stage.stage_id]),
+                    priority=depth[stage.stage_id],
+                    tenant=tenant, deadline_at=deadline_at)
+            worst_q = 1.0
+            for stage in wave:
+                outcomes_by_id[stage.stage_id] = handles[stage.stage_id]()
+                executed_joins.append(stage.join)
+                exec_ids.append(stage.stage_id)
+                n_obs = inter[stage.stage_id].n
+                observed[id(stage.join)] = n_obs
+                worst_q = max(worst_q, q_error(stage.est_out, n_obs))
+            pending = [s for s in pending if s.stage_id not in handles]
+            if not pending or worst_q < self.qerror_threshold:
+                continue
+            replanned = self.optimizer.reprice_remaining(
+                query, executed_joins, [s.join for s in pending], observed)
+            if replanned is None:
+                continue
+            old_tail = [str(s.join) for s in pending]
+            physical, pending = self._splice_replan(
+                physical, replanned, exec_ids, next_id)
+            rec = {"after_stages": len(exec_ids),
+                   "worst_q_error": round(float(worst_q), 3),
+                   "old_tail": old_tail,
+                   "new_tail": [str(s.join) for s in pending],
+                   "est_total_s": float(replanned.est_total_s)}
+            replans.append(rec)
+            self.service.metrics.inc("pipeline_replans")
+            self.service.metrics.event("replan", tenant=tenant, **rec)
+            self.service.tracer.instant(
+                "replan", tenant=tenant,
+                after_stages=rec["after_stages"],
+                worst_q_error=rec["worst_q_error"])
+        outcomes = [outcomes_by_id[s.stage_id] for s in physical.stages]
+        final = inter[physical.stages[-1].stage_id]
+        return physical, outcomes, final, replans
+
+    def _splice_replan(self, physical, replanned, exec_ids, next_id):
+        """Graft a re-priced plan onto the executed prefix.
+
+        ``replanned`` re-states the executed joins as its first stages
+        (same joins, same order — ``reprice_remaining`` permutes only the
+        tail); those keep their original stage ids so the ``inter`` and
+        outcome bookkeeping stands.  Tail stages get fresh never-reused
+        ids, with input/dep references remapped.
+        """
+        n_exec = len(exec_ids)
+        id_map = {s.stage_id: exec_ids[i]
+                  for i, s in enumerate(replanned.stages[:n_exec])}
+        new_tail = []
+        for s in replanned.stages[n_exec:]:
+            id_map[s.stage_id] = next(next_id)
+            new_tail.append(dataclasses.replace(
+                s, stage_id=id_map[s.stage_id],
+                build_input=(id_map[s.build_input]
+                             if isinstance(s.build_input, int)
+                             else s.build_input),
+                probe_input=(id_map[s.probe_input]
+                             if isinstance(s.probe_input, int)
+                             else s.probe_input),
+                deps=tuple(sorted(id_map[d] for d in s.deps))))
+        by_id = {st.stage_id: st for st in physical.stages}
+        exec_stages = [by_id[sid] for sid in exec_ids]
+        new_physical = dataclasses.replace(
+            replanned, stages=exec_stages + new_tail,
+            order=tuple(s.join for s in exec_stages + new_tail))
+        return new_physical, new_tail
+
     def _finish(self, query, physical, cols, outcomes, t0, *,
                 from_stages: bool = True, tenant: str = "default",
                 deadline_at: float | None = None,
-                degraded: bool = False) -> PipelineResult:
+                degraded: bool = False,
+                replans: list | None = None) -> PipelineResult:
         """Apply the sink (group-by through the engine, or a host scalar)."""
         if query.group_by:
             cols, sink_outcome = self._run_group_by(
@@ -614,7 +823,8 @@ class PipelineExecutor:
         wall = time.perf_counter() - t0
         return PipelineResult(
             rows=rows, aggregate=agg, outcomes=outcomes, wall_s=wall,
-            physical=physical, _source=source)
+            physical=physical, _source=source,
+            _ledger=self.service.ledger, replans=replans or [])
 
     def _apply_scalar_sink(self, query: Query, cols):
         """Scalar aggregate without forcing full materialization: count
@@ -628,9 +838,13 @@ class PipelineExecutor:
         if kind == "count":
             return cols.n
         q = query.aggregate[1]
-        return apply_aggregate({q: np.asarray(cols.col_dev(q))
-                                if isinstance(cols, StageView)
-                                else cols.col(q)}, query.aggregate)
+        if isinstance(cols, StageView):
+            arr = np.asarray(cols.col_dev(q))
+            self.service.note_host_bytes(
+                arr.nbytes, cause="result", stage="sink", column=q,
+                direction="d2h")
+            return apply_aggregate({q: arr}, query.aggregate)
+        return apply_aggregate({q: cols.col(q)}, query.aggregate)
 
     # -- group-by sink -------------------------------------------------------
     def _run_group_by(self, query: Query, cols, *,
@@ -675,7 +889,12 @@ class PipelineExecutor:
                              if isinstance(cols, StageView)
                              else cols.col(q) for q in need}
                 if isinstance(cols, StageView) and count_handoff:
-                    moved += sum(v.nbytes for v in host_cols.values())
+                    pulled = sum(v.nbytes for v in host_cols.values())
+                    moved += pulled
+                    self.service.note_host_bytes(
+                        pulled, cause="multicol_pack",
+                        stage="groupby-sink", column="+".join(sorted(need)),
+                        direction="d2h")
                 cols = host_cols
             keys, decode = self._encode_group_keys(cols, query.group_by)
             n = keys.shape[0]
@@ -691,7 +910,16 @@ class PipelineExecutor:
                 rid = np.concatenate([rid, np.full(pad, -1, np.int32)])
             if count_handoff:
                 # Host hand-off into the sink: keys + rid + values H2D.
-                moved += keys.nbytes + rid.nbytes + values.nbytes
+                # Packed multi-column keys sourced from a device view are
+                # packing traffic (``multicol_pack``), not a hand-off —
+                # the fused path's ``handoff`` cause stays zero.
+                upload = keys.nbytes + rid.nbytes + values.nbytes
+                moved += upload
+                self.service.note_host_bytes(
+                    upload,
+                    cause="multicol_pack" if is_view else "handoff",
+                    stage="groupby-sink", column="keys+rid+values",
+                    direction="h2d")
             rel = Relation(jnp.asarray(rid),
                            jnp.asarray(keys, dtype=jnp.int32))
         gq = GroupByQuery(keys=rel, values=values, tag="groupby-sink",
@@ -705,8 +933,6 @@ class PipelineExecutor:
             # sink; re-deciding here could shed it after its stages ran.
             outcome = self.service.submit(gq, preadmitted=True)()
         outcome.host_bytes_moved += moved
-        if moved:
-            self.service.note_host_bytes(moved)
         res = outcome.result
         out = decode(res.keys)
         name = agg_output_name(aggregate)
@@ -785,14 +1011,19 @@ class PipelineExecutor:
             _check_keys_nonneg(bkey, pkey)
             matches = int(_match_stats_jit(bkey, pkey, stage.kind))
             return JoinQuery(
-                build=_as_relation_dev(bkey, BUILD_FILL_KEY),
-                probe=_as_relation_dev(pkey, PROBE_FILL_KEY),
+                build=_as_relation_dev(
+                    bkey, BUILD_FILL_KEY,
+                    fp_hint=bsrc.col_fp(stage.build_col)),
+                probe=_as_relation_dev(
+                    pkey, PROBE_FILL_KEY,
+                    fp_hint=psrc.col_fp(stage.probe_col)),
                 tag=f"stage{stage.stage_id}:{stage.join}",
                 max_out=self._stage_capacity(matches),
                 query_id=next(self._qid), kind=stage.kind)
         return make_query
 
-    def _stage_finalize_dev(self, stage, base, inter, residuals=()):
+    def _stage_finalize_dev(self, stage, base, inter, residuals=(), *,
+                            depth: int = 0):
         def finalize(outcome) -> None:
             # Runs on the deferred-stage thread: the gather/finalize leg
             # of the lifecycle, spanned per stage (the executed query's
@@ -806,16 +1037,44 @@ class PipelineExecutor:
                     bsrc = self._input(stage.build_input, base, inter)
                     psrc = self._input(stage.probe_input, base, inter)
                     c = int(outcome.result.count)
+                    token = self._stage_token(stage, bsrc, psrc,
+                                              outcome.plan, c)
                     view = StageView(
                         stage.kind, psrc, bsrc,
                         outcome.result.probe_rid[:c],
                         None if stage.kind in ("semi", "anti")
-                        else outcome.result.build_rid[:c], c)
+                        else outcome.result.build_rid[:c], c, token=token)
                     for lq, rq in residuals:
                         view.apply_residual(lq, rq)
                 inter[stage.stage_id] = view
                 outcome.host_bytes_moved = 0  # the fused path's invariant
+                self.service.cardinality.record(
+                    stage_type=stage.kind, est_rows=stage.est_out,
+                    observed_rows=c, depth=depth, tenant=outcome.tenant,
+                    stage_id=stage.stage_id)
         return finalize
+
+    @staticmethod
+    def _stage_token(stage, bsrc, psrc, plan, count: int) -> str | None:
+        """Execution token for a stage output: sha1 over the stage kind,
+        both input column fingerprints, the *executed* plan's full knob
+        set (estimate floats and the content-neutral ``cached`` bit
+        excluded — they vary with calibration, not content), and the
+        match count.  The engine is deterministic given those, so equal
+        tokens imply byte-equal output; ``None`` when either input lacks
+        a fingerprint, which sends downstream keying to the ledgered
+        content-hash fallback."""
+        bfp = bsrc.col_fp(stage.build_col)
+        pfp = psrc.col_fp(stage.probe_col)
+        if bfp is None or pfp is None:
+            return None
+        parts = (stage.kind, f"b:{bfp}", f"p:{pfp}", plan.algorithm,
+                 plan.scheme, str(plan.build_ratios), str(plan.probe_ratios),
+                 str(plan.num_buckets), str(plan.max_out),
+                 str(plan.schedule), str(plan.shj_bits),
+                 str(plan.partition_ratio), str(plan.join_ratio),
+                 f"c={count}")
+        return hashlib.sha1("|".join(parts).encode()).hexdigest()
 
     # -- host-materialize hand-off (the pre-fusion baseline) -----------------
     def _stage_query_host(self, stage, base, inter, handoff_bytes):
@@ -834,7 +1093,10 @@ class PipelineExecutor:
             if moved:
                 handoff_bytes[stage.stage_id] = \
                     handoff_bytes.get(stage.stage_id, 0) + moved
-                self.service.note_host_bytes(moved)
+                self.service.note_host_bytes(
+                    moved, cause="handoff",
+                    stage=f"stage{stage.stage_id}", column="rid+key",
+                    direction="h2d")
             return JoinQuery(
                 build=_as_relation(bkey, BUILD_FILL_KEY),
                 probe=_as_relation(pkey, PROBE_FILL_KEY),
@@ -844,7 +1106,7 @@ class PipelineExecutor:
         return make_query
 
     def _stage_finalize_host(self, stage, base, inter, residuals=(),
-                             handoff_bytes=None):
+                             handoff_bytes=None, *, depth: int = 0):
         def finalize(outcome) -> None:
             with self.service.tracer.span(
                     "finalize", stage=stage.stage_id,
@@ -884,9 +1146,16 @@ class PipelineExecutor:
                 for lq, rq in residuals:
                     cols = _apply_residual(cols, lq, rq)
                 inter[stage.stage_id] = cols
-                self.service.note_host_bytes(moved)
+                self.service.note_host_bytes(
+                    moved, cause="handoff",
+                    stage=f"stage{stage.stage_id}", column="match_rids",
+                    direction="d2h")
                 outcome.host_bytes_moved = moved + \
                     (handoff_bytes or {}).get(stage.stage_id, 0)
+                self.service.cardinality.record(
+                    stage_type=stage.kind, est_rows=stage.est_out,
+                    observed_rows=c, depth=depth, tenant=outcome.tenant,
+                    stage_id=stage.stage_id)
         return finalize
 
     # -- convenience ---------------------------------------------------------

@@ -168,8 +168,21 @@ class JoinOrderOptimizer:
         self.handoff = handoff
 
     # -- pricing one order ---------------------------------------------------
-    def price_order(self, query: Query, order) -> PhysicalPlan:
-        """Simulate ``order`` edge by edge, pricing every stage."""
+    def price_order(self, query: Query, order, *,
+                    observed_rows: dict | None = None,
+                    record: bool = True) -> PhysicalPlan:
+        """Simulate ``order`` edge by edge, pricing every stage.
+
+        ``observed_rows`` maps ``id(join_edge) -> exact output rows`` for
+        already-executed stages (the adaptive replan path): an overridden
+        edge's output — and therefore everything the System-R recurrence
+        derives downstream of it (input sizes, ndv caps, hand-off terms)
+        — is priced from what the device actually measured instead of the
+        estimate.  ``record=False`` keeps mid-pipeline re-pricing out of
+        the planner's plan-count bookkeeping, exactly like admission-time
+        pricing.
+        """
+        observed = observed_rows or {}
         comps = {name: _base_component(query, name) for name in query.tables}
         stages: list[PipelineStage] = []
         residuals: list = []
@@ -188,10 +201,12 @@ class JoinOrderOptimizer:
                 p_match = min(1.0, right.rows * sel)
                 frac = p_match if join.kind == "semi" else 1.0 - p_match
                 out_rows = max(1.0, left.rows * frac)
+                if id(join) in observed:
+                    out_rows = max(1.0, float(observed[id(join)]))
                 plan = self.planner.choose(
                     int(round(right.rows)), int(round(left.rows)),
                     max_out=max(64, int(out_rows * EST_OUT_SLACK) + 64),
-                    kind=join.kind)
+                    kind=join.kind, record=record)
                 deps = tuple(sorted(
                     {r for r in (left.ref,) if isinstance(r, int)}))
                 stage = PipelineStage(
@@ -217,10 +232,12 @@ class JoinOrderOptimizer:
                                 left.col_ndv(join.left_q))
                 inner_out = left.rows * right.rows * sel
                 out_rows = max(left.rows, inner_out)
+                if id(join) in observed:
+                    out_rows = max(1.0, float(observed[id(join)]))
                 plan = self.planner.choose(
                     int(round(right.rows)), int(round(left.rows)),
                     max_out=max(64, int(out_rows * EST_OUT_SLACK) + 64),
-                    kind=join.kind)
+                    kind=join.kind, record=record)
                 deps = tuple(sorted(
                     {r for r in (right.ref, left.ref)
                      if isinstance(r, int)}))
@@ -268,9 +285,12 @@ class JoinOrderOptimizer:
             sel = 1.0 / max(build.col_ndv(build_col),
                             probe.col_ndv(probe_col))
             out_rows = max(1.0, build.rows * probe.rows * sel)
+            if id(join) in observed:
+                out_rows = max(1.0, float(observed[id(join)]))
             plan = self.planner.choose(
                 int(round(build.rows)), int(round(probe.rows)),
-                max_out=max(64, int(out_rows * EST_OUT_SLACK) + 64))
+                max_out=max(64, int(out_rows * EST_OUT_SLACK) + 64),
+                record=record)
             deps = tuple(sorted(
                 {r for r in (build.ref, probe.ref) if isinstance(r, int)}))
             stage = PipelineStage(
@@ -307,7 +327,7 @@ class JoinOrderOptimizer:
             # beyond that cardinality, so it cannot flip the ordering —
             # but it belongs in est_total_s for plan-vs-measured honesty).
             agg_plan = self.planner.choose_groupby(
-                max(1, int(round(final.rows))))
+                max(1, int(round(final.rows))), record=record)
             total += agg_plan.est_s
         return PhysicalPlan(stages=stages, order=tuple(order),
                             est_total_s=total, aggregate=query.aggregate,
@@ -370,3 +390,57 @@ class JoinOrderOptimizer:
         priced = [self.price_order(query, order)
                   for order in self.enumerate_orders(query)]
         return max(priced, key=lambda p: p.est_total_s)
+
+    # -- adaptive mid-pipeline re-optimization -------------------------------
+    def reprice_remaining(self, query: Query, executed_order,
+                          remaining_order,
+                          observed_rows: dict) -> PhysicalPlan | None:
+        """Re-order not-yet-admitted stages from observed cardinalities.
+
+        ``executed_order`` is the join-edge prefix the executor already
+        ran (its exact output rows in ``observed_rows``, keyed by
+        ``id(edge)``); ``remaining_order`` is the incumbent plan's tail.
+        Every candidate keeps the executed prefix verbatim and permutes
+        only the tail, so nothing already running is invalidated.  Returns
+        the re-priced full plan when a different tail beats the incumbent
+        tail by the planner's ``replan_margin`` (the same hysteresis that
+        guards sticky per-stage replans — flipping stage order mid-flight
+        trades warmed caches and compiled executables for the estimated
+        gain, so near-ties stay put), else ``None``.
+
+        Outer queries pin textual order (``enumerate_orders``); they are
+        never re-ordered.  Tails beyond ``exhaustive_joins`` edges are
+        left alone too — by then the executed prefix has shrunk the
+        problem or it was greedy-planned to begin with.
+        """
+        executed = tuple(executed_order)
+        remaining = tuple(remaining_order)
+        if (len(remaining) < 2 or len(remaining) > self.exhaustive_joins
+                or any(j.kind == "left_outer" for j in query.joins)):
+            return None
+        incumbent = self.price_order(query, executed + remaining,
+                                     observed_rows=observed_rows,
+                                     record=False)
+        # One stage per executed edge (cycle edges produce residual
+        # filters, not stages — the executor does not replan those).
+        if len(incumbent.stages) != len(executed) + len(remaining):
+            return None
+        prefix_s = sum(s.plan.est_s
+                       for s in incumbent.stages[:len(executed)])
+        best, best_tail = incumbent, remaining
+        for tail in itertools.permutations(remaining):
+            if tail == remaining:
+                continue
+            cand = self.price_order(query, executed + tail,
+                                    observed_rows=observed_rows,
+                                    record=False)
+            if cand.est_total_s < best.est_total_s:
+                best, best_tail = cand, tail
+        if best_tail == remaining:
+            return None
+        # Hysteresis over the *tail* cost: the executed prefix is sunk and
+        # identical in both plans, so it must not dilute the margin.
+        if not self.planner.replan_beats(best.est_total_s - prefix_s,
+                                         incumbent.est_total_s - prefix_s):
+            return None
+        return best
