@@ -19,6 +19,11 @@ query-pipeline and SLO figures, and fails (exit 1) when:
     bursty overload replay, the flight-recorder dump is missing or
     schema-invalid, or the ``cost_model_staleness`` gauge is absent or
     non-finite, or
+  * the resilience layer stopped earning its keep: deadline preemption
+    never fired (or made the gold hit rate worse) in the overload A/B,
+    the chaos replay leaked an unstructured failure, produced a
+    non-row-exact result, counted a hard failure, left a hung worker,
+    or opened a breaker without a structured event on record, or
   * the data-path observability went dark or dishonest: the cardinality
     audit carries no (or non-finite) q-error summary for an executed
     stage type, the fused run's transfer ledger shows an unknown cause
@@ -217,6 +222,62 @@ def main() -> int:
         if not isinstance(stale, (int, float)) or not math.isfinite(stale):
             failures.append(f"cost_model_staleness gauge missing or "
                             f"non-finite: {stale!r}")
+        # -- resilience gates --------------------------------------------
+        pre = sp.get("preemption") or {}
+        if not pre:
+            failures.append("preemption on-vs-off section missing from "
+                            "slo payload")
+        else:
+            g_on = pre.get("gold_hit_rate_on")
+            g_off = pre.get("gold_hit_rate_off")
+            n_pre = int(pre.get("preemptions") or 0)
+            print(f"check_regression: preemption gold_hit on={g_on:.2f} "
+                  f"off={g_off:.2f}, preemptions={n_pre}", flush=True)
+            if n_pre < 1:
+                failures.append("deadline preemption never fired under "
+                                "the overload replay (want >= 1)")
+            if not pre.get("preempt_improves"):
+                failures.append(f"preemption did not improve the gold "
+                                f"deadline hit rate at equal offered "
+                                f"load (on={g_on:.2f} < off={g_off:.2f})")
+        chaos = sp.get("chaos") or {}
+        if not chaos:
+            failures.append("chaos smoke section missing from slo payload")
+        else:
+            print(f"check_regression: chaos completed="
+                  f"{chaos.get('completed')} unstructured="
+                  f"{chaos.get('unstructured_failures')} row_exact="
+                  f"{chaos.get('row_exact')} hung_workers="
+                  f"{chaos.get('hung_workers')} failed="
+                  f"{chaos.get('failed')} breakers="
+                  f"{chaos.get('breakers')}", flush=True)
+            if chaos.get("unstructured_failures") != 0:
+                failures.append(f"chaos replay leaked "
+                                f"{chaos.get('unstructured_failures')} "
+                                f"unstructured failure(s) (want 0 — every"
+                                f" abort must be structured Backpressure)")
+            if not chaos.get("row_exact"):
+                failures.append("chaos replay results were not row-exact "
+                                "against the NumPy oracle")
+            if chaos.get("hung_workers") != 0:
+                failures.append(f"{chaos.get('hung_workers')} worker(s) "
+                                f"still alive after drain-close")
+            if chaos.get("failed") != 0:
+                failures.append(f"chaos replay counted "
+                                f"{chaos.get('failed')} hard failure(s) "
+                                f"(recovery ladder must absorb injected "
+                                f"faults)")
+            breakers = chaos.get("breakers") or {}
+            bad = {k: b for k, b in breakers.items()
+                   if b.get("state") not in ("closed", "open",
+                                             "half_open")}
+            if bad:
+                failures.append(f"breaker(s) in unknown state: {bad}")
+            opened = any(b.get("state") != "closed"
+                         for b in breakers.values())
+            if opened and not chaos.get("breaker_events"):
+                failures.append("a breaker opened without emitting any "
+                                "structured breaker event")
     else:
         print("check_regression: no successful slo_bench payload — "
               "skipping SLO gate", flush=True)

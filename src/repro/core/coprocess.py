@@ -46,6 +46,19 @@ def _round_up(n: int, k: int) -> int:
     return ((n + k - 1) // k) * k
 
 
+# Fault-injection hook: ``repro.engine.faults.install`` plants its
+# ``maybe_fault`` here (set back to None on uninstall), so the hot path
+# costs one load and one branch when no injector is active, and this
+# module never imports the engine package (which imports it back).
+_FAULT_HOOK = None
+
+
+def _maybe_fault(site: str) -> None:
+    hook = _FAULT_HOOK
+    if hook is not None:
+        hook(site)
+
+
 @dataclasses.dataclass
 class Timing:
     wall_s: float = 0.0
@@ -121,6 +134,7 @@ class DeviceGroup:
 
     def put_items(self, tree):
         """Place per-item arrays on the group (leading axis sharded)."""
+        _maybe_fault("h2d")
         return jax.tree.map(lambda x: jax.device_put(x, self.sharding), tree)
 
     def put_shared(self, tree):
@@ -133,9 +147,16 @@ class DeviceGroup:
         # Lock: the engine's worker threads share one CoProcessor, so the
         # compile cache sees concurrent lookups for the same key.
         with self._jit_lock:
-            if key not in self._jit_cache:
-                self._jit_cache[key] = jax.jit(fn)
-            return self._jit_cache[key]
+            cached = self._jit_cache.get(key)
+            if cached is None:
+                jf = jax.jit(fn)
+
+                def cached(*args, _jf=jf, **kw):
+                    _maybe_fault("kernel")   # launch-site fault injection
+                    return _jf(*args, **kw)
+
+                self._jit_cache[key] = cached
+            return cached
 
 
 class CoProcessor:
@@ -504,6 +525,59 @@ def _phj_owned_join(rel_r: Relation, rel_s: Relation, *, total_bits: int,
 class PhjCoProcessorMixin:
     """PHJ orchestration + the appendix's BasicUnit scheduler."""
 
+    def _partition_side_cooperative(self, tag: str, rel: Relation,
+                                    sched: tuple[int, ...],
+                                    partition_ratio: float, ctx,
+                                    start_pass: int, timing: "Timing",
+                                    interpret: bool = False) -> Relation:
+        """Ratio-split partitioning, one jitted program per pass.
+
+        The preemptible sibling of the fused whole-schedule path: control
+        returns to Python between passes so ``ctx.check`` can abort (a
+        blown deadline / exhausted budget) at a pass boundary.  On abort
+        the current per-group slices are collected into a partial layout
+        via ``ctx.note_partial`` — the engine checkpoints it under a
+        schedule-prefix cache key, and a re-admitted query resumes here
+        with ``start_pass`` = completed passes.  Each pass is a stable
+        reorder over its own bit slice, so the per-slice result is
+        identical to the fused path's.
+        """
+        from .partition import partition_pass
+
+        n = rel.size
+        cut = self._cut(n, partition_ratio)
+        if self.discrete and 0 < cut < n:
+            self._bus_delay((n - cut) * 8, timing)
+        slices = []
+        if cut > 0:
+            slices.append((self.c, self.c.put_items(rel.take(0, cut))))
+        if cut < n:
+            slices.append((self.g, self.g.put_items(rel.take(cut, n))))
+        shift = sum(sched[:start_pass])
+
+        def collect() -> Relation:
+            pieces = [jax.tree.map(jax.device_get, r) for _, r in slices]
+            return Relation(jnp.concatenate([x.rid for x in pieces]),
+                            jnp.concatenate([x.key for x in pieces]))
+
+        for i in range(start_pass, len(sched)):
+            if ctx is not None:
+                try:
+                    ctx.check(f"partition:{tag}:pass{i}")
+                except Exception:
+                    if i > 0:
+                        ctx.note_partial(tag, collect(), i)
+                    raise
+            bits = sched[i]
+            slices = [(grp, grp.jit(
+                ("part_pass", tag, r.size, shift, bits, interpret),
+                partial(partition_pass, shift=shift, bits=bits,
+                        interpret=interpret))(r))
+                for grp, r in slices]
+            shift += bits
+        _maybe_fault("d2h")
+        return collect()
+
     def phj(self, build_rel: Relation, probe_rel: Relation, *,
             bits_per_pass: int | None = None, num_passes: int | None = None,
             schedule: tuple[int, ...] | None = None, planner=None,
@@ -511,7 +585,10 @@ class PhjCoProcessorMixin:
             partition_ratio: float, join_ratio: float,
             build_parts: Relation | None = None,
             probe_parts: Relation | None = None,
-            parts_out: dict | None = None) -> tuple[ht.JoinResult, "Timing"]:
+            parts_out: dict | None = None, ctx=None,
+            build_resume: int | None = None,
+            probe_resume: int | None = None
+            ) -> tuple[ht.JoinResult, "Timing"]:
         """PHJ co-processing: ratio-split partitioning, then partition-pair
         ownership split for the join phase (paper PHJ-DD/PL skeleton).
 
@@ -533,6 +610,17 @@ class PhjCoProcessorMixin:
                               slots receive the freshly partitioned layouts
                               for the caller to cache (only the sides that
                               were actually partitioned this call).
+        ``ctx``             — cooperative ``QueryContext``: when given,
+                              partitioning runs pass-at-a-time with
+                              ``ctx.check`` at every pass boundary (and
+                              once before the join phase), so deadline /
+                              budget preemption can abort between passes
+                              and checkpoint the partial layout.
+        ``build_resume`` / ``probe_resume`` — with a value ``k``, the
+                              corresponding ``*_parts`` relation is a
+                              *partial* layout holding the schedule's
+                              first ``k`` passes (a checkpoint); the
+                              remaining passes run from there.
         """
         from .partition import radix_partition_scheduled
         from .phj import resolve_schedule
@@ -552,16 +640,32 @@ class PhjCoProcessorMixin:
 
         with timing.phase("partition", passes=len(sched)):
             parts = {}
-            if build_parts is not None:
+            if build_parts is not None and build_resume is None:
                 parts["R"] = build_parts
                 timing.notes["build_parts_reused"] = True
-            if probe_parts is not None:
+            if probe_parts is not None and probe_resume is None:
                 parts["S"] = probe_parts
                 timing.notes["probe_parts_reused"] = True
-            todo = [(tag, rel) for tag, rel in (("R", build_rel),
-                                                ("S", probe_rel))
-                    if tag not in parts]
-            for tag, rel in todo:
+            todo = []
+            for tag, rel, given, resume in (
+                    ("R", build_rel, build_parts, build_resume),
+                    ("S", probe_rel, probe_parts, probe_resume)):
+                if tag in parts:
+                    continue
+                start = 0
+                if given is not None and resume:
+                    # A checkpointed partial layout: first ``resume``
+                    # passes are already absorbed (stable reorders — no
+                    # re-running).  Checkpoints were captured post-pad.
+                    rel, start = given, int(resume)
+                    timing.notes[f"{tag}_resumed_at"] = start
+                todo.append((tag, rel, start))
+            for tag, rel, start in todo:
+                if ctx is not None or start:
+                    parts[tag] = self._partition_side_cooperative(
+                        tag, rel, sched, partition_ratio, ctx, start,
+                        timing)
+                    continue
                 n = rel.size
                 cut = self._cut(n, partition_ratio)
                 if self.discrete and 0 < cut < n:
@@ -574,14 +678,17 @@ class PhjCoProcessorMixin:
                     f = self.g.jit(("phj_part", tag, n - cut, sched),
                                    part_fn)
                     pieces.append(f(self.g.put_items(rel.take(cut, n))))
+                _maybe_fault("d2h")
                 pieces = [jax.tree.map(jax.device_get, x) for x in pieces]
                 parts[tag] = Relation(
                     jnp.concatenate([x.rid for x in pieces]),
                     jnp.concatenate([x.key for x in pieces]))
             if parts_out is not None:
-                for tag, _ in todo:
+                for tag, _, _ in todo:
                     parts_out[tag] = parts[tag]
 
+        if ctx is not None:
+            ctx.check("join")
         with timing.phase("join"):
             # Ownership exchange: partitions [0, own) -> C, rest -> G.
             num_parts = 1 << total_bits
@@ -618,6 +725,7 @@ class PhjCoProcessorMixin:
                             partial(_phj_owned_join, total_bits=total_bits,
                                     shj_bits=shj_bits, max_out=mo))
                 results.append(f(sub["R"], sub["S"]))
+            _maybe_fault("d2h")
             results = [jax.tree.map(jax.device_get, r) for r in results]
             if len(results) == 1:
                 out = results[0]
@@ -765,4 +873,6 @@ def _concat_bucket_ranges(part_c: ht.HashTable, part_g: ht.HashTable,
 
 
 CoProcessor.phj = PhjCoProcessorMixin.phj
+CoProcessor._partition_side_cooperative = \
+    PhjCoProcessorMixin._partition_side_cooperative
 CoProcessor.basic_unit_shj = PhjCoProcessorMixin.basic_unit_shj

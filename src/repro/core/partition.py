@@ -95,6 +95,62 @@ def radix_partition_scheduled(rel: Relation, *, schedule: tuple[int, ...],
     return Partitions(cur, start, count)
 
 
+def partition_pass(rel: Relation, *, shift: int, bits: int,
+                   use_pallas: bool | None = None,
+                   interpret: bool = False) -> Relation:
+    """One fused partition pass (n1+n2 sweep, scan+scatter n3)."""
+    from repro.kernels.partition_hist.ops import fused_partition_pass
+
+    out, _, _ = fused_partition_pass(rel, shift=shift, bits=bits,
+                                     use_pallas=use_pallas,
+                                     interpret=interpret)
+    return out
+
+
+_coop_pass_cache: dict = {}
+
+
+def _jitted_pass(shift: int, bits: int, use_pallas, interpret):
+    key = (shift, bits, use_pallas, interpret)
+    fn = _coop_pass_cache.get(key)
+    if fn is None:
+        fn = _coop_pass_cache[key] = jax.jit(partial(
+            partition_pass, shift=shift, bits=bits,
+            use_pallas=use_pallas, interpret=interpret))
+    return fn
+
+
+def radix_partition_cooperative(rel: Relation, *,
+                                schedule: tuple[int, ...],
+                                start_pass: int = 0, check=None,
+                                use_pallas: bool | None = None,
+                                interpret: bool = False) -> Partitions:
+    """Preemptible multi-pass partitioning: one jitted program *per pass*.
+
+    ``radix_partition_scheduled`` compiles the whole schedule into a
+    single program — nothing can stop it mid-flight.  This variant runs
+    the identical fused passes but returns control to Python between
+    them, calling ``check(pass_idx)`` first; a check that raises (the
+    engine's ``QueryContext.check`` raising ``DeadlineExceeded``) aborts
+    with ``pass_idx`` passes complete.  ``start_pass=k`` resumes a
+    relation that already absorbed the schedule's first ``k`` passes (a
+    checkpointed partial layout): each pass is a stable reorder on its
+    own bit slice, so completed passes never need re-running.
+    """
+    total_bits = sum(schedule)
+    cur = rel
+    shift = sum(schedule[:start_pass])
+    for i in range(start_pass, len(schedule)):
+        if check is not None:
+            check(i)
+        bits = schedule[i]
+        cur = _jitted_pass(shift, bits, use_pallas, interpret)(cur)
+        shift += bits
+    full_pid = radix_of(cur.key, shift=0, bits=total_bits)
+    start, count = partition_n2(full_pid, 1 << total_bits)
+    return Partitions(cur, start, count)
+
+
 def radix_partition(rel: Relation, *, bits_per_pass: int,
                     num_passes: int, use_pallas: bool | None = None,
                     interpret: bool = False) -> Partitions:

@@ -112,6 +112,18 @@ def resolve_schedule(n: int, *, bits_per_pass: int | None = None,
     return sched
 
 
+def schedule_prefixes(schedule: tuple[int, ...]):
+    """Proper prefixes of a pass schedule, longest first.
+
+    The engine's checkpoint/resume path stores a preempted query's
+    partially-partitioned layout under its completed-pass prefix key and
+    probes these prefixes (longest first — most work salvaged) when the
+    full-schedule layout misses.
+    """
+    sched = tuple(int(b) for b in schedule)
+    return [sched[:k] for k in range(len(sched) - 1, 0, -1)]
+
+
 def phj_join(build_rel: Relation, probe_rel: Relation, *,
              bits_per_pass: int | None = None, num_passes: int | None = None,
              schedule: tuple[int, ...] | None = None, planner=None,

@@ -15,6 +15,12 @@ resident build tables across queries.
     within, cost-priced shed/degrade with structured ``Backpressure``
   * ``open_loop`` — open-loop traffic simulation (Poisson/burst arrivals,
     tenant mixes, hot-tenant skew) for the ``slo_bench`` benchmark
+  * ``QueryContext`` / ``BudgetEnforcer`` / ``RetryPolicy`` /
+    ``BreakerBoard`` — the resilience layer: cooperative deadline
+    preemption with checkpoint/resume, runtime C/G budget enforcement,
+    and the retry → degrade → breaker → reference-path recovery ladder
+  * ``FaultInjector`` / ``injected`` — deterministic seed-driven fault
+    injection at the engine's kernel/h2d/d2h/worker/cache sites
   * ``Tracer`` / ``MetricsRegistry`` / ``CostAudit`` (re-exported from
     ``repro.obs``) — query-lifecycle spans, the labeled-counter registry
     behind ``stats()``, and the predicted-vs-measured cost-model audit
@@ -25,7 +31,12 @@ from repro.obs import (CostAudit, DriftDetector, FlightRecorder,
 
 from .admission import (AdmissionController, AdmissionDecision,
                         Backpressure, Tenant, TenantFairQueue, jain_index)
+from .faults import (FaultInjected, FaultInjector, FaultSpec, injected,
+                     install as install_fault_injector, maybe_fault)
 from .planner import (EXECUTABLE_SCHEMES, SCHEMES, QueryPlan, QueryPlanner)
+from .resilience import (BreakerBoard, BudgetEnforcer, BudgetExceeded,
+                         Cancelled, DeadlineExceeded, QueryContext,
+                         RetryPolicy)
 from .service import (GroupByQuery, JoinQuery, JoinQueryService,
                       PriorityAgingQueue, QueryOutcome, QueueFull)
 from .table_cache import (BuildTableCache, partition_layout_key,

@@ -248,6 +248,18 @@ class TenantFairQueue:
                 raise queue.Empty
             return self._pop_best()
 
+    def drain(self) -> list:
+        """Remove and return every queued item at once (service close:
+        the caller cancels each with a structured error).  Blocked
+        ``put`` calls wake to the freed capacity."""
+        with self._cond:
+            items = [e.item for lane in self._lanes.values() for e in lane]
+            self._lanes.clear()
+            self._backlog.clear()
+            self._size = 0
+            self._cond.notify_all()
+        return items
+
     def task_done(self):              # queue.Queue API compat (no join())
         pass
 

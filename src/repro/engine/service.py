@@ -43,7 +43,11 @@ from repro.obs import (CardinalityAudit, CostAudit, DriftDetector,
 
 from .admission import (AdmissionController, Backpressure, QueueFull,
                         Tenant, TenantFairQueue)
+from .faults import (FaultInjected, active as _faults_active,
+                     layout_checksum, maybe_corrupt, maybe_fault)
 from .planner import QueryPlan, QueryPlanner
+from .resilience import (BreakerBoard, BudgetEnforcer, BudgetExceeded,
+                         DeadlineExceeded, QueryContext, RetryPolicy)
 from .table_cache import (BuildTableCache, partition_layout_key,
                           relation_fingerprint)
 
@@ -273,7 +277,12 @@ class JoinQueryService:
                  metrics: MetricsRegistry | None = None,
                  flight: FlightRecorder | None = None,
                  slo: SLOMonitor | None = None,
-                 drift: DriftDetector | None = None):
+                 drift: DriftDetector | None = None,
+                 preempt: bool = False,
+                 enforce_budgets: bool = False,
+                 retry: RetryPolicy | None = None,
+                 breakers: BreakerBoard | None = None,
+                 budget: BudgetEnforcer | None = None):
         self.cp = cp or CoProcessor()
         self.planner = planner or QueryPlanner()
         self.cache = BuildTableCache(
@@ -370,11 +379,50 @@ class JoinQueryService:
         # Pre-seed so snapshot()["host_bytes_moved"] is always present —
         # the fused data path's whole point is to never increment it.
         self.metrics.inc("host_bytes_moved", 0)
+        # Resilience layer (see ``engine.resilience``): cooperative
+        # deadline preemption (``preempt=True`` threads a QueryContext
+        # into the kernels, checked at pass boundaries), runtime C/G
+        # budget enforcement off the measured-cost audit stream
+        # (``enforce_budgets=True``), and the recovery ladder — bounded
+        # retries for transient faults, one degraded retry, per-
+        # (algorithm, scheme) circuit breakers quarantining a failing
+        # kernel variant to the NumPy reference path.  All off by
+        # default: the defaults keep every execution byte-identical to
+        # the pre-resilience service.
+        self.preempt = bool(preempt)
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.breakers = breakers if breakers is not None else BreakerBoard(
+            clock=clock, metrics=self.metrics, flight=self.flight)
+        self.budget = budget
+        if enforce_budgets and self.budget is None:
+            self.budget = BudgetEnforcer(self.admission, clock=clock,
+                                         metrics=self.metrics)
+        if self.budget is not None:
+            self.audit.add_listener(self.budget.on_record)
+            self.metrics.register_collector("budget", self.budget.summary)
+        self.metrics.register_collector("breakers", self.breakers.summary)
+        self._closing = False
+        self._busy_workers = 0
+        # Injector-era layout checksums (content sums stored at cache-
+        # insert time, validated at reuse); empty — and never consulted —
+        # when no fault injector is installed.
+        self._layout_sums: dict = {}
+        for name in self._RESILIENCE_COUNTERS:
+            self.metrics.inc(name, 0)
 
     # Per-tenant counter names mirrored into the registry (and the exact
     # key set ``stats()["tenants"][t]`` has always exposed).
     _TENANT_COUNTERS = ("admitted", "rejected", "shed", "degraded",
                         "completed", "deadline_hits", "deadline_misses")
+
+    # Resilience counters pre-seeded at construction so ``stats()`` and
+    # bench payloads always carry them (zero = nothing happened, absent =
+    # nothing measured).
+    _RESILIENCE_COUNTERS = (
+        "preemptions", "budget_throttles", "retries", "worker_restarts",
+        "checkpoints", "partition_resumes", "breaker_short_circuits",
+        "cache_validation_failures", "cache_insert_failures",
+        "cancelled_on_close")
 
     def _count(self, name: str, tenant: str | None = None) -> None:
         """Bump a service counter (and its per-tenant series).
@@ -475,6 +523,38 @@ class JoinQueryService:
         return fp
 
     # -- synchronous execution path (also what workers run) -----------------
+    def _make_ctx(self, q) -> QueryContext | None:
+        """The query's cooperative control block — None when neither
+        preemption nor budget enforcement is on (the kernels then take
+        their exact pre-resilience fused paths)."""
+        if not self.preempt and self.budget is None:
+            return None
+        return QueryContext(
+            query_id=q.query_id, tenant=q.tenant,
+            deadline_at=(q.deadline_at if self.preempt else None),
+            clock=self._clock, enforcer=self.budget,
+            on_throttle=self._on_throttle)
+
+    def _on_throttle(self, tenant: str, delay_s: float) -> None:
+        self.metrics.inc("budget_throttles", tenant=tenant)
+        self.tracer.instant("budget_throttle", tenant=tenant)
+
+    def _note_preempt(self, e: Backpressure, where: str = "") -> None:
+        """Account one mid-flight preemption (deadline / budget / cancel)
+        exactly once — a structured service decision, not a failure."""
+        if getattr(e, "_svc_preempt_counted", False):
+            return
+        e._svc_preempt_counted = True
+        cause = getattr(e, "reason", "backpressure")
+        self.metrics.inc("preemptions", tenant=e.tenant, cause=cause)
+        self.metrics.event("preempt", cause=cause, tenant=e.tenant,
+                           query_id=e.query_id, where=where)
+        self.tracer.instant("preempt", tenant=e.tenant,
+                            query_id=e.query_id, reason=cause)
+        self.flight.record_resilience("preempt", cause=cause,
+                                      tenant=e.tenant,
+                                      query_id=e.query_id, where=where)
+
     def execute(self, q, *, enqueued_at: float | None = None
                 ) -> QueryOutcome:
         """Run one query now.  ``enqueued_at`` (a ``perf_counter`` stamp)
@@ -485,9 +565,19 @@ class JoinQueryService:
         # Direct executions bypass submit(): stamp the deadline here so
         # the outcome's verdict (and deferred inheritance) still work.
         self._stamp_deadline(q, self._clock())
-        if isinstance(q, GroupByQuery):
-            return self._execute_groupby(q, queued_s)
-        return self._execute_join(q, queued_s)
+        ctx = self._make_ctx(q)
+        try:
+            if ctx is not None:
+                # A query whose deadline already passed while queued is
+                # dropped here in O(1) — the biggest capacity saver under
+                # overload: no device seconds burned on a guaranteed miss.
+                ctx.check("pre_execute")
+            if isinstance(q, GroupByQuery):
+                return self._execute_groupby(q, queued_s, ctx)
+            return self._execute_join(q, queued_s, ctx)
+        except Backpressure as e:
+            self._note_preempt(e, where="execute")
+            raise
 
     def _obs_begin(self, q):
         """Allocate the query's trace correlation key (``q_key``) and
@@ -523,13 +613,13 @@ class JoinQueryService:
         self.slo.evaluate()
         return deadline_hit
 
-    def _execute_join(self, q: JoinQuery,
-                      queued_s: float = 0.0) -> QueryOutcome:
+    def _execute_join(self, q: JoinQuery, queued_s: float = 0.0,
+                      ctx: QueryContext | None = None) -> QueryOutcome:
         obs_key = self._obs_begin(q)
         with self.tracer.span("query", q_key=obs_key, query_id=q.query_id,
                               tenant=q.tenant, tag=q.tag,
                               kind=q.kind) as qspan:
-            result, plan, timing, flags = self._run_join(q, qspan)
+            result, plan, timing, flags = self._run_join(q, qspan, ctx)
         # Audit EVERY executed plan (phase, scheme, est_s, measured_s):
         # calibration's warm/solo gating filters out contended samples,
         # but measuring how wrong the solo-time estimate was *under
@@ -553,7 +643,85 @@ class JoinQueryService:
         self.flight.record_outcome(outcome)
         return outcome
 
-    def _run_join(self, q: JoinQuery, qspan=None):
+    # -- resilience plumbing -------------------------------------------------
+    def _peek_layout(self, layout_key):
+        """Partition-layout cache peek with injector-era validation: when
+        a fault injector is live, a stored layout whose content checksum
+        no longer matches the one recorded at insert (a ``corrupt``-mode
+        fault) is treated as a miss — corruption must surface as a cache
+        miss, never as a wrong join result.  Checksums cost a D2H pull,
+        so none of this runs in normal serving."""
+        rel = self.cache.peek_partition(layout_key)
+        if rel is None or not _faults_active():
+            return rel
+        expect = self._layout_sums.get(layout_key)
+        if expect is not None and layout_checksum(rel) != expect:
+            self.metrics.inc("cache_validation_failures")
+            self.flight.record_resilience("cache_corruption",
+                                          key=str(layout_key)[:120])
+            return None
+        return rel
+
+    def _put_layout(self, putter, layout_key, rel, tenant: str) -> None:
+        """Cache insert through the ``cache_insert`` fault site.  A raise-
+        mode fault skips the insert (a failed cache write must never fail
+        the query that computed the layout); a corrupt-mode fault stores
+        a flipped layout whose checksum — taken from the *clean* relation
+        — exposes it at the next peek."""
+        if not _faults_active():
+            putter(layout_key, rel, tenant)
+            return
+        clean_sum = layout_checksum(rel)
+        try:
+            maybe_fault("cache_insert")
+        except FaultInjected as e:
+            self.metrics.inc("cache_insert_failures")
+            self.flight.record_resilience("cache_insert_failed",
+                                          error=repr(e)[:120])
+            return
+        self._layout_sums[layout_key] = clean_sum
+        putter(layout_key, maybe_corrupt("cache_insert", rel), tenant)
+
+    def _store_checkpoints(self, q, ctx: QueryContext, plan) -> None:
+        """Persist a preempted query's partial partition layouts under
+        their completed-pass schedule-prefix keys, so a re-admitted run
+        resumes at ``start_pass = k`` instead of restarting."""
+        sched = tuple(plan.schedule or ())
+        for tag, (rel, k) in list(ctx.partials.items()):
+            base = ctx.meta.get("pkey_base" if tag == "R" else "skey_base")
+            if base is None or not 0 < k < len(sched):
+                continue
+            prefix = sched[:k]
+            if tag == "R":
+                pk = partition_layout_key(base, prefix)
+                self._put_layout(self.cache.put_partition, pk, rel,
+                                 q.tenant)
+            else:
+                pk = partition_layout_key(base, prefix, side="S")
+                self._put_layout(self.cache.put_probe_partition, pk, rel,
+                                 q.tenant)
+            self.metrics.inc("checkpoints", tenant=q.tenant)
+            self.flight.record_resilience(
+                "checkpoint", tag=tag, passes_done=k,
+                schedule=list(sched), query_id=q.query_id,
+                tenant=q.tenant)
+
+    def _resume_probe(self, base_fp: str, schedule, side: str = "R"):
+        """Longest-first probe of schedule-prefix checkpoint keys.
+        Returns ``(partial layout, completed passes)`` or ``(None, None)``."""
+        from repro.core.phj import schedule_prefixes
+        if not self.preempt or not schedule:
+            return None, None
+        for prefix in schedule_prefixes(schedule):
+            pk = (partition_layout_key(base_fp, prefix) if side == "R"
+                  else partition_layout_key(base_fp, prefix, side="S"))
+            cand = self._peek_layout(pk)
+            if cand is not None:
+                return cand, len(prefix)
+        return None, None
+
+    def _run_join(self, q: JoinQuery, qspan=None,
+                  ctx: QueryContext | None = None):
         """Plan + execute one join (the body of ``_execute_join``, run
         inside its query span).  Returns ``(result, plan, timing,
         (cache_hit, partition_hit, probe_partition_hit, wall_s))``."""
@@ -587,6 +755,23 @@ class JoinQueryService:
         if qspan is not None:
             # Ambient for the phase spans opened below on this thread.
             qspan.set(algorithm=plan.algorithm, scheme=plan.scheme)
+        # Circuit breaker: a quarantined (algorithm, scheme) variant runs
+        # on the NumPy reference path — slower, but correct and immune to
+        # whatever is killing the kernels.  HALF_OPEN lets one trial
+        # through onto the real path.
+        plan_key = (plan.algorithm, plan.scheme)
+        if not self.breakers.allow(plan_key):
+            self.metrics.inc("breaker_short_circuits", tenant=q.tenant)
+            self.flight.record_resilience(
+                "breaker_short_circuit", phase=plan.algorithm,
+                scheme=plan.scheme, query_id=q.query_id, tenant=q.tenant)
+            result = self._reference_join_result(q, max_out)
+            timing = Timing(tracer=self.cp.tracer)
+            timing.notes["reference_path"] = True
+            wall = time.perf_counter() - t0
+            timing.phase_s["reference"] = wall
+            timing.wall_s = wall
+            return result, plan, timing, (False, False, False, wall)
         share = plan.c_share
         with self._lock:
             self._loads["C"] += plan.est_s * share
@@ -622,16 +807,36 @@ class JoinQueryService:
                 # layout (keyed by content + schedule + side; hits counted
                 # separately per side).
                 pkey = partition_layout_key(key, plan.schedule)
-                layout = self.cache.peek_partition(pkey)
+                layout = self._peek_layout(pkey)
                 # Probe layouts depend only on content + schedule — NOT on
                 # the build table's bucket count — so the same probe
                 # relation re-probed against differently-sized build
                 # tables still hits (fingerprinted at num_buckets=0).
-                skey = partition_layout_key(
-                    self._fingerprint(q.probe, 0, stage=q.tag,
-                                      column="probe.key", tenant=q.tenant),
-                    plan.schedule, side="S")
-                probe_layout = self.cache.peek_partition(skey)
+                probe_fp = self._fingerprint(q.probe, 0, stage=q.tag,
+                                             column="probe.key",
+                                             tenant=q.tenant)
+                skey = partition_layout_key(probe_fp, plan.schedule,
+                                            side="S")
+                probe_layout = self._peek_layout(skey)
+                # Checkpoint resume: a full-layout miss probes the
+                # schedule-prefix keys a preempted run stored; a hit
+                # resumes partitioning at its completed-pass count.
+                build_resume = probe_resume = None
+                if layout is None:
+                    layout, build_resume = self._resume_probe(
+                        key, plan.schedule)
+                if probe_layout is None:
+                    probe_layout, probe_resume = self._resume_probe(
+                        probe_fp, plan.schedule, side="S")
+                for tag, k in (("R", build_resume), ("S", probe_resume)):
+                    if k is not None:
+                        self.metrics.inc("partition_resumes",
+                                         tenant=q.tenant)
+                        self.flight.record_resilience(
+                            "partition_resume", tag=tag, passes_done=k,
+                            query_id=q.query_id, tenant=q.tenant)
+                if ctx is not None:
+                    ctx.meta.update(pkey_base=key, skey_base=probe_fp)
                 parts_out: dict = {}
                 result, timing = self.cp.phj(
                     q.build, q.probe, schedule=plan.schedule,
@@ -639,21 +844,22 @@ class JoinQueryService:
                     partition_ratio=plan.partition_ratio,
                     join_ratio=plan.join_ratio,
                     build_parts=layout, probe_parts=probe_layout,
-                    parts_out=parts_out)
-                if layout is not None:
+                    parts_out=parts_out, ctx=ctx,
+                    build_resume=build_resume, probe_resume=probe_resume)
+                if layout is not None and build_resume is None:
                     self.cache.get_partition(pkey, q.tenant)  # hit + touch
                     partition_hit = True
                 else:
                     self.cache.record_partition_miss(q.tenant)
-                    self.cache.put_partition(pkey, parts_out["R"],
-                                             q.tenant)
-                if probe_layout is not None:
+                    self._put_layout(self.cache.put_partition, pkey,
+                                     parts_out["R"], q.tenant)
+                if probe_layout is not None and probe_resume is None:
                     self.cache.get_probe_partition(skey, q.tenant)
                     probe_partition_hit = True
                 else:
                     self.cache.record_probe_partition_miss(q.tenant)
-                    self.cache.put_probe_partition(skey, parts_out["S"],
-                                                   q.tenant)
+                    self._put_layout(self.cache.put_probe_partition, skey,
+                                     parts_out["S"], q.tenant)
             else:
                 # Miss accounting mirrors hit accounting: only a plan that
                 # would have *used* a resident table counts as a miss (a
@@ -666,6 +872,19 @@ class JoinQueryService:
                     self.cp, q.probe, table, kind=q.kind, max_out=max_out,
                     ratios=plan.probe_ratios, timing=timing)
                 self.cache.put(key, table, q.tenant)
+        except Backpressure:
+            # Preempted mid-flight (deadline / budget / cancel): free a
+            # half-open breaker trial without a verdict and checkpoint
+            # any completed partition passes for the re-admitted run.
+            self.breakers.release(plan_key)
+            if ctx is not None and ctx.partials:
+                self._store_checkpoints(q, ctx, plan)
+            raise
+        except Exception as e:
+            # Tag the failing plan variant so the recovery ladder can
+            # feed the breaker for this (algorithm, scheme).
+            e._svc_plan_key = plan_key
+            raise
         finally:
             for lock in reversed(held):
                 lock.release()
@@ -678,6 +897,9 @@ class JoinQueryService:
                 # cross-query CPU contention.
                 solo = (inflight_at_start == 1
                         and self._exec_epoch == start_epoch + 1)
+        # Clean execution: reset the variant's consecutive-failure count
+        # (and close a successful half-open trial).
+        self.breakers.record_success(plan_key)
         # Feedback gates: (a) the first execution of an (algorithm, scheme,
         # shape) signature is dominated by XLA compilation; (b) a query
         # that overlapped another execution measured shared-core contention
@@ -707,14 +929,14 @@ class JoinQueryService:
                                       probe_partition_hit, wall)
 
     # -- group-by aggregation (ops subsystem) --------------------------------
-    def _execute_groupby(self, q: GroupByQuery,
-                         queued_s: float = 0.0) -> QueryOutcome:
+    def _execute_groupby(self, q: GroupByQuery, queued_s: float = 0.0,
+                         ctx: QueryContext | None = None) -> QueryOutcome:
         """Plan + run one group-by under the same locks/feedback regime."""
         obs_key = self._obs_begin(q)
         with self.tracer.span("query", q_key=obs_key, query_id=q.query_id,
                               tenant=q.tenant, tag=q.tag,
                               kind="groupby") as qspan:
-            result, plan, timing, wall = self._run_groupby(q, qspan)
+            result, plan, timing, wall = self._run_groupby(q, qspan, ctx)
         self.audit.record(self.planner.phase_pairs(plan, timing),
                           tenant=q.tenant, query_id=q.query_id)
         deadline_hit = self._finish_outcome(q)
@@ -730,7 +952,8 @@ class JoinQueryService:
         self.flight.record_outcome(outcome)
         return outcome
 
-    def _run_groupby(self, q: GroupByQuery, qspan=None):
+    def _run_groupby(self, q: GroupByQuery, qspan=None,
+                     ctx: QueryContext | None = None):
         from repro.ops.groupby import groupby_coprocessed
         t0 = time.perf_counter()
         n = q.keys.size
@@ -741,6 +964,19 @@ class JoinQueryService:
                                                g_load=g_load)
         if qspan is not None:
             qspan.set(algorithm=plan.algorithm, scheme=plan.scheme)
+        plan_key = (plan.algorithm, plan.scheme)
+        if not self.breakers.allow(plan_key):
+            self.metrics.inc("breaker_short_circuits", tenant=q.tenant)
+            self.flight.record_resilience(
+                "breaker_short_circuit", phase=plan.algorithm,
+                scheme=plan.scheme, query_id=q.query_id, tenant=q.tenant)
+            result = self._reference_groupby_result(q)
+            timing = Timing(tracer=self.cp.tracer)
+            timing.notes["reference_path"] = True
+            wall = time.perf_counter() - t0
+            timing.phase_s["reference"] = wall
+            timing.wall_s = wall
+            return result, plan, timing, wall
         share = plan.c_share
         with self._lock:
             self._loads["C"] += plan.est_s * share
@@ -757,7 +993,13 @@ class JoinQueryService:
             result, timing = groupby_coprocessed(
                 self.cp, q.keys, q.values, schedule=plan.schedule,
                 partition_ratio=plan.partition_ratio,
-                agg_ratio=plan.join_ratio, wrap32=q.wrap32)
+                agg_ratio=plan.join_ratio, wrap32=q.wrap32, ctx=ctx)
+        except Backpressure:
+            self.breakers.release(plan_key)
+            raise
+        except Exception as e:
+            e._svc_plan_key = plan_key
+            raise
         finally:
             for lock in reversed(held):
                 lock.release()
@@ -767,6 +1009,7 @@ class JoinQueryService:
                 self._inflight -= 1
                 solo = (inflight_at_start == 1
                         and self._exec_epoch == start_epoch + 1)
+        self.breakers.record_success(plan_key)
         # wrap32 belongs in the warm-up signature: the wide (int64 bit-
         # chunk) and wrapping accumulators compile different executables,
         # so the first wide run after a wrap32 run of the same size is a
@@ -782,37 +1025,179 @@ class JoinQueryService:
         wall = time.perf_counter() - t0
         return result, plan, timing, wall
 
+    # -- recovery ladder (reference path, retries, breakers) -----------------
+    def _reference_join_result(self, q: JoinQuery,
+                               max_out: int) -> JoinResult:
+        """NumPy reference join honoring the query's variant kind — the
+        breaker's quarantine destination and the ladder's last rung.  No
+        device work at all, so it cannot share the kernels' failure mode."""
+        from repro.ops.join_variants import join_variant_oracle
+        pairs = join_variant_oracle(q.build, q.probe, q.kind)
+        cnt = min(len(pairs), int(max_out))
+        probe_rid = np.asarray(pairs[:cnt, 0], dtype=np.int32)
+        build_rid = np.asarray(pairs[:cnt, 1], dtype=np.int32)
+        return JoinResult(probe_rid, build_rid, np.int32(cnt))
+
+    def _reference_groupby_result(self, q: GroupByQuery):
+        """NumPy reference group-by (the tested oracle) for the ladder."""
+        from repro.core.hash_table import INVALID
+        from repro.ops.groupby import groupby_ref
+        keys = np.asarray(q.keys.key)
+        rid = np.asarray(q.keys.rid)
+        vals = np.asarray(q.values)
+        safe = np.clip(rid, 0, max(vals.shape[0] - 1, 0))
+        gathered = np.where(rid >= 0,
+                            vals[safe] if vals.shape[0] else 0,
+                            0).astype(np.int64)
+        live = rid != int(INVALID)
+        return groupby_ref(keys[live], gathered[live], wrap32=q.wrap32)
+
+    def _execute_reference(self, q, queued_s: float = 0.0) -> QueryOutcome:
+        """Full reference-path execution with honest outcome bookkeeping
+        (completed / deadline verdict / latency / flight record)."""
+        t0 = time.perf_counter()
+        if isinstance(q, GroupByQuery):
+            result = self._reference_groupby_result(q)
+            plan = self.planner.choose_groupby(q.keys.size, c_load=0.0,
+                                               g_load=0.0, record=False)
+        else:
+            max_out = (q.max_out if q.max_out is not None
+                       else 4 * q.probe.size + 1024)
+            result = self._reference_join_result(q, max_out)
+            plan = self.planner.choose_degraded(
+                q.build.size, q.probe.size, max_out=max_out,
+                cached=False, kind=q.kind, record=False)
+        timing = Timing(tracer=self.cp.tracer)
+        timing.notes["reference_path"] = True
+        wall = time.perf_counter() - t0
+        timing.phase_s["reference"] = wall
+        timing.wall_s = wall
+        deadline_hit = self._finish_outcome(q)
+        outcome = QueryOutcome(q.query_id, q.tag, plan, timing, False,
+                               queued_s, wall, result, priority=q.priority,
+                               tenant=q.tenant, degraded=q.degraded,
+                               deadline_at=q.deadline_at,
+                               deadline_hit=deadline_hit)
+        self.metrics.observe("query_latency_s", queued_s + wall,
+                             tenant=q.tenant)
+        self.flight.record_outcome(outcome)
+        return outcome
+
+    def _note_recovery(self, what: str, q, e, **extra) -> None:
+        self.metrics.event("recovery", what=what, tenant=q.tenant,
+                           query_id=q.query_id, error=repr(e)[:120],
+                           **extra)
+        self.tracer.instant(what, tenant=q.tenant, query_id=q.query_id)
+        self.flight.record_resilience(what, tenant=q.tenant,
+                                      query_id=q.query_id,
+                                      error=repr(e)[:120], **extra)
+
+    def _run_with_recovery(self, q, *, enqueued_at: float | None = None
+                           ) -> QueryOutcome:
+        """The worker-path recovery ladder, engaged for *transient*
+        failures only (deterministic errors — bad shapes, malformed
+        queries — still fail fast):
+
+          1. bounded retries with seeded jittered backoff;
+          2. one degraded (cheapest-plan) retry;
+          3. feed the per-(algorithm, scheme) breaker and fall back to
+             the NumPy reference path, which always succeeds.
+
+        Preemptions (``Backpressure``) pass straight through — they are
+        service decisions, not faults."""
+        attempt = 0
+        degraded_tried = False
+        while True:
+            try:
+                return self.execute(q, enqueued_at=enqueued_at)
+            except Exception as e:
+                if isinstance(e, QueueFull) or not self.retry.is_transient(e):
+                    raise
+                plan_key = getattr(e, "_svc_plan_key", None)
+                if plan_key is not None:
+                    self.breakers.record_failure(plan_key)
+                attempt += 1
+                if attempt <= self.retry.max_retries:
+                    delay = self.retry.backoff_s(attempt)
+                    self.metrics.inc("retries", tenant=q.tenant)
+                    self._note_recovery("retry", q, e, attempt=attempt,
+                                        backoff_s=round(delay, 5))
+                    time.sleep(delay)
+                    continue
+                if (not degraded_tried and isinstance(q, JoinQuery)
+                        and not q.degraded):
+                    degraded_tried = True
+                    q.degraded = True
+                    self._count("degraded", q.tenant)
+                    self._note_recovery("degrade_fallback", q, e)
+                    continue
+                self._note_recovery("reference_fallback", q, e)
+                return self._execute_reference(
+                    q, queued_s=(0.0 if enqueued_at is None else
+                                 max(0.0,
+                                     time.perf_counter() - enqueued_at)))
+
     # -- admission + workers -------------------------------------------------
     def _ensure_workers(self):
         with self._lock:               # concurrent first submits race here
             if self.num_workers <= 0 or self._workers:
                 return
             for i in range(self.num_workers):
-                t = threading.Thread(target=self._worker_loop,
+                t = threading.Thread(target=self._worker_main,
                                      name=f"join-worker-{i}", daemon=True)
                 t.start()
                 self._workers.append(t)
 
+    def _worker_main(self):
+        """Worker supervisor: restart the serving loop if it ever dies
+        unexpectedly (restart hygiene — a killed worker must never
+        silently shrink service capacity)."""
+        while True:
+            try:
+                self._worker_loop()
+                return                 # loop exited normally (stop set)
+            except BaseException as e:
+                if self._stop.is_set():
+                    return
+                self.metrics.inc("worker_restarts")
+                self.metrics.event("worker_restart", error=repr(e)[:200])
+                self.flight.record_resilience("worker_restart",
+                                              error=repr(e)[:200])
+
     def _worker_loop(self):
         while not self._stop.is_set():
+            # Fault site BEFORE the dequeue: an injected worker death
+            # never strands a claimed item (its waiter would hang).
+            maybe_fault("worker")
             try:
                 item = self._queue.get(timeout=0.05)
             except queue.Empty:
                 continue
             q, enq_t, box, done = item
+            with self._lock:
+                self._busy_workers += 1
             try:
-                box["outcome"] = self.execute(q, enqueued_at=enq_t)
+                box["outcome"] = self._run_with_recovery(q,
+                                                         enqueued_at=enq_t)
             except Exception as e:  # surface to the waiter, keep serving
                 # Mark the failure counted: a deferred-stage waiter
                 # re-raising this exception must not count it again.
                 e._svc_failure_counted = True
                 box["error"] = e
-                self._count("failed")
-                self.flight.record_failure(
-                    tenant=getattr(q, "tenant", "default"),
-                    query_id=getattr(q, "query_id", -1),
-                    where="worker", error=repr(e))
+                if isinstance(e, QueueFull):
+                    # Preempted / shed mid-flight: structured
+                    # backpressure, accounted by _note_preempt — a
+                    # service decision, never an execution failure.
+                    self._note_preempt(e, where="worker")
+                else:
+                    self._count("failed")
+                    self.flight.record_failure(
+                        tenant=getattr(q, "tenant", "default"),
+                        query_id=getattr(q, "query_id", -1),
+                        where="worker", error=repr(e))
             finally:
+                with self._lock:
+                    self._busy_workers -= 1
                 done.set()
                 self._queue.task_done()
 
@@ -900,8 +1285,17 @@ class JoinQueryService:
         in ``rejected``).  ``preadmitted`` skips the shed/degrade
         decision — pipeline stages whose root already passed admission.
         """
-        self._ensure_workers()
         tenant = q.tenant or "default"
+        with self._lock:
+            closing = self._closing
+        if closing:
+            bp = Backpressure(
+                f"service closing, query {q.query_id} not admitted",
+                reason="service_closing", tenant=tenant,
+                query_id=q.query_id, retry_after_s=0.1)
+            self._admission_event("reject", bp)
+            raise bp
+        self._ensure_workers()
         tr = self.tracer
         if tr.enabled and getattr(q, "_obs_key", None) is None:
             q._obs_key = tr.next_key()
@@ -1149,21 +1543,48 @@ class JoinQueryService:
         return [w() for w in waiters]
 
     # -- lifecycle / stats ---------------------------------------------------
-    def close(self):
+    def close(self, drain: bool = True, timeout: float = 5.0):
+        """Shut the service down.
+
+        ``drain=True`` (default) lets the workers finish everything
+        already admitted (bounded by ``timeout`` of *real* wall time —
+        the injectable clock may be fake and would never advance a drain
+        wait) before stopping them; ``drain=False`` stops them at the
+        next dequeue.  Either way, anything still queued afterwards is
+        cancelled with a structured ``Backpressure(service_closing)`` —
+        a shutdown decision, not an execution failure — so no waiter
+        ever blocks on a queue nobody drains.  Once closed, ``submit``
+        rejects with the same structured error; direct ``execute`` calls
+        still work.
+        """
+        with self._lock:
+            self._closing = True
+        if drain and self._workers:
+            end = time.monotonic() + float(timeout)
+            while time.monotonic() < end:
+                with self._lock:
+                    busy = self._busy_workers
+                if len(self._queue) == 0 and busy == 0:
+                    break
+                time.sleep(0.005)
         self._stop.set()
         for t in self._workers:
-            t.join(timeout=5.0)
-        # Fail queries still sitting in the admission queue: their waiters
-        # would otherwise block forever on a queue nobody drains.
-        while True:
-            try:
-                q, _, box, done = self._queue.get_nowait()
-            except queue.Empty:
-                break
-            box["error"] = RuntimeError(
-                f"service closed before query {q.query_id} ran")
+            t.join(timeout=float(timeout))
+        # Cancel queries still sitting in the admission queue.
+        for item in self._queue.drain():
+            q, _, box, done = item
+            bp = Backpressure(
+                f"service closed before query {q.query_id} ran",
+                reason="service_closing",
+                tenant=getattr(q, "tenant", "default"),
+                query_id=getattr(q, "query_id", -1))
+            box["error"] = bp
             done.set()
-            self._count("failed")
+            self.metrics.inc("cancelled_on_close",
+                             tenant=getattr(q, "tenant", "default"))
+            self.metrics.event("admission", action="cancel",
+                               **bp.to_dict())
+            self.flight.record_admission("cancel", **bp.to_dict())
         self._workers.clear()
         self._stop.clear()
 
@@ -1199,6 +1620,10 @@ class JoinQueryService:
                     tenants.setdefault(
                         t, {n: 0 for n in self._TENANT_COUNTERS}
                     )[name] = int(value)
+        resilience = {name: int(self.metrics.counter_value(name))
+                      for name in self._RESILIENCE_COUNTERS}
+        resilience["breakers"] = snap.get("breakers")
+        resilience["budget"] = snap.get("budget")
         return {**counters,
                 "host_bytes_moved": int(snap.get("host_bytes_moved", 0)),
                 "queue_depth": snap.get("queue_depth", 0),
@@ -1208,4 +1633,5 @@ class JoinQueryService:
                 "drift": snap.get("drift"),
                 "host_transfer_ledger": snap.get("host_transfer_ledger"),
                 "cardinality_error": snap.get("cardinality_error"),
+                "resilience": resilience,
                 "metrics": snap}

@@ -136,6 +136,13 @@ class FlightRecorder:
                       "error": error[:500]})
         self._maybe_dump("query_failure")
 
+    def record_resilience(self, what: str, **payload) -> None:
+        """One recovery-ladder transition (preemption, retry, degrade
+        fallback, breaker state change, worker restart, checkpoint) —
+        recorded, never a dump trigger by itself: the ladder *handling*
+        a fault is normal operation, only unhandled failures dump."""
+        self._append({"kind": "resilience", "what": what, **payload})
+
     def _bump_trigger(self, ring: deque, n: int, window_s: float,
                       reason: str) -> None:
         now = self._clock()

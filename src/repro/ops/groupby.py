@@ -189,16 +189,19 @@ def _collect(pieces, wrap32: bool = True) -> GroupByResult:
 def groupby_coprocessed(cp: CoProcessor, rel: Relation, values, *,
                         schedule: tuple[int, ...] | None = None,
                         partition_ratio: float = 1.0, agg_ratio: float = 1.0,
-                        interpret: bool = False, wrap32: bool = False
-                        ) -> tuple[GroupByResult, Timing]:
+                        interpret: bool = False, wrap32: bool = False,
+                        ctx=None) -> tuple[GroupByResult, Timing]:
     """Hash group-by of ``values`` by ``rel.key`` across the two groups.
 
     ``rel.rid`` must index rows of ``values`` (the arange gather
     convention); rid ``INVALID`` marks pad tuples.  ``values`` may be a
     host array or a device array (the fused pipeline hands the sink its
     value column device-resident).  Sums are exact int64 unless
-    ``wrap32=True`` requests the legacy int32 wrap.  See module docstring
-    for the phase structure.
+    ``wrap32=True`` requests the legacy int32 wrap.  ``ctx`` (a
+    ``QueryContext``) makes the partition phase preemptible —
+    pass-at-a-time with ``ctx.check`` at every boundary and once more
+    before each aggregate phase.  See module docstring for the phase
+    structure.
     """
     from repro.core.partition import radix_partition_scheduled
 
@@ -221,20 +224,27 @@ def groupby_coprocessed(cp: CoProcessor, rel: Relation, values, *,
                                              interpret=interpret).rel
 
         with timing.phase("partition", passes=len(schedule)):
-            n = rel.size
-            cut = cp._cut(n, partition_ratio)
-            if cp.discrete and 0 < cut < n:
-                cp._bus_delay((n - cut) * 8, timing)
-            pieces = []
-            if cut > 0:
-                f = cp.c.jit(("gb_part", cut, schedule), part_fn)
-                pieces.append(f(cp.c.put_items(rel.take(0, cut))))
-            if cut < n:
-                f = cp.g.jit(("gb_part", n - cut, schedule), part_fn)
-                pieces.append(f(cp.g.put_items(rel.take(cut, n))))
-            pieces = [jax.tree.map(jax.device_get, x) for x in pieces]
-            rel = Relation(jnp.concatenate([x.rid for x in pieces]),
-                           jnp.concatenate([x.key for x in pieces]))
+            if ctx is not None:
+                rel = cp._partition_side_cooperative(
+                    "GB", rel, tuple(schedule), partition_ratio, ctx, 0,
+                    timing, interpret=interpret)
+            else:
+                n = rel.size
+                cut = cp._cut(n, partition_ratio)
+                if cp.discrete and 0 < cut < n:
+                    cp._bus_delay((n - cut) * 8, timing)
+                pieces = []
+                if cut > 0:
+                    f = cp.c.jit(("gb_part", cut, schedule), part_fn)
+                    pieces.append(f(cp.c.put_items(rel.take(0, cut))))
+                if cut < n:
+                    f = cp.g.jit(("gb_part", n - cut, schedule), part_fn)
+                    pieces.append(f(cp.g.put_items(rel.take(cut, n))))
+                pieces = [jax.tree.map(jax.device_get, x) for x in pieces]
+                rel = Relation(jnp.concatenate([x.rid for x in pieces]),
+                               jnp.concatenate([x.key for x in pieces]))
+        if ctx is not None:
+            ctx.check("agg")
         with timing.phase("agg"):
             # Ownership exchange: partitions [0, own) -> C, rest -> G
             # (phj's join-phase split, applied to the reduce).
@@ -267,6 +277,8 @@ def groupby_coprocessed(cp: CoProcessor, rel: Relation, values, *,
             result = _collect(outs, wrap32=wrap32)
     else:
         timing.phase_s["partition"] = 0.0
+        if ctx is not None:
+            ctx.check("agg")
         with timing.phase("agg"):
             n = rel.size
             cut = cp._cut(n, agg_ratio)

@@ -564,8 +564,8 @@ class PipelineExecutor:
         self.qerror_threshold = float(qerror_threshold)
         self._qid = itertools.count(1)
 
-    def close(self):
-        self.service.close()
+    def close(self, drain: bool = True):
+        self.service.close(drain=drain)
 
     def __enter__(self):
         return self
@@ -721,6 +721,18 @@ class PipelineExecutor:
         next_id = itertools.count(
             max(s.stage_id for s in physical.stages) + 1)
         while pending:
+            # Wave boundary = the pipeline's preemption point: a blown
+            # deadline aborts here with the same structured error the
+            # kernels' pass boundaries raise, before the next wave burns
+            # device time on a guaranteed miss.
+            if (getattr(self.service, "preempt", False)
+                    and deadline_at is not None
+                    and self.service._clock() > deadline_at):
+                from repro.engine.resilience import DeadlineExceeded
+                raise DeadlineExceeded(
+                    f"pipeline deadline passed with {len(pending)} "
+                    f"stage(s) unexecuted", reason="deadline_exceeded",
+                    tenant=tenant, deadline_s=0.0)
             wave = [s for s in pending if all(d in inter for d in s.deps)]
             handles = {}
             for stage in wave:

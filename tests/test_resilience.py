@@ -1,0 +1,551 @@
+"""Resilience layer: seeded fault injection, cooperative deadline
+preemption with checkpoint/resume, runtime budget enforcement, the
+retry -> degrade -> breaker -> reference recovery ladder, and drain-close.
+
+Scheduling-sensitive tests run on fake clocks and seeded injectors —
+fully deterministic; the chaos soak replays a seeded open-loop trace
+under a seeded injector and checks *invariants* (structured failures
+only, row-exact successes) rather than a specific interleaving."""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (CoProcessor, Relation, join_oracle,
+                        radix_partition_scheduled, uniform_relation,
+                        unique_relation)
+from repro.core.partition import (partition_pass,
+                                  radix_partition_cooperative)
+from repro.core.phj import default_shj_bits, schedule_prefixes
+from repro.engine import (AdmissionController, Backpressure, BreakerBoard,
+                          BudgetEnforcer, BudgetExceeded, Cancelled,
+                          DeadlineExceeded, FaultInjected, FaultInjector,
+                          FaultSpec, JoinQuery, JoinQueryService,
+                          QueryContext, QueryPlanner, QueueFull,
+                          RetryPolicy, Tenant, injected, open_loop)
+from repro.engine.resilience import CLOSED, HALF_OPEN, OPEN
+from repro.ops.join_variants import join_variant_oracle
+
+
+@pytest.fixture(scope="module")
+def cp():
+    return CoProcessor()
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+class StepClock:
+    """Advances by ``dt`` on every read — time passes *because* the
+    service looked at the clock, which makes pass-boundary deadline
+    checks land deterministically."""
+
+    def __init__(self, dt):
+        self.t = 0.0
+        self.dt = dt
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+def _rows(result):
+    cnt = int(result.count)
+    out = np.stack([np.asarray(result.probe_rid)[:cnt].astype(np.int64),
+                    np.asarray(result.build_rid)[:cnt].astype(np.int64)],
+                   axis=1)
+    return out[np.lexsort((out[:, 1], out[:, 0]))]
+
+
+def _tiny(qid=0, n=1024, seed=1, **kw):
+    b = unique_relation(n, seed=seed)
+    s = uniform_relation(n, key_range=n, seed=seed + 1)
+    return JoinQuery(b, s, query_id=qid, max_out=4 * n + 1024, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Fault injector: seed-deterministic schedules.
+# ---------------------------------------------------------------------------
+def test_injector_at_every_and_max_faults():
+    inj = FaultInjector(seed=3, sites={
+        "kernel": FaultSpec(mode="raise", at=(2,), every=5, max_faults=2)})
+    fired = []
+    for i in range(1, 16):
+        try:
+            inj.visit("kernel")
+        except FaultInjected as e:
+            assert e.site == "kernel" and e.nth == i
+            assert e.transient          # the ladder only engages on these
+            fired.append(i)
+    # at=2, every=5 -> {2, 5, 10, 15}, capped at max_faults=2.
+    assert fired == [2, 5]
+    assert inj.stats() == {"calls": {"kernel": 15}, "fired": {"kernel": 2}}
+
+
+def test_injector_bernoulli_is_seed_deterministic():
+    def run(seed):
+        inj = FaultInjector(seed=seed, sites={
+            "h2d": FaultSpec(mode="raise", p=0.3)})
+        hits = []
+        for i in range(1, 41):
+            try:
+                inj.visit("h2d")
+            except FaultInjected:
+                hits.append(i)
+        return hits
+
+    assert run(11) == run(11)           # same seed, same calls fire
+    assert run(11) != run(12)           # and the seed actually matters
+    assert 1 <= len(run(11)) <= 39
+
+
+def test_injected_contextmanager_installs_and_clears():
+    from repro.engine.faults import active, maybe_fault
+    assert not active()
+    maybe_fault("kernel")               # uninstalled: a no-op
+    with injected(FaultInjector(seed=0, sites={
+            "kernel": FaultSpec(mode="raise", every=1)})):
+        assert active()
+        with pytest.raises(FaultInjected):
+            maybe_fault("kernel")
+    assert not active()
+    maybe_fault("kernel")               # cleared again
+
+
+# ---------------------------------------------------------------------------
+# QueryContext / token buckets / retry policy / breakers (pure units).
+# ---------------------------------------------------------------------------
+def test_query_context_deadline_and_cancel_are_structured():
+    clk = FakeClock()
+    ctx = QueryContext(query_id=7, tenant="t", deadline_at=1.0, clock=clk)
+    ctx.check("pass0")                  # t=0 <= 1.0
+    clk.t = 1.5
+    with pytest.raises(DeadlineExceeded) as ei:
+        ctx.check("pass1")
+    # Same structured family admission sheds with: callers that treat
+    # QueueFull/Backpressure as "not a failure" cover preemption free.
+    assert isinstance(ei.value, Backpressure)
+    assert isinstance(ei.value, QueueFull)
+    assert ei.value.reason == "deadline_exceeded"
+
+    ctx2 = QueryContext(query_id=8, tenant="t", clock=clk)
+    ctx2.cancel.set()
+    with pytest.raises(Cancelled):
+        ctx2.check()
+    # note_partial keeps only real progress (0 completed passes is not a
+    # checkpoint).
+    ctx2.note_partial("R", object(), 0)
+    assert ctx2.partials == {}
+
+
+def test_budget_enforcer_throttle_then_preempt():
+    clk = FakeClock()
+    adm = AdmissionController([Tenant("t", c_budget=0.5)], num_workers=1)
+    enf = BudgetEnforcer(adm, burst_s=1.0, preempt_debt_s=2.0,
+                         max_throttle_s=0.05, clock=clk)
+    assert enf.check("t") == ("ok", 0.0)
+    # Charge 1.5 C-seconds against 1.0s of burst headroom: 0.5s of debt,
+    # small enough to throttle (bounded by max_throttle_s).
+    enf.on_record({"measured_s": 1.5, "tenant": "t", "scheme": "CPU_ONLY"})
+    verdict, amount = enf.check("t")
+    assert verdict == "throttle" and amount == pytest.approx(0.05)
+    # Pile on past the preemption bound.
+    enf.on_record({"measured_s": 3.0, "tenant": "t", "scheme": "CPU_ONLY"})
+    verdict, debt = enf.check("t")
+    assert verdict == "preempt" and debt >= 2.0
+    # Refill at the tenant's budget rate works the debt off: after 10
+    # wall seconds at 0.5 dev-s/s the bucket is solvent again.
+    clk.t = 10.0
+    assert enf.check("t") == ("ok", 0.0)
+    # Other tenants are untouched.
+    assert enf.check("other") == ("ok", 0.0)
+
+
+def test_budget_split_schemes_charge_both_groups():
+    clk = FakeClock()
+    adm = AdmissionController([Tenant("t")], num_workers=1)
+    enf = BudgetEnforcer(adm, burst_s=0.1, clock=clk)
+    enf.on_record({"measured_s": 1.0, "tenant": "t", "scheme": "DD"})
+    levels = enf.summary()
+    assert set(levels) == {"t/C", "t/G"}
+    assert levels["t/C"]["level"] == pytest.approx(0.1 - 0.5)
+    assert levels["t/G"]["level"] == pytest.approx(0.1 - 0.5)
+
+
+def test_retry_policy_transience_and_backoff_bounds():
+    rp = RetryPolicy(max_retries=2, base_backoff_s=0.01, max_backoff_s=0.04,
+                     seed=5)
+    assert rp.is_transient(FaultInjected("kernel", 1))
+    assert not rp.is_transient(ValueError("bad shape"))
+    for attempt in (1, 2, 3, 8):
+        d = rp.backoff_s(attempt)
+        assert 0.0 < d <= 0.04 * 1.5    # jitter in [0.5, 1.5) x base
+
+
+def test_breaker_full_cycle_with_halfopen_trial():
+    clk = FakeClock()
+    bb = BreakerBoard(threshold=3, cooldown_s=10.0, clock=clk)
+    key = ("shj", "DD")
+    assert bb.allow(key) and bb.state_of(key) == CLOSED
+    assert not bb.record_failure(key)
+    assert not bb.record_failure(key)
+    assert bb.record_failure(key)       # third consecutive failure: opens
+    assert bb.state_of(key) == OPEN
+    assert not bb.allow(key)            # quarantined inside the cooldown
+    clk.t = 11.0
+    assert bb.allow(key)                # the half-open trial
+    assert bb.state_of(key) == HALF_OPEN
+    assert not bb.allow(key)            # exactly one trial in flight
+    bb.record_failure(key)              # trial failed: re-open
+    assert bb.state_of(key) == OPEN
+    clk.t = 22.0
+    assert bb.allow(key)
+    bb.record_success(key)              # trial succeeded: closed, reset
+    assert bb.state_of(key) == CLOSED
+    assert bb.allow(key)
+    assert bb.summary()["shj/DD"] == {"state": "closed", "fails": 0}
+
+
+def test_breaker_release_frees_a_verdictless_trial():
+    clk = FakeClock()
+    bb = BreakerBoard(threshold=1, cooldown_s=1.0, clock=clk)
+    key = ("phj", "DD")
+    bb.record_failure(key)
+    clk.t = 2.0
+    assert bb.allow(key)                # half-open trial claimed
+    bb.release(key)                     # preempted mid-trial: no verdict
+    assert bb.allow(key)                # slot free for the next trial
+    bb.record_success(key)
+    assert bb.state_of(key) == CLOSED
+
+
+# ---------------------------------------------------------------------------
+# Cooperative partitioning: preemptible passes, resumable checkpoints.
+# ---------------------------------------------------------------------------
+def test_cooperative_partition_matches_fused():
+    rel = uniform_relation(4096, seed=3)
+    sched = (4, 3)
+    fused = radix_partition_scheduled(rel, schedule=sched)
+    coop = radix_partition_cooperative(rel, schedule=sched)
+    assert np.array_equal(np.asarray(fused.rel.key), np.asarray(coop.rel.key))
+    assert np.array_equal(np.asarray(fused.rel.rid), np.asarray(coop.rel.rid))
+    assert np.array_equal(np.asarray(fused.part_start),
+                          np.asarray(coop.part_start))
+    assert np.array_equal(np.asarray(fused.part_count),
+                          np.asarray(coop.part_count))
+
+
+def test_cooperative_resume_from_checkpoint_is_exact():
+    """A k-pass partial layout + start_pass=k reproduces the fused result
+    exactly — each pass is a stable reorder on its own bit slice."""
+    rel = uniform_relation(4096, seed=9)
+    sched = (4, 4)
+    fused = radix_partition_scheduled(rel, schedule=sched)
+    ckpt = partition_pass(rel, shift=0, bits=sched[0])  # pass 0 only
+    resumed = radix_partition_cooperative(ckpt, schedule=sched,
+                                          start_pass=1)
+    assert np.array_equal(np.asarray(fused.rel.key),
+                          np.asarray(resumed.rel.key))
+    assert np.array_equal(np.asarray(fused.rel.rid),
+                          np.asarray(resumed.rel.rid))
+    assert np.array_equal(np.asarray(fused.part_start),
+                          np.asarray(resumed.part_start))
+
+
+def test_cooperative_check_sees_every_pass_boundary():
+    rel = uniform_relation(1024, seed=2)
+    seen = []
+
+    def chk(i):
+        seen.append(i)
+        if i == 1:
+            raise RuntimeError("preempted")
+
+    with pytest.raises(RuntimeError, match="preempted"):
+        radix_partition_cooperative(rel, schedule=(3, 3, 2), check=chk)
+    assert seen == [0, 1]
+
+
+def test_schedule_prefixes_longest_first():
+    assert schedule_prefixes((4, 3, 2)) == [(4, 3), (4,)]
+    assert schedule_prefixes((5,)) == []
+
+
+# ---------------------------------------------------------------------------
+# Service-level preemption, checkpointing and resume.
+# ---------------------------------------------------------------------------
+class ForcePhjPlanner(QueryPlanner):
+    """Planner pinned to a fixed-schedule PHJ plan — the checkpoint tests
+    need a deterministic multi-pass partition phase, not a cost-model
+    arbitration."""
+
+    def __init__(self, schedule=(4, 4), **kw):
+        super().__init__(**kw)
+        self._sched = tuple(schedule)
+
+    def choose(self, build_n, probe_n, *, max_out, **kw):
+        plan = self._phj_candidate(build_n, probe_n)
+        return dataclasses.replace(
+            plan, schedule=self._sched,
+            shj_bits=default_shj_bits(build_n, sum(self._sched)),
+            max_out=int(max_out))
+
+
+def test_preempt_drops_already_missed_deadline_in_o1(cp):
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=0, preempt=True,
+                           clock=StepClock(0.3))
+    q = _tiny(qid=1, deadline_s=0.1)    # dead before any kernel runs
+    with pytest.raises(DeadlineExceeded):
+        svc.execute(q)
+    st = svc.stats()
+    assert st["resilience"]["preemptions"] == 1
+    assert st["failed"] == 0            # a decision, not a failure
+    assert st["completed"] == 0
+
+
+def test_phj_deadline_preemption_checkpoints_then_resumes(cp):
+    """The tentpole end-to-end: a deadline blown at a pass boundary
+    aborts with the completed pass checkpointed under its schedule-prefix
+    key; the re-admitted query resumes at start_pass=1 and produces the
+    exact oracle join."""
+    # Clock reads in execute(): stamp (0.2) -> pre_execute (0.4) ->
+    # R pass0 (0.6) -> R pass1 (0.8 > deadline 0.2+0.5): preempted with
+    # exactly one completed pass.
+    svc = JoinQueryService(cp=cp, planner=ForcePhjPlanner(schedule=(4, 4)),
+                           num_workers=0, preempt=True,
+                           clock=StepClock(0.2))
+    b = unique_relation(2048, seed=21)
+    s = uniform_relation(2048, key_range=2048, seed=22)
+    q1 = JoinQuery(b, s, query_id=1, max_out=4 * 2048 + 1024,
+                   deadline_s=0.5)
+    with pytest.raises(DeadlineExceeded):
+        svc.execute(q1)
+    st = svc.stats()["resilience"]
+    assert st["preemptions"] == 1
+    assert st["checkpoints"] == 1       # R's 1-of-2-passes layout stored
+
+    # Re-admitted without a deadline: the full-schedule layout misses,
+    # the (4,) prefix checkpoint hits, partitioning resumes at pass 1.
+    q2 = JoinQuery(b, s, query_id=2, max_out=4 * 2048 + 1024)
+    out = svc.execute(q2)
+    st = svc.stats()
+    assert st["resilience"]["partition_resumes"] == 1
+    assert out.timing.notes.get("R_resumed_at") == 1
+    assert st["completed"] == 1 and st["failed"] == 0
+    oracle = join_oracle(b, s)
+    assert int(out.result.count) == len(oracle)
+    assert np.array_equal(_rows(out.result), oracle)
+
+
+def test_budget_preemption_through_the_service(cp):
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=0, enforce_budgets=True,
+                           tenants=[Tenant("meter", c_budget=0.5)],
+                           clock=FakeClock())
+    # A tenant that already burned far past its budget: the next query
+    # is preempted at its first pass boundary (here: pre_execute).
+    svc.budget.on_record({"measured_s": 10.0, "tenant": "meter",
+                          "scheme": "CPU_ONLY"})
+    with pytest.raises(BudgetExceeded) as ei:
+        svc.execute(_tiny(qid=3, tenant="meter"))
+    assert ei.value.reason == "budget"
+    st = svc.stats()
+    assert st["resilience"]["preemptions"] == 1
+    assert st["failed"] == 0
+    # An unmetered tenant sails through on the same service.
+    out = svc.execute(_tiny(qid=4, tenant="other"))
+    assert int(out.result.count) > 0
+
+
+# ---------------------------------------------------------------------------
+# The recovery ladder: retry -> degrade -> breaker -> reference path.
+# ---------------------------------------------------------------------------
+def test_ladder_recovers_every_kernel_fault_row_exact(cp):
+    q = _tiny(qid=5, n=2048, seed=31)
+    oracle = join_variant_oracle(q.build, q.probe, q.kind)
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=1)
+    with injected(FaultInjector(seed=7, sites={
+            "kernel": FaultSpec(mode="raise", every=1)})):
+        out = svc.submit(q)(timeout=120)
+    st = svc.stats()
+    # Every real-kernel attempt died; the ladder retried, degraded, fed
+    # the breaker and landed on the reference path — never a failure.
+    assert st["failed"] == 0 and st["completed"] == 1
+    assert st["resilience"]["retries"] == svc.retry.max_retries
+    assert out.timing.notes.get("reference_path") is True
+    assert np.array_equal(_rows(out.result), oracle)
+    assert any(b["state"] == "open"
+               for b in st["resilience"]["breakers"].values())
+    # The quarantined variant now short-circuits straight to the
+    # reference path — no faults needed, still row-exact.
+    q2 = _tiny(qid=6, n=2048, seed=31)
+    out2 = svc.submit(q2)(timeout=120)
+    st = svc.stats()
+    assert st["resilience"]["breaker_short_circuits"] >= 1
+    assert np.array_equal(_rows(out2.result), oracle)
+    svc.close()
+
+
+def test_deterministic_errors_still_fail_fast(cp):
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=1)
+    bad = _tiny(qid=7)
+    bad.build = None                    # not transient: no ladder
+    h = svc.submit(bad)
+    with pytest.raises(Exception):
+        h()
+    st = svc.stats()
+    assert st["failed"] == 1
+    assert st["resilience"]["retries"] == 0
+    svc.close()
+
+
+def test_cache_corruption_detected_and_insert_faults_absorbed(cp):
+    b = unique_relation(2048, seed=41)
+    s = uniform_relation(2048, key_range=2048, seed=42)
+    oracle = join_oracle(b, s)
+
+    def fresh():
+        return JoinQueryService(cp=cp, planner=ForcePhjPlanner(),
+                                num_workers=0)
+
+    # corrupt-mode cache_insert: the stored layout is flipped, the
+    # checksum (taken from the clean relation) exposes it at reuse —
+    # a cache miss, never a wrong join.
+    svc = fresh()
+    with injected(FaultInjector(seed=1, sites={
+            "cache_insert": FaultSpec(mode="corrupt", every=1)})):
+        svc.execute(JoinQuery(b, s, query_id=1, max_out=4 * 2048 + 1024))
+        out = svc.execute(JoinQuery(b, s, query_id=2,
+                                    max_out=4 * 2048 + 1024))
+    st = svc.stats()
+    assert st["resilience"]["cache_validation_failures"] >= 2  # R and S
+    assert not out.partition_cache_hit
+    assert np.array_equal(_rows(out.result), oracle)
+
+    # raise-mode cache_insert: the insert is skipped; the query that
+    # computed the layout still completes.
+    svc = fresh()
+    with injected(FaultInjector(seed=2, sites={
+            "cache_insert": FaultSpec(mode="raise", at=(1,))})):
+        out = svc.execute(JoinQuery(b, s, query_id=3,
+                                    max_out=4 * 2048 + 1024))
+    st = svc.stats()
+    assert st["resilience"]["cache_insert_failures"] == 1
+    assert st["failed"] == 0
+    assert np.array_equal(_rows(out.result), oracle)
+
+
+# ---------------------------------------------------------------------------
+# Worker hygiene and drain-close.
+# ---------------------------------------------------------------------------
+def test_worker_restart_preserves_capacity(cp):
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=1)
+    with injected(FaultInjector(seed=0, sites={
+            "worker": FaultSpec(mode="raise", at=(1,))})):
+        out = svc.submit(_tiny(qid=8))(timeout=120)
+    st = svc.stats()
+    assert st["resilience"]["worker_restarts"] >= 1
+    assert st["completed"] == 1 and st["failed"] == 0
+    assert int(out.result.count) > 0
+    svc.close()
+
+
+def test_close_drains_then_rejects_submits(cp):
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=1)
+    waits = [svc.submit(_tiny(qid=i, seed=51)) for i in range(3)]
+    svc.close(drain=True)
+    # Drained: every admitted query completed before the workers stopped.
+    assert all(int(w(timeout=1).result.count) >= 0 for w in waits)
+    st = svc.stats()
+    assert st["completed"] == 3
+    assert st["resilience"]["cancelled_on_close"] == 0
+    # Submit-after-close: structured rejection, counted.
+    with pytest.raises(Backpressure) as ei:
+        svc.submit(_tiny(qid=99))
+    assert ei.value.reason == "service_closing"
+    assert svc.stats()["rejected"] == 1
+
+
+def test_close_cancels_undrainable_queue_structured(cp):
+    # No workers: queued items can never be served — close() must cancel
+    # them with structured Backpressure, not leave waiters hanging.
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=0)
+    w = svc.submit(_tiny(qid=9))
+    svc.close()
+    with pytest.raises(Backpressure) as ei:
+        w(timeout=1)
+    assert ei.value.reason == "service_closing"
+    assert svc.stats()["resilience"]["cancelled_on_close"] == 1
+    assert len(svc._queue) == 0
+
+
+def test_resilience_counters_present_and_zero_by_default(cp):
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=0)
+    svc.execute(_tiny(qid=10))
+    res = svc.stats()["resilience"]
+    for name in ("preemptions", "budget_throttles", "retries",
+                 "worker_restarts", "checkpoints", "partition_resumes",
+                 "breaker_short_circuits", "cancelled_on_close"):
+        assert res[name] == 0
+    assert res["breakers"] == {}
+
+
+# ---------------------------------------------------------------------------
+# Chaos soak: seeded open-loop traffic under seeded faults.
+# ---------------------------------------------------------------------------
+def test_chaos_soak_structured_failures_and_row_exact_results(cp):
+    events = open_loop(
+        12, rate_qps=500.0, mix="mixed", arrivals="poisson",
+        tenant_mix=(("gold", 2.0), ("bronze", 1.0)),
+        deadlines={"gold": 30.0}, base_tuples=512, seed=11)
+    inj = FaultInjector(seed=5, sites={
+        "kernel": FaultSpec(mode="raise", p=0.05, max_faults=4),
+        "h2d": FaultSpec(mode="delay", p=0.2, delay_s=0.001),
+    })
+    svc = JoinQueryService(cp=cp, planner=QueryPlanner(delta=0.25),
+                           num_workers=2, preempt=True)
+    unstructured = []
+    results = []
+    with injected(inj):
+        waits = []
+        for ev in events:
+            try:
+                waits.append((ev.query, svc.submit(ev.query)))
+            except Backpressure:
+                pass                    # structured shed: fine
+        for q, w in waits:
+            try:
+                results.append((q, w(timeout=180)))
+            except QueueFull:
+                pass                    # structured preemption: fine
+            except Exception as e:      # anything else breaks the soak
+                unstructured.append(e)
+        svc.close(drain=True)
+    assert unstructured == []
+    st = svc.stats()
+    assert st["failed"] == 0            # injected faults all recovered
+    assert inj.stats()["fired"].get("kernel", 0) >= 1  # soak saw faults
+    # No hung workers, nothing stranded in the queue.
+    assert svc._workers == [] and len(svc._queue) == 0
+    assert results, "soak must complete some queries"
+    # Every success is row-exact against the NumPy oracle — retried,
+    # degraded or reference-path executions included.
+    for q, out in results:
+        oracle = join_variant_oracle(q.build, q.probe, q.kind)
+        assert np.array_equal(_rows(out.result), oracle)
+    # Breakers are either closed or opened *with* their state on record.
+    for b in st["resilience"]["breakers"].values():
+        assert b["state"] in ("closed", "open", "half_open")
